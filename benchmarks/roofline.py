@@ -1,0 +1,104 @@
+"""Roofline analysis from dry-run records (EXPERIMENTS.md §Roofline).
+
+Per (arch x shape x mesh) computes the three terms (seconds/step/device):
+
+    compute    = HLO_FLOPs_adj / peak_FLOPs            (197 TF bf16, v5e)
+    memory     = HLO_bytes_adj / HBM_bw                (819 GB/s)
+    collective = collective_wire_bytes / ICI_bw        (~50 GB/s/link)
+
+cost_analysis FLOPs/bytes count per-DEVICE program work with while bodies
+counted once; records carry loop_multiplier and flops_adjusted. bytes are
+adjusted by the same multiplier. The bf16->f32 float-normalization of the
+CPU host backend inflates bytes ~<=2x (DESIGN.md §9); we report raw values
+and note the corrected interpretation inline.
+
+Usage: PYTHONPATH=src python -m benchmarks.roofline [dryrun_results.jsonl]
+       [--csv] [--md]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+PEAK_FLOPS = 197e12  # bf16 per chip
+HBM_BW = 819e9  # B/s
+ICI_BW = 50e9  # B/s per link
+
+FAMILY = {
+    "gemma2-2b": "lm", "internlm2-20b": "lm", "gemma3-27b": "lm",
+    "mixtral-8x7b": "lm", "grok-1-314b": "lm",
+    "graphcast": "gnn", "gatedgcn": "gnn", "equiformer-v2": "gnn",
+    "nequip": "gnn", "fm": "recsys",
+}
+
+
+def load(path: str) -> list[dict]:
+    recs = {}
+    with open(path) as f:
+        for line in f:
+            r = json.loads(line)
+            recs[(r["arch"], r["shape"], r["mesh"])] = r  # keep latest
+    return list(recs.values())
+
+
+def terms(rec: dict) -> dict:
+    mult = rec.get("loop_multiplier", 1)
+    flops = rec.get("flops_adjusted") or rec.get("flops", 0.0) * mult
+    nbytes = rec.get("bytes_accessed", 0.0) * mult
+    coll = rec.get("collectives", {}).get("total_bytes", 0.0)
+    t_c = flops / PEAK_FLOPS
+    t_m = nbytes / HBM_BW
+    t_x = coll / ICI_BW
+    dom = max((t_c, "compute"), (t_m, "memory"), (t_x, "collective"))[1]
+    n_dev = rec.get("n_devices", 256)
+    model_flops = rec.get("model_flops", 0.0) / n_dev  # per device
+    useful = model_flops / flops if flops else 0.0
+    bound = max(t_c, t_m, t_x)
+    frac = t_c / bound if bound else 0.0  # fraction of roofline at bound
+    return dict(t_compute=t_c, t_memory=t_m, t_collective=t_x, dominant=dom,
+                useful_flops_ratio=useful, roofline_frac=frac,
+                peak_gib=rec.get("memory", {}).get("peak_bytes", 0) / 2**30)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("path", nargs="?", default="dryrun_results.jsonl")
+    ap.add_argument("--md", action="store_true")
+    ap.add_argument("--mesh", default=None, help="filter, e.g. 16x16")
+    args = ap.parse_args()
+    recs = load(args.path)
+    recs.sort(key=lambda r: (FAMILY.get(r["arch"], "z"), r["arch"],
+                             r["shape"], r["mesh"]))
+    sep = "|" if args.md else " "
+    hdr = ["arch", "shape", "mesh", "ok", "t_comp(ms)", "t_mem(ms)",
+           "t_coll(ms)", "dominant", "useful", "peak GiB"]
+    if args.md:
+        print("| " + " | ".join(hdr) + " |")
+        print("|" + "---|" * len(hdr))
+    else:
+        print(f"{hdr[0]:15s} {hdr[1]:14s} {hdr[2]:8s} {hdr[3]:3s} "
+              f"{hdr[4]:>10s} {hdr[5]:>10s} {hdr[6]:>10s} {hdr[7]:>10s} "
+              f"{hdr[8]:>7s} {hdr[9]:>9s}")
+    for r in recs:
+        if args.mesh and r["mesh"] != args.mesh:
+            continue
+        if not r.get("ok"):
+            row = [r["arch"], r["shape"], r["mesh"], "NO", "-", "-", "-",
+                   r.get("error", "?")[:40], "-", "-"]
+        else:
+            t = terms(r)
+            row = [r["arch"], r["shape"], r["mesh"], "ok",
+                   f"{t['t_compute']*1e3:.2f}", f"{t['t_memory']*1e3:.2f}",
+                   f"{t['t_collective']*1e3:.2f}", t["dominant"],
+                   f"{t['useful_flops_ratio']:.2f}", f"{t['peak_gib']:.1f}"]
+        if args.md:
+            print("| " + " | ".join(str(x) for x in row) + " |")
+        else:
+            print(f"{row[0]:15s} {row[1]:14s} {row[2]:8s} {row[3]:3s} "
+                  f"{row[4]:>10s} {row[5]:>10s} {row[6]:>10s} {row[7]:>10s} "
+                  f"{row[8]:>7s} {row[9]:>9s}")
+
+
+if __name__ == "__main__":
+    main()

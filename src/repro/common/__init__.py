@@ -1,0 +1,11 @@
+from repro.common.struct import pytree_dataclass, static_field, tree_size_bytes
+from repro.common.hashing import HashFamily, fastrange, hash_pair_mix
+
+__all__ = [
+    "pytree_dataclass",
+    "static_field",
+    "tree_size_bytes",
+    "HashFamily",
+    "fastrange",
+    "hash_pair_mix",
+]

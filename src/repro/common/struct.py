@@ -1,0 +1,83 @@
+"""Lightweight pytree dataclasses (no flax dependency).
+
+``@pytree_dataclass`` registers a frozen dataclass as a JAX pytree whose
+array-valued fields are children and whose ``static`` fields are part of the
+treedef (hashable aux data). This is the substrate every sketch / model /
+optimizer state in repro is built on.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, TypeVar
+
+import jax
+
+T = TypeVar("T")
+
+_STATIC_MARK = "__repro_static__"
+
+
+def static_field(**kwargs: Any) -> Any:
+    """A dataclass field stored in the treedef (must be hashable)."""
+    metadata = dict(kwargs.pop("metadata", {}) or {})
+    metadata[_STATIC_MARK] = True
+    return dataclasses.field(metadata=metadata, **kwargs)
+
+
+def pytree_dataclass(cls: type[T]) -> type[T]:
+    """Register ``cls`` (made into a frozen dataclass) as a pytree node."""
+    cls = dataclasses.dataclass(frozen=True)(cls)
+    fields = dataclasses.fields(cls)
+    data_names = tuple(
+        f.name for f in fields if not f.metadata.get(_STATIC_MARK, False)
+    )
+    static_names = tuple(
+        f.name for f in fields if f.metadata.get(_STATIC_MARK, False)
+    )
+
+    def flatten_with_keys(obj):
+        children = tuple(
+            (jax.tree_util.GetAttrKey(n), getattr(obj, n)) for n in data_names
+        )
+        aux = tuple(getattr(obj, n) for n in static_names)
+        return children, aux
+
+    def flatten(obj):
+        return tuple(getattr(obj, n) for n in data_names), tuple(
+            getattr(obj, n) for n in static_names
+        )
+
+    def unflatten(aux, children):
+        kwargs = dict(zip(data_names, children))
+        kwargs.update(dict(zip(static_names, aux)))
+        return cls(**kwargs)
+
+    jax.tree_util.register_pytree_with_keys(
+        cls, flatten_with_keys, unflatten, flatten_func=flatten
+    )
+
+    def replace(self: T, **updates: Any) -> T:
+        return dataclasses.replace(self, **updates)
+
+    cls.replace = replace  # type: ignore[attr-defined]
+    return cls
+
+
+def field_names(obj: Any) -> tuple[str, ...]:
+    return tuple(f.name for f in dataclasses.fields(obj))
+
+
+def tree_size_bytes(tree: Any) -> int:
+    """Total bytes of all array leaves in a pytree."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    total = 0
+    for leaf in leaves:
+        if hasattr(leaf, "nbytes"):
+            total += leaf.nbytes
+        elif hasattr(leaf, "size") and hasattr(leaf, "dtype"):
+            total += leaf.size * leaf.dtype.itemsize
+    return total
+
+
+def tree_map_with_path(fn: Callable, tree: Any) -> Any:
+    return jax.tree_util.tree_map_with_path(fn, tree)

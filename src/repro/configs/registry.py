@@ -1,0 +1,398 @@
+"""Architecture registry: every assigned arch as a selectable config, plus
+the cell builder the dry-run uses (step fn + input specs + shardings).
+
+Cells = (arch x applicable shape). Skips (DESIGN.md §Arch-applicability):
+  internlm2-20b, grok-1-314b: pure full attention -> long_500k skipped.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import lm as lm_configs
+from repro.configs.shapes import (
+    GNN_SHAPES,
+    LM_SHAPES,
+    RECSYS_SHAPES,
+    sampled_subgraph_sizes,
+)
+from repro.training.optimizer import AdamWConfig
+from repro.training.steps import TrainState, init_train_state, make_train_step
+
+
+@dataclasses.dataclass(frozen=True)
+class Arch:
+    name: str
+    family: str  # "lm" | "gnn" | "recsys"
+    config: Any
+    shape_names: tuple[str, ...]
+
+
+def _gnn_configs():
+    from repro.models.gnn.equiformer_v2 import EquiformerV2Config
+    from repro.models.gnn.gatedgcn import GatedGCNConfig
+    from repro.models.gnn.graphcast import GraphCastConfig
+    from repro.models.gnn.nequip import NequIPConfig
+
+    return {
+        "graphcast": GraphCastConfig(n_layers=16, d_hidden=512, n_vars=227,
+                                     remat=True, latent_dtype="bfloat16"),
+        "gatedgcn": GatedGCNConfig(n_layers=16, d_hidden=70, d_out=64, remat=True),
+        "equiformer-v2": EquiformerV2Config(
+            n_layers=12, d_hidden=128, l_max=6, m_max=2, n_heads=8, remat=True
+        ),
+        "nequip": NequIPConfig(
+            n_layers=5, d_hidden=32, l_max=2, n_rbf=8, cutoff=5.0, remat=True
+        ),
+    }
+
+
+def _fm_config():
+    from repro.models.recsys.fm import FMConfig
+
+    return FMConfig(n_fields=39, embed_dim=10, total_vocab=10_000_000)
+
+
+@functools.lru_cache(maxsize=1)
+def archs() -> dict[str, Arch]:
+    lm_shapes_full = tuple(LM_SHAPES)
+    lm_shapes_fullattn = ("train_4k", "prefill_32k", "decode_32k")  # skip 500k
+    gnn_shapes = tuple(GNN_SHAPES)
+    out: dict[str, Arch] = {}
+    for name, cfg in lm_configs.LM_CONFIGS.items():
+        shapes = lm_shapes_fullattn if cfg.is_pure_global else lm_shapes_full
+        out[name] = Arch(name, "lm", cfg, shapes)
+    for name, cfg in _gnn_configs().items():
+        out[name] = Arch(name, "gnn", cfg, gnn_shapes)
+    out["fm"] = Arch("fm", "recsys", _fm_config(), tuple(RECSYS_SHAPES))
+    return out
+
+
+def all_cells() -> list[tuple[str, str]]:
+    return [(a.name, s) for a in archs().values() for s in a.shape_names]
+
+
+# ------------------------------------------------------------ cell build --
+
+@dataclasses.dataclass
+class Cell:
+    """Everything the dry-run needs for one (arch, shape)."""
+
+    arch: str
+    shape: str
+    step_fn: Callable  # (state..., inputs...) per family
+    arg_shapes: tuple  # ShapeDtypeStructs matching step_fn args
+    in_specs: tuple
+    out_specs: Any
+    model_flops_per_step: float  # 6*N*D (dense) / 6*N_active*D (MoE)
+    donate: tuple = ()  # arg indices donated (train state / KV cache alias)
+
+
+def _lm_opt_cfg() -> AdamWConfig:
+    return AdamWConfig(lr_peak=3e-4, warmup_steps=200, total_steps=10_000,
+                       moment_dtype="bfloat16")
+
+
+def build_lm_cell(arch: Arch, shape_name: str, mesh) -> Cell:
+    from repro.launch.shardings import (
+        lm_batch_specs,
+        lm_cache_specs,
+        lm_param_specs,
+        opt_state_specs,
+    )
+    from repro.models.transformer import model as tmodel
+
+    cfg = arch.config
+    shape = LM_SHAPES[shape_name]
+    from repro.launch.mesh import dp_axes
+
+    if shape.kind == "train":
+        # sequence-parallel saved activations (§Perf iteration 4) +
+        # shard-local MoE dispatch groups (§Perf iteration 6)
+        dp = tuple(dp_axes(mesh))
+        dp_ways = int(np.prod([mesh.shape[a] for a in dp]))
+        cfg = dataclasses.replace(
+            cfg, seq_parallel=dp, zero3_gather=True,
+            moe_groups=dp_ways if arch.config.is_moe else 1)
+    else:
+        # serve cells: ZeRO-3 storage + gather-at-use; MoE dispatch still
+        # needs shard-local groups (prefill routes B*S tokens!). Setting
+        # seq_parallel only feeds group_axes/embed-bwd here — the prefill/
+        # decode bodies never apply the train-side carry constraint.
+        dp = tuple(dp_axes(mesh))
+        dp_ways = int(np.prod([mesh.shape[a] for a in dp]))
+        cfg = dataclasses.replace(
+            cfg, zero3_gather=True,
+            seq_parallel=dp if arch.config.is_moe else None,
+            moe_groups=dp_ways if arch.config.is_moe else 1)
+    b, s = shape.global_batch, shape.seq_len
+    params_shape = jax.eval_shape(
+        lambda: tmodel.init_params(cfg, jax.random.PRNGKey(0))
+    )
+    p_specs = lm_param_specs(params_shape, mesh)
+
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        opt_cfg = _lm_opt_cfg()
+        state_shape = jax.eval_shape(
+            lambda: init_train_state(
+                jax.tree.map(lambda x: jnp.zeros(x.shape, x.dtype), params_shape),
+                opt_cfg,
+            )
+        )
+        state_specs = TrainState(params=p_specs, opt=opt_state_specs(p_specs))
+        batch_shape = {
+            "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        }
+        from repro.training.steps import lm_loss_fn
+
+        # accum=1: microbatching measured NO peak reduction here (§Perf
+        # iteration 3, refuted — peak is carry-stack-bound, not per-pass);
+        # seq_parallel is the lever that works.
+        step = make_train_step(lm_loss_fn(cfg), opt_cfg, accum_steps=1)
+        flops = 6.0 * n_active * b * s  # fwd+bwd per step
+        return Cell(arch.name, shape_name, step, (state_shape, batch_shape),
+                    (state_specs, lm_batch_specs(mesh)),
+                    (state_specs, None),  # pin state out-shardings: without
+                    # this XLA may choose replicated optimizer updates for
+                    # big embeddings (measured 6x 5.25 GiB f32) and donation
+                    # silently fails
+                    flops, donate=(0,))
+
+    cache_shape = jax.eval_shape(
+        lambda: tmodel.init_cache(cfg, b, s, dtype=jnp.bfloat16)
+    )
+    c_specs = lm_cache_specs(cache_shape, mesh, batch=b, kind=shape.kind)
+    from repro.launch.mesh import dp_axes
+
+    dp = dp_axes(mesh) if b > 1 else ()
+    if shape.kind == "prefill":
+        tokens = jax.ShapeDtypeStruct((b, s), jnp.int32)
+
+        def step(params, toks, cache):
+            return tmodel.prefill(cfg, params, toks, cache)
+
+        flops = 2.0 * n_active * b * s
+        return Cell(arch.name, shape_name, step,
+                    (params_shape, tokens, cache_shape),
+                    (p_specs, P(dp, None), c_specs),
+                    (None, c_specs),  # pin cache out-sharding (donation)
+                    flops, donate=(2,))
+
+    # decode: one new token against a cache of length s
+    tokens = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+
+    def step(params, toks, cache):
+        return tmodel.decode_step(cfg, params, toks, cache)
+
+    flops = 2.0 * n_active * b  # per generated token
+    return Cell(arch.name, shape_name, step,
+                (params_shape, tokens, cache_shape),
+                (p_specs, P(dp, None), c_specs),
+                (None, c_specs),  # pin cache out-sharding (donation)
+                flops, donate=(2,))
+
+
+def _gnn_forward_and_loss(arch: Arch):
+    from repro.models.gnn import equiformer_v2, gatedgcn, graphcast, nequip
+    from repro.training import steps as tsteps
+
+    cfg = arch.config
+    if arch.name == "gatedgcn":
+        return gatedgcn, tsteps.gnn_node_class_loss_fn(cfg, gatedgcn.forward, cfg.d_out)
+    if arch.name == "graphcast":
+        def loss_fn(params, batch):
+            g = batch["graph"]
+            pred = graphcast.forward(cfg, params, g)
+            loss = jnp.mean((pred - batch["target"]) ** 2)
+            return loss, {"mse": loss}
+        return graphcast, loss_fn
+    if arch.name == "nequip":
+        def loss_fn(params, batch):
+            g = batch["graph"]
+            e = nequip.energy(cfg, params, g, g.positions)
+            loss = jnp.mean((e - batch["energy"]) ** 2)
+            return loss, {"e_mse": loss}
+        return nequip, loss_fn
+    if arch.name == "equiformer-v2":
+        def loss_fn(params, batch):
+            g = batch["graph"]
+            e = equiformer_v2.forward(cfg, params, g)
+            loss = jnp.mean((e - batch["energy"]) ** 2)
+            return loss, {"e_mse": loss}
+        return equiformer_v2, loss_fn
+    raise KeyError(arch.name)
+
+
+def _gnn_graph_shape(arch: Arch, shape_name: str):
+    """ShapeDtypeStruct GraphBatch for a GNN shape."""
+    from repro.models.gnn.graph import GraphBatch
+
+    shape = GNN_SHAPES[shape_name]
+    if shape.kind == "sampled":
+        n, e = sampled_subgraph_sizes(shape)
+        n_graphs = 1
+    elif shape.kind == "batched":
+        n = shape.n_nodes * shape.batch_graphs
+        e = shape.n_edges * shape.batch_graphs
+        n_graphs = shape.batch_graphs
+    else:
+        n, e = shape.n_nodes, shape.n_edges
+        n_graphs = 1
+    # pad node/edge counts to multiples of 512 so they shard on any mesh
+    # (masks zero the padding; segment ops ignore it)
+    n = -(-n // 512) * 512
+    e = -(-e // 512) * 512
+    d_feat = shape.d_feat
+    f32 = jnp.float32
+    return GraphBatch(
+        node_feat=jax.ShapeDtypeStruct((n, d_feat), f32),
+        edge_src=jax.ShapeDtypeStruct((e,), jnp.int32),
+        edge_dst=jax.ShapeDtypeStruct((e,), jnp.int32),
+        edge_feat=jax.ShapeDtypeStruct((e, 8), f32),
+        positions=jax.ShapeDtypeStruct((n, 3), f32),
+        node_mask=jax.ShapeDtypeStruct((n,), f32),
+        edge_mask=jax.ShapeDtypeStruct((e,), f32),
+        graph_id=jax.ShapeDtypeStruct((n,), jnp.int32),
+        n_graphs=n_graphs,
+    ), n, e
+
+
+def build_gnn_cell(arch: Arch, shape_name: str, mesh) -> Cell:
+    from repro.launch.shardings import (
+        gnn_graph_specs,
+        gnn_param_specs,
+        opt_state_specs,
+    )
+
+    cfg = arch.config
+    g_shape, n, e = _gnn_graph_shape(arch, shape_name)
+    shape = GNN_SHAPES[shape_name]
+    module, loss_fn = _gnn_forward_and_loss(arch)
+
+    d_in = shape.d_feat
+    if arch.name == "graphcast":
+        d_in = cfg.n_vars
+        g_shape = g_shape.replace(
+            node_feat=jax.ShapeDtypeStruct((n, cfg.n_vars), jnp.float32)
+        )
+        init = lambda: module.init_params(cfg, jax.random.PRNGKey(0))
+    else:
+        init = lambda: module.init_params(cfg, jax.random.PRNGKey(0), d_in)
+
+    params_shape = jax.eval_shape(init)
+    p_specs = gnn_param_specs(params_shape)
+    opt_cfg = AdamWConfig(lr_peak=1e-3, warmup_steps=100, total_steps=5000)
+    state_shape = jax.eval_shape(
+        lambda: init_train_state(
+            jax.tree.map(lambda x: jnp.zeros(x.shape, x.dtype), params_shape),
+            opt_cfg,
+        )
+    )
+    state_specs = TrainState(params=p_specs, opt=opt_state_specs(p_specs))
+
+    batch_shape: dict[str, Any] = {"graph": g_shape}
+    g_specs = gnn_graph_specs(mesh, n_graphs=g_shape.n_graphs)
+    batch_specs: dict[str, Any] = {"graph": g_specs}
+    ax = tuple(mesh.axis_names)
+    if arch.name == "gatedgcn":
+        batch_shape["labels"] = jax.ShapeDtypeStruct((n,), jnp.int32)
+        batch_specs["labels"] = P(ax)
+    elif arch.name == "graphcast":
+        batch_shape["target"] = jax.ShapeDtypeStruct((n, cfg.n_vars), jnp.float32)
+        batch_specs["target"] = P(ax, None)
+    else:
+        ng = g_shape.n_graphs
+        batch_shape["energy"] = jax.ShapeDtypeStruct((ng,), jnp.float32)
+        batch_specs["energy"] = P()
+
+    step = make_train_step(loss_fn, opt_cfg)
+    # FLOPs estimate for GNNs: dominated by per-edge work; report param-based
+    # proxy 6 * params * nodes (documented in EXPERIMENTS.md §Roofline).
+    from repro.models.common import count_params
+
+    n_params = sum(
+        int(np.prod(l.shape)) for l in jax.tree_util.tree_leaves(params_shape)
+    )
+    flops = 6.0 * n_params * n
+    return Cell(arch.name, shape_name, step, (state_shape, batch_shape),
+                (state_specs, batch_specs), (state_specs, None), flops,
+                donate=(0,))
+
+
+def build_fm_cell(arch: Arch, shape_name: str, mesh) -> Cell:
+    from repro.launch.mesh import dp_axes
+    from repro.launch.shardings import fm_batch_specs, fm_param_specs, opt_state_specs
+    from repro.models.recsys import fm as fm_mod
+
+    cfg = arch.config
+    shape = RECSYS_SHAPES[shape_name]
+    params_shape = jax.eval_shape(lambda: fm_mod.init_params(cfg, jax.random.PRNGKey(0)))
+    p_specs = fm_param_specs(params_shape, mesh)
+    dp = dp_axes(mesh)
+    n_params = sum(
+        int(np.prod(l.shape)) for l in jax.tree_util.tree_leaves(params_shape)
+    )
+
+    if shape.kind == "train":
+        opt_cfg = AdamWConfig(lr_peak=1e-3, warmup_steps=100, total_steps=5000)
+        state_shape = jax.eval_shape(
+            lambda: init_train_state(
+                jax.tree.map(lambda x: jnp.zeros(x.shape, x.dtype), params_shape),
+                opt_cfg,
+            )
+        )
+        from repro.training.steps import fm_loss_fn
+
+        state_specs = TrainState(params=p_specs, opt=opt_state_specs(p_specs))
+        batch_shape = {
+            "ids": jax.ShapeDtypeStruct((shape.batch, cfg.n_fields), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((shape.batch,), jnp.float32),
+        }
+        step = make_train_step(fm_loss_fn(cfg), opt_cfg)
+        # FM step FLOPs ~ 3 passes * 2 * B * F * k (interaction) — tiny vs gather
+        flops = 6.0 * shape.batch * cfg.n_fields * cfg.embed_dim
+        return Cell(arch.name, shape_name, step, (state_shape, batch_shape),
+                    (state_specs, fm_batch_specs(mesh)), (state_specs, None),
+                    flops, donate=(0,))
+
+    if shape.kind == "serve":
+        ids = jax.ShapeDtypeStruct((shape.batch, cfg.n_fields), jnp.int32)
+
+        def step(params, ids_):
+            return fm_mod.forward(cfg, params, ids_)
+
+        flops = 2.0 * shape.batch * cfg.n_fields * cfg.embed_dim
+        return Cell(arch.name, shape_name, step, (params_shape, ids),
+                    (p_specs, P(dp, None)), None, flops)
+
+    # retrieval: 1 query x n_candidates (candidates over DP axes only:
+    # 1e6 isn't divisible by 256/512, but is by 16/32)
+    q = jax.ShapeDtypeStruct((cfg.n_fields,), jnp.int32)
+    cands = jax.ShapeDtypeStruct((shape.n_candidates, cfg.n_fields), jnp.int32)
+
+    def step(params, q_, cands_):
+        return fm_mod.retrieval_scores(cfg, params, q_, cands_)
+
+    flops = 2.0 * shape.n_candidates * cfg.n_fields * cfg.embed_dim
+    return Cell(arch.name, shape_name, step, (params_shape, q, cands),
+                (p_specs, P(), P(dp, None)), None, flops)
+
+
+def build_cell(arch_name: str, shape_name: str, mesh) -> Cell:
+    arch = archs()[arch_name]
+    if shape_name not in arch.shape_names:
+        raise ValueError(f"{arch_name} does not run shape {shape_name} "
+                         f"(see DESIGN.md §Arch-applicability)")
+    if arch.family == "lm":
+        return build_lm_cell(arch, shape_name, mesh)
+    if arch.family == "gnn":
+        return build_gnn_cell(arch, shape_name, mesh)
+    return build_fm_cell(arch, shape_name, mesh)

@@ -1,0 +1,32 @@
+"""repro.core — the paper's contribution: streaming-graph sketches.
+
+Sketch zoo (paper §III + §IV):
+  CountMin  (Type I,  global)      repro.core.countmin
+  gSketch   (Type I,  partitioned) repro.core.gsketch
+  TCM       (Type II, global)      repro.core.matrix_sketch (kind="tcm")
+  gMatrix   (Type II, global)      repro.core.matrix_sketch (kind="gmatrix")
+  kMatrix   (Type II, partitioned) repro.core.kmatrix        <- contribution
+
+All sketches share: batched EdgeBatch ingest (fused hash + scatter-add),
+additive merge (enables data-parallel / fault-tolerant operation), and a
+uniform query surface in repro.core.queries.
+"""
+from repro.core.types import EdgeBatch, VertexStats, vertex_stats_from_sample
+from repro.core.countmin import CountMin
+from repro.core.gsketch import GSketch
+from repro.core.matrix_sketch import MatrixSketch
+from repro.core.kmatrix import KMatrix
+from repro.core.partitioning import PartitionPlan, plan_partitions, total_expected_error
+
+__all__ = [
+    "EdgeBatch",
+    "VertexStats",
+    "vertex_stats_from_sample",
+    "CountMin",
+    "GSketch",
+    "MatrixSketch",
+    "KMatrix",
+    "PartitionPlan",
+    "plan_partitions",
+    "total_expected_error",
+]

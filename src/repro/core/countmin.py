@@ -1,0 +1,61 @@
+"""CountMin sketch (Cormode & Muthukrishnan) — paper §III-A, Type I baseline.
+
+A ``(d, w)`` counter table; every edge is reduced to a single 32-bit key and
+hashed into each row by an independent 2-universal function.  Updates are
+batched: an ``EdgeBatch`` of B edges becomes one fused hash + scatter-add.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.hashing import HashFamily, fastrange, hash_pair_mix
+from repro.common.struct import pytree_dataclass, static_field
+from repro.core.types import EdgeBatch
+
+
+@pytree_dataclass
+class CountMin:
+    table: jax.Array  # int32[d, w]
+    hashes: HashFamily
+    w: int = static_field()
+
+    @property
+    def depth(self) -> int:
+        return self.table.shape[0]
+
+    @property
+    def num_counters(self) -> int:
+        return self.table.size
+
+    @staticmethod
+    def create(*, bytes_budget: int, depth: int = 7, seed: int = 0) -> "CountMin":
+        counters = bytes_budget // 4
+        w = max(counters // depth, 1)
+        return CountMin(
+            table=jnp.zeros((depth, w), dtype=jnp.int32),
+            hashes=HashFamily.create(seed, depth),
+            w=w,
+        )
+
+
+def _edge_cells(sk: CountMin, src: jax.Array, dst: jax.Array) -> jax.Array:
+    key = hash_pair_mix(src, dst)
+    return fastrange(sk.hashes.mix(key), sk.w)  # int32[d, B]
+
+
+def ingest(sk: CountMin, batch: EdgeBatch) -> CountMin:
+    idx = _edge_cells(sk, batch.src, batch.dst)  # [d, B]
+    d = sk.depth
+    rows = jnp.arange(d, dtype=jnp.int32)[:, None]
+    table = sk.table.at[rows, idx].add(batch.weight[None, :].astype(sk.table.dtype))
+    return sk.replace(table=table)
+
+
+def edge_freq(sk: CountMin, src: jax.Array, dst: jax.Array) -> jax.Array:
+    """Point query: estimated frequency of each edge. Shape-preserving."""
+    idx = _edge_cells(sk, src, dst)  # [d, *S]
+    d = sk.depth
+    rows = jnp.arange(d, dtype=jnp.int32).reshape((d,) + (1,) * src.ndim)
+    vals = sk.table[rows, idx]
+    return jnp.min(vals, axis=0)

@@ -1,0 +1,101 @@
+"""gSketch (Zhao, Aggarwal & Wang) — paper §III-B, Type I partitioned baseline.
+
+A CountMin whose width budget is carved into per-partition segments by the
+sample-driven partitioner; an edge ``(i, j)`` is routed to the partition of
+its source vertex ``i`` and hashed within that partition's local width.
+Unseen vertices go to the outlier partition.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.hashing import HashFamily, fastrange, hash_pair_mix
+from repro.common.struct import pytree_dataclass, static_field
+from repro.core.partitioning import plan_partitions
+from repro.core.routing import RouteTable, route_table_from_plan
+from repro.core.types import EdgeBatch, VertexStats
+
+
+@pytree_dataclass
+class GSketch:
+    pool: jax.Array  # int32[d, pool_size] concatenated partition rows
+    hashes: HashFamily
+    route: RouteTable
+    pool_size: int = static_field()
+
+    @property
+    def depth(self) -> int:
+        return self.pool.shape[0]
+
+    @property
+    def num_counters(self) -> int:
+        return self.pool.size
+
+    @staticmethod
+    def create(
+        *,
+        bytes_budget: int,
+        stats: VertexStats,
+        depth: int = 7,
+        seed: int = 0,
+        max_partitions: int = 64,
+        min_width: int = 64,
+        outlier_frac: float | None = None,
+        partitioner: str = "greedy",
+        n_bands: int = 16,
+    ) -> "GSketch":
+        counters = bytes_budget // 4
+        total_width = max(counters // depth, 1)
+        if partitioner == "greedy":
+            plan = plan_partitions(
+                stats,
+                total_width,
+                square=False,
+                max_partitions=max_partitions,
+                min_width=min_width,
+                outlier_frac=outlier_frac,
+            )
+        elif partitioner == "banded":
+            from repro.core.partitioning import plan_partitions_banded
+
+            plan = plan_partitions_banded(
+                stats,
+                total_width,
+                square=False,
+                n_bands=n_bands,
+                min_width=min_width,
+                outlier_frac=outlier_frac,
+            )
+        else:
+            raise ValueError(f"unknown partitioner {partitioner!r}")
+        route, pool_size = route_table_from_plan(plan, square=False)
+        return GSketch(
+            pool=jnp.zeros((depth, pool_size), dtype=jnp.int32),
+            hashes=HashFamily.create(seed, depth),
+            route=route,
+            pool_size=pool_size,
+        )
+
+
+def _edge_cells(sk: GSketch, src: jax.Array, dst: jax.Array) -> jax.Array:
+    p = sk.route.lookup(src)  # [*S]
+    w = sk.route.widths[p]
+    off = sk.route.offsets[p]
+    key = hash_pair_mix(src, dst)
+    local = fastrange(sk.hashes.mix(key), w)  # [d, *S] (w broadcasts)
+    return off[None] + local
+
+
+def ingest(sk: GSketch, batch: EdgeBatch) -> GSketch:
+    idx = _edge_cells(sk, batch.src, batch.dst)  # [d, B]
+    rows = jnp.arange(sk.depth, dtype=jnp.int32)[:, None]
+    pool = sk.pool.at[rows, idx].add(batch.weight[None, :].astype(sk.pool.dtype))
+    return sk.replace(pool=pool)
+
+
+def edge_freq(sk: GSketch, src: jax.Array, dst: jax.Array) -> jax.Array:
+    idx = _edge_cells(sk, src, dst)
+    rows = jnp.arange(sk.depth, dtype=jnp.int32).reshape((sk.depth,) + (1,) * src.ndim)
+    return jnp.min(sk.pool[rows, idx], axis=0)

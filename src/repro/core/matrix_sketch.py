@@ -1,0 +1,88 @@
+"""TCM / gMatrix — paper §III-C/D, the Type II global-sketch baselines.
+
+Both store ``d`` layers of ``w x w`` counter matrices; an edge ``(i, j)`` is
+hashed to cell ``(h_r(i), h_r(j))`` in layer ``r``.  TCM as published uses
+arbitrary hash functions; gMatrix requires *pairwise independent* ones (which
+is what `HashFamily` provides — so our TCM is, if anything, slightly stronger
+than the paper's).  The distinction we preserve is the query surface: gMatrix
+additionally answers reverse (heavy-hitter) queries, implemented in
+``repro.core.queries`` as vectorized universe sweeps.
+
+The locality property (same hash for rows and columns per layer) is what
+enables node-level and connectivity queries, which plain CountMin cannot do.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.hashing import HashFamily, fastrange
+from repro.common.struct import pytree_dataclass, static_field
+from repro.core.types import EdgeBatch
+
+
+@pytree_dataclass
+class MatrixSketch:
+    table: jax.Array  # int32[d, w, w]
+    hashes: HashFamily
+    w: int = static_field()
+    kind: str = static_field(default="gmatrix")  # "tcm" | "gmatrix"
+
+    @property
+    def depth(self) -> int:
+        return self.table.shape[0]
+
+    @property
+    def num_counters(self) -> int:
+        return self.table.size
+
+    @staticmethod
+    def create(
+        *, bytes_budget: int, depth: int = 7, seed: int = 0, kind: str = "gmatrix"
+    ) -> "MatrixSketch":
+        counters = bytes_budget // 4
+        w = max(int((counters // depth) ** 0.5), 2)
+        return MatrixSketch(
+            table=jnp.zeros((depth, w, w), dtype=jnp.int32),
+            hashes=HashFamily.create(seed, depth),
+            w=w,
+            kind=kind,
+        )
+
+
+def node_cells(sk: MatrixSketch, v: jax.Array) -> jax.Array:
+    """Per-layer hash slot of vertex ``v`` -> int32[d, *S]."""
+    return fastrange(sk.hashes.mix(v), sk.w)
+
+
+def ingest(sk: MatrixSketch, batch: EdgeBatch) -> MatrixSketch:
+    hi = node_cells(sk, batch.src)  # [d, B]
+    hj = node_cells(sk, batch.dst)  # [d, B]
+    rows = jnp.arange(sk.depth, dtype=jnp.int32)[:, None]
+    table = sk.table.at[rows, hi, hj].add(batch.weight[None, :].astype(sk.table.dtype))
+    return sk.replace(table=table)
+
+
+def edge_freq(sk: MatrixSketch, src: jax.Array, dst: jax.Array) -> jax.Array:
+    hi = node_cells(sk, src)
+    hj = node_cells(sk, dst)
+    rows = jnp.arange(sk.depth, dtype=jnp.int32).reshape((sk.depth,) + (1,) * src.ndim)
+    return jnp.min(sk.table[rows, hi, hj], axis=0)
+
+
+def node_out_freq(sk: MatrixSketch, v: jax.Array) -> jax.Array:
+    """Aggregate out-weight of vertex ``v``: min over layers of its row sum."""
+    hv = node_cells(sk, v)  # [d, *S]
+    rows = jnp.arange(sk.depth, dtype=jnp.int32).reshape((sk.depth,) + (1,) * v.ndim)
+    sums = jnp.sum(sk.table[rows, hv, :], axis=-1)  # [d, *S]
+    return jnp.min(sums, axis=0)
+
+
+def node_in_freq(sk: MatrixSketch, v: jax.Array) -> jax.Array:
+    hv = node_cells(sk, v)
+    rows = jnp.arange(sk.depth, dtype=jnp.int32).reshape((sk.depth,) + (1,) * v.ndim)
+    # Advanced indices (rows, hv) around the middle slice put the broadcast
+    # dims in front: gathered shape is [d, *S, w]; reduce the trailing w.
+    gathered = sk.table[rows, :, hv]
+    sums = jnp.sum(gathered, axis=-1)
+    return jnp.min(sums, axis=0)

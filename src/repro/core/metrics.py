@@ -1,0 +1,54 @@
+"""Evaluation metrics from paper §V-C: ARE (Eq. 9-10), NEQ/PEQ (Eq. 11-12)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def relative_error(est: jax.Array, true: jax.Array) -> jax.Array:
+    """Per-query relative error  er(Q) = est/true - 1   (Eq. 9)."""
+    true = jnp.maximum(true.astype(jnp.float32), 1e-9)
+    return est.astype(jnp.float32) / true - 1.0
+
+
+def average_relative_error(est: jax.Array, true: jax.Array,
+                           valid: jax.Array | None = None) -> jax.Array:
+    """ARE over a query set (Eq. 10). ``valid`` masks padding queries."""
+    er = relative_error(est, true)
+    if valid is None:
+        return jnp.mean(er)
+    valid = valid.astype(jnp.float32)
+    return jnp.sum(er * valid) / jnp.maximum(jnp.sum(valid), 1.0)
+
+
+def effective_queries(est: jax.Array, true: jax.Array, g0: float,
+                      valid: jax.Array | None = None) -> jax.Array:
+    """NEQ (Eq. 11): #queries with |est - true| <= G0."""
+    ok = jnp.abs(est.astype(jnp.float32) - true.astype(jnp.float32)) <= g0
+    if valid is not None:
+        ok = ok & valid
+    return jnp.sum(ok.astype(jnp.int32))
+
+
+def percent_effective_queries(est: jax.Array, true: jax.Array, g0: float,
+                              valid: jax.Array | None = None) -> jax.Array:
+    """PEQ (Eq. 12)."""
+    n = est.shape[0] if valid is None else jnp.maximum(jnp.sum(valid), 1)
+    return effective_queries(est, true, g0, valid) * 100.0 / n
+
+
+def exact_edge_frequencies(src: np.ndarray, dst: np.ndarray,
+                           weight: np.ndarray | None = None) -> dict:
+    """Host-side ground-truth frequency map for benchmark oracles."""
+    if weight is None:
+        weight = np.ones_like(src, dtype=np.int64)
+    keys = src.astype(np.int64) << 32 | dst.astype(np.uint32)
+    uniq, inv = np.unique(keys, return_inverse=True)
+    sums = np.bincount(inv, weights=weight.astype(np.float64))
+    return {int(k): float(v) for k, v in zip(uniq, sums)}
+
+
+def lookup_exact(freq_map: dict, src: np.ndarray, dst: np.ndarray) -> np.ndarray:
+    keys = src.astype(np.int64) << 32 | dst.astype(np.uint32)
+    return np.asarray([freq_map.get(int(k), 0.0) for k in keys], dtype=np.float64)

@@ -1,0 +1,124 @@
+"""Type II query surface on matrix sketches (TCM / gMatrix / kMatrix).
+
+Implements the query families from the TCM/gMatrix papers that the kMatrix
+paper claims compatibility with:
+
+  * edge frequency              (per-sketch ``edge_freq``)
+  * node out/in aggregate       (row/col sums)
+  * reachability                boolean transitive closure per layer; a pair
+                                is declared reachable only if EVERY layer
+                                agrees (one-sided error, like CountMin).
+  * heavy nodes / heavy edges   vectorized "reverse" universe sweeps — the
+                                gMatrix pairwise-independent hashing makes a
+                                candidate scan sound; we batch it so scoring
+                                a 1M-vertex universe is a few fused gathers.
+  * path / subgraph weight      composition of edge queries.
+
+The closure uses O(log w) boolean matrix squarings; squarings are float32
+matmuls (MXU-friendly on TPU) thresholded back to {0,1}.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.hashing import fastrange
+from repro.core import kmatrix as km
+from repro.core import matrix_sketch as ms
+
+
+def _bool_closure(adj: jax.Array, max_hops: int | None = None) -> jax.Array:
+    """Reflexive-transitive closure of a boolean adjacency matrix [w, w]."""
+    w = adj.shape[-1]
+    reach = (adj | jnp.eye(w, dtype=bool)).astype(jnp.float32)
+    n_squarings = max(1, (w - 1).bit_length()) if max_hops is None else max(
+        1, (max_hops).bit_length()
+    )
+
+    def body(_, r):
+        return jnp.minimum(r @ r, 1.0)
+
+    reach = jax.lax.fori_loop(0, n_squarings, body, reach)
+    return reach > 0.5
+
+
+def reachability(sk: ms.MatrixSketch, src: jax.Array, dst: jax.Array,
+                 max_hops: int | None = None) -> jax.Array:
+    """Estimated reachability src ->* dst. True may be a false positive
+    (hash collisions merge nodes) but never a false negative."""
+    closure = jax.vmap(lambda a: _bool_closure(a > 0, max_hops))(sk.table)  # [d,w,w]
+    hi = ms.node_cells(sk, src)  # [d, *S]
+    hj = ms.node_cells(sk, dst)
+    rows = jnp.arange(sk.depth, dtype=jnp.int32).reshape((sk.depth,) + (1,) * src.ndim)
+    per_layer = closure[rows, hi, hj]
+    return jnp.all(per_layer, axis=0)
+
+
+def kmatrix_reachability(sk: km.KMatrix, src: jax.Array, dst: jax.Array,
+                         max_hops: int | None = None) -> jax.Array:
+    """Reachability on kMatrix via its global connectivity matrix."""
+    assert sk.conn_w > 0, "kMatrix built with conn_frac=0 cannot answer reachability"
+    closure = jax.vmap(lambda a: _bool_closure(a > 0, max_hops))(sk.conn)
+    hi = fastrange(sk.hashes.mix(src), sk.conn_w)
+    hj = fastrange(sk.hashes.mix(dst), sk.conn_w)
+    rows = jnp.arange(sk.depth, dtype=jnp.int32).reshape((sk.depth,) + (1,) * src.ndim)
+    return jnp.all(closure[rows, hi, hj], axis=0)
+
+
+def heavy_nodes(
+    node_freq_fn: Callable[[jax.Array], jax.Array],
+    universe_size: int,
+    threshold: float,
+    *,
+    chunk: int = 65536,
+) -> tuple[jax.Array, jax.Array]:
+    """Reverse sweep: score every vertex id in [0, universe) and return
+    (ids, freqs) of those with estimated aggregate >= threshold.
+
+    Returns dense arrays of length ``universe_size`` rounded up to ``chunk``
+    with -1 ids on misses (static shapes; callers filter host-side).
+    """
+    n_chunks = -(-universe_size // chunk)
+    padded = n_chunks * chunk
+
+    def score(block_start):
+        ids = block_start + jnp.arange(chunk, dtype=jnp.int32)
+        freqs = node_freq_fn(ids)
+        valid = (ids < universe_size) & (freqs >= threshold)
+        return jnp.where(valid, ids, -1), jnp.where(valid, freqs, 0)
+
+    starts = jnp.arange(n_chunks, dtype=jnp.int32) * chunk
+    ids, freqs = jax.lax.map(score, starts)
+    return ids.reshape(padded), freqs.reshape(padded)
+
+
+def heavy_edges(
+    edge_freq_fn: Callable[[jax.Array, jax.Array], jax.Array],
+    cand_src: jax.Array,
+    cand_dst: jax.Array,
+    threshold: float,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Candidate-set heavy-edge query: mask + estimates for given pairs."""
+    est = edge_freq_fn(cand_src, cand_dst)
+    keep = est >= threshold
+    return keep, est, jnp.where(keep, est, 0)
+
+
+def path_weight(
+    edge_freq_fn: Callable[[jax.Array, jax.Array], jax.Array],
+    path_nodes: jax.Array,
+) -> jax.Array:
+    """Aggregate (sum of estimated frequencies) along a node path [k]."""
+    return jnp.sum(edge_freq_fn(path_nodes[:-1], path_nodes[1:]))
+
+
+def subgraph_weight(
+    edge_freq_fn: Callable[[jax.Array, jax.Array], jax.Array],
+    src: jax.Array,
+    dst: jax.Array,
+) -> jax.Array:
+    """Total estimated weight of an explicit edge set."""
+    return jnp.sum(edge_freq_fn(src, dst))

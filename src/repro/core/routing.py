@@ -1,0 +1,62 @@
+"""Vertex -> partition routing shared by gSketch and kMatrix.
+
+The partition plan is host-side (numpy); at stream time routing is a binary
+search over the sorted sampled-vertex table (``jnp.searchsorted``), falling
+back to the outlier partition for unseen vertices.  This is the "separate
+data structure to track the vertices belonging to different localized
+partitions" from paper §IV-A.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.struct import pytree_dataclass, static_field
+from repro.core.partitioning import PartitionPlan
+
+
+@pytree_dataclass
+class RouteTable:
+    keys: jax.Array  # int32[n] sorted sampled vertex ids
+    part: jax.Array  # int32[n] partition index per key
+    offsets: jax.Array  # int32[P] slab offset per partition
+    widths: jax.Array  # int32[P] hash width per partition
+    outlier: int = static_field()
+    n_partitions: int = static_field()
+    max_width: int = static_field()
+
+    @property
+    def routed_bytes(self) -> int:
+        return int(self.keys.size + self.part.size) * 4
+
+    def lookup(self, v: jax.Array) -> jax.Array:
+        """Partition id for each vertex in ``v`` (any shape)."""
+        if self.keys.shape[0] == 0:
+            return jnp.full(v.shape, self.outlier, dtype=jnp.int32)
+        pos = jnp.searchsorted(self.keys, v.astype(jnp.int32))
+        pos = jnp.clip(pos, 0, self.keys.shape[0] - 1)
+        found = self.keys[pos] == v.astype(jnp.int32)
+        return jnp.where(found, self.part[pos], jnp.int32(self.outlier))
+
+
+def route_table_from_plan(plan: PartitionPlan, *, square: bool) -> tuple[RouteTable, int]:
+    """Build the device RouteTable + total pool size from a PartitionPlan.
+
+    Slab size per partition is ``w**2`` (kMatrix, 2-D) or ``w`` (gSketch, 1-D).
+    Returns (table, pool_size).
+    """
+    widths = np.asarray(plan.widths, dtype=np.int64)
+    slab = widths**2 if square else widths
+    offsets = np.concatenate([[0], np.cumsum(slab)[:-1]]).astype(np.int32)
+    pool_size = int(slab.sum())
+    table = RouteTable(
+        keys=jnp.asarray(plan.route_keys),
+        part=jnp.asarray(plan.route_part),
+        offsets=jnp.asarray(offsets),
+        widths=jnp.asarray(widths.astype(np.int32)),
+        outlier=plan.outlier,
+        n_partitions=len(plan.partitions),
+        max_width=int(widths.max()) if len(widths) else 0,
+    )
+    return table, pool_size

@@ -1,0 +1,80 @@
+"""Core stream / sketch types shared across the library."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.struct import pytree_dataclass, static_field
+
+
+@pytree_dataclass
+class EdgeBatch:
+    """A fixed-size batch of stream updates ``(src, dst, weight)``.
+
+    ``weight == 0`` marks padding slots (sketches are additive, so adding a
+    zero-weight edge is a no-op; this lets every batch be a static shape).
+    """
+
+    src: jax.Array  # int32[B]
+    dst: jax.Array  # int32[B]
+    weight: jax.Array  # int32[B]
+
+    @property
+    def size(self) -> int:
+        return self.src.shape[0]
+
+    @staticmethod
+    def from_numpy(src: np.ndarray, dst: np.ndarray, weight: np.ndarray | None = None) -> "EdgeBatch":
+        if weight is None:
+            weight = np.ones_like(src, dtype=np.int32)
+        return EdgeBatch(
+            src=jnp.asarray(src, dtype=jnp.int32),
+            dst=jnp.asarray(dst, dtype=jnp.int32),
+            weight=jnp.asarray(weight, dtype=jnp.int32),
+        )
+
+    @staticmethod
+    def pad_to(src: np.ndarray, dst: np.ndarray, weight: np.ndarray, size: int) -> "EdgeBatch":
+        n = src.shape[0]
+        assert n <= size, (n, size)
+        pad = size - n
+        return EdgeBatch.from_numpy(
+            np.concatenate([src, np.zeros(pad, np.int32)]),
+            np.concatenate([dst, np.zeros(pad, np.int32)]),
+            np.concatenate([weight.astype(np.int32), np.zeros(pad, np.int32)]),
+        )
+
+
+@pytree_dataclass
+class VertexStats:
+    """Per-vertex statistics estimated from a stream sample.
+
+    These drive the gSketch/kMatrix partitioning objective (paper Eq. 8):
+      f_v(m): summed weight of out-edges of m observed in the sample
+      deg(m): number of *distinct* out-neighbours of m in the sample
+    """
+
+    vertex: jax.Array  # int32[n] sorted unique vertex ids
+    freq: jax.Array  # float32[n]
+    deg: jax.Array  # float32[n]
+
+
+def vertex_stats_from_sample(src: np.ndarray, dst: np.ndarray,
+                             weight: np.ndarray | None = None) -> VertexStats:
+    """Host-side (numpy) computation of VertexStats from sampled edges."""
+    if weight is None:
+        weight = np.ones_like(src, dtype=np.int64)
+    order = np.argsort(src, kind="stable")
+    s, d_, w_ = src[order], dst[order], weight[order]
+    verts, starts = np.unique(s, return_index=True)
+    ends = np.append(starts[1:], len(s))
+    freq = np.add.reduceat(w_, starts).astype(np.float32)
+    deg = np.empty(len(verts), np.float32)
+    for i, (lo, hi) in enumerate(zip(starts, ends)):
+        deg[i] = len(np.unique(d_[lo:hi]))
+    return VertexStats(
+        vertex=jnp.asarray(verts.astype(np.int32)),
+        freq=jnp.asarray(freq),
+        deg=jnp.asarray(deg),
+    )

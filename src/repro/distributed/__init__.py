@@ -1,0 +1,15 @@
+from repro.distributed.sketch_parallel import (
+    build_owner_map,
+    make_dp_edge_freq,
+    make_dp_ingest,
+    make_pp_edge_freq,
+    make_pp_ingest,
+)
+
+__all__ = [
+    "build_owner_map",
+    "make_dp_edge_freq",
+    "make_dp_ingest",
+    "make_pp_edge_freq",
+    "make_pp_ingest",
+]

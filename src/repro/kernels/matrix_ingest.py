@@ -1,0 +1,86 @@
+"""Pallas TPU kernel: batched sketch ingest via one-hot MXU accumulation.
+
+Hardware adaptation (DESIGN.md §TPU-adaptation): the GPU-native formulation
+of sketch ingest is an atomic scatter-add — one random HBM write per (edge,
+layer).  TPUs have no atomics and serialize XLA scatters, so we *reformulate
+counting as matrix multiplication*: for an edge tile with row-slots ``hi``,
+column-slots ``hj`` and weights ``wt``,
+
+    increment = U^T @ (V * wt[:, None]),   U = onehot(hi), V = onehot(hj)
+
+adds exactly ``wt[e]`` at cell ``(hi[e], hj[e])`` for every edge ``e`` in the
+tile — a (w x TB) @ (TB x w) contraction that runs on the 128x128 systolic
+MXU at full clip instead of a serialized scatter pipeline.  f32 accumulation
+of 0/1-weighted products is exact for counts < 2^24; the result is cast and
+added into the resident int32 tile.
+
+Layout: ``pool`` is [d, P, w, w] — d hash layers, P partitions (P=1 recovers
+plain TCM/gMatrix; P>1 is the kMatrix width-class layout).  Grid is
+(d, P, C/TB) with the edge-tile axis innermost: each (layer, partition) out
+block stays resident in VMEM while every edge tile streams through it.
+
+VMEM budget @ defaults (w<=512, TB=256): pool tile 512*512*4 = 1 MiB,
+U/V f32 tiles 2 * 256*512*4 = 1 MiB, well under the ~16 MiB/core budget.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ingest_kernel(hi_ref, hj_ref, wt_ref, pool_ref, out_ref):
+    c = pl.program_id(2)
+
+    @pl.when(c == 0)
+    def _init():
+        out_ref[...] = pool_ref[...]
+
+    w = out_ref.shape[-1]
+    tb = hi_ref.shape[-1]
+    hi = hi_ref[0, 0, :]  # (TB,)
+    hj = hj_ref[0, 0, :]
+    wt = wt_ref[0, :].astype(jnp.float32)
+    iota = jax.lax.broadcasted_iota(jnp.int32, (tb, w), 1)
+    u = (hi[:, None] == iota).astype(jnp.float32)
+    v = (hj[:, None] == iota).astype(jnp.float32) * wt[:, None]
+    inc = jax.lax.dot_general(
+        u, v, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (w, w) = U^T @ V
+    out_ref[0, 0] += inc.astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def matrix_ingest(
+    pool: jax.Array,
+    hi: jax.Array,
+    hj: jax.Array,
+    wt: jax.Array,
+    *,
+    block_b: int = 256,
+    interpret: bool = True,
+) -> jax.Array:
+    """pool[r,p,hi[r,p,c],hj[r,p,c]] += wt[p,c] for all (r,p,c). See ref.py.
+
+    Shapes: pool int32[d,P,w,w], hi/hj int32[d,P,C], wt int32[P,C].
+    C must be a multiple of ``block_b`` (ops.py pads with wt=0 slots).
+    """
+    d, p, w, _ = pool.shape
+    c = hi.shape[-1]
+    assert c % block_b == 0, (c, block_b)
+    grid = (d, p, c // block_b)
+    return pl.pallas_call(
+        _ingest_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_b), lambda r, q, b: (r, q, b)),
+            pl.BlockSpec((1, 1, block_b), lambda r, q, b: (r, q, b)),
+            pl.BlockSpec((1, block_b), lambda r, q, b: (q, b)),
+            pl.BlockSpec((1, 1, w, w), lambda r, q, b: (r, q, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, w, w), lambda r, q, b: (r, q, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct(pool.shape, pool.dtype),
+        interpret=interpret,
+    )(hi, hj, wt, pool)

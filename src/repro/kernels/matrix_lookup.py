@@ -1,0 +1,67 @@
+"""Pallas TPU kernel: batched sketch point-queries (gather + min over layers).
+
+Same one-hot MXU trick as matrix_ingest, inverted: the addressed cell value
+for query q is  (U @ M) ⊙ V  row-summed, i.e.
+
+    val[q] = sum_j ( sum_i U[q,i] * M[i,j] ) * V[q,j] = M[hi[q], hj[q]]
+
+Grid is (P, C/TQ, d) with the *layer* axis innermost so the min-accumulator
+tile stays resident while layers stream through the MXU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_INT32_MAX = jnp.iinfo(jnp.int32).max
+
+
+def _lookup_kernel(hi_ref, hj_ref, pool_ref, out_ref):
+    r = pl.program_id(2)
+
+    @pl.when(r == 0)
+    def _init():
+        out_ref[...] = jnp.full_like(out_ref, _INT32_MAX)
+
+    w = pool_ref.shape[-1]
+    tq = hi_ref.shape[-1]
+    hi = hi_ref[0, 0, :]
+    hj = hj_ref[0, 0, :]
+    iota = jax.lax.broadcasted_iota(jnp.int32, (tq, w), 1)
+    u = (hi[:, None] == iota).astype(jnp.float32)
+    v = (hj[:, None] == iota).astype(jnp.float32)
+    m = pool_ref[0, 0].astype(jnp.float32)  # (w, w)
+    uv = jax.lax.dot(u, m, preferred_element_type=jnp.float32)  # (TQ, w)
+    vals = jnp.sum(uv * v, axis=-1).astype(out_ref.dtype)  # (TQ,)
+    out_ref[0, :] = jnp.minimum(out_ref[0, :], vals)
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "interpret"))
+def matrix_lookup(
+    pool: jax.Array,
+    hi: jax.Array,
+    hj: jax.Array,
+    *,
+    block_q: int = 256,
+    interpret: bool = True,
+) -> jax.Array:
+    """min_r pool[r, p, hi[r,p,c], hj[r,p,c]] -> int32[P, C]. See ref.py."""
+    d, p, w, _ = pool.shape
+    c = hi.shape[-1]
+    assert c % block_q == 0, (c, block_q)
+    grid = (p, c // block_q, d)
+    return pl.pallas_call(
+        _lookup_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q), lambda q, b, r: (r, q, b)),
+            pl.BlockSpec((1, 1, block_q), lambda q, b, r: (r, q, b)),
+            pl.BlockSpec((1, 1, w, w), lambda q, b, r: (r, q, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q), lambda q, b, r: (q, b)),
+        out_shape=jax.ShapeDtypeStruct((p, c), pool.dtype),
+        interpret=interpret,
+    )(hi, hj, pool)

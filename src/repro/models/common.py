@@ -1,0 +1,70 @@
+"""Shared model-layer primitives (no flax; params are plain dict pytrees)."""
+from __future__ import annotations
+
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = dict  # nested dict of jax.Array leaves
+
+
+def uniform_init(key, shape, scale, dtype=jnp.float32):
+    return jax.random.uniform(key, shape, dtype, -scale, scale)
+
+
+def normal_init(key, shape, stddev, dtype=jnp.float32):
+    return jax.random.normal(key, shape, dtype) * jnp.asarray(stddev, dtype)
+
+
+def dense_init(key, d_in, d_out, dtype=jnp.float32):
+    """LeCun-normal fan-in init."""
+    return normal_init(key, (d_in, d_out), 1.0 / math.sqrt(d_in), dtype)
+
+
+def rms_norm(x: jax.Array, gamma: jax.Array, eps: float = 1e-6,
+             zero_centered: bool = True) -> jax.Array:
+    """RMSNorm; ``zero_centered`` follows the Gemma (1 + gamma) convention."""
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    scale = (1.0 + gamma) if zero_centered else gamma
+    return (x * scale.astype(jnp.float32)).astype(dtype)
+
+
+def layer_norm(x: jax.Array, gamma: jax.Array, beta: jax.Array,
+               eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * gamma + beta).astype(dtype)
+
+
+def softcap(x: jax.Array, cap: float | None) -> jax.Array:
+    if cap is None:
+        return x
+    return jnp.tanh(x / cap) * cap
+
+
+ACTIVATIONS: dict[str, Callable] = {
+    "gelu": jax.nn.gelu,
+    "silu": jax.nn.silu,
+    "relu": jax.nn.relu,
+    "tanh": jnp.tanh,
+}
+
+
+def stacked_layer_init(init_one: Callable[[jax.Array], Params], key: jax.Array,
+                       n_layers: int) -> Params:
+    """Initialize per-layer params and stack leaves to (L, ...) for lax.scan."""
+    keys = jax.random.split(key, n_layers)
+    return jax.vmap(init_one)(keys)
+
+
+def count_params(params: Any) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(params))

@@ -1,0 +1,13 @@
+from repro.models.gnn.graph import GraphBatch, synthetic_graph
+from repro.models.gnn import gatedgcn, graphcast, nequip, equiformer_v2, so3, sampler
+
+__all__ = [
+    "GraphBatch",
+    "synthetic_graph",
+    "gatedgcn",
+    "graphcast",
+    "nequip",
+    "equiformer_v2",
+    "so3",
+    "sampler",
+]

@@ -1,0 +1,113 @@
+"""Memory-bounded edge aggregation for web-scale graphs (custom VJP).
+
+Message aggregation is LINEAR in per-chunk contributions:
+
+    agg = sum_i segment_sum(msg(carry, edge_slice_i), dst_i)
+
+so its backward needs NO per-chunk residuals and NO carried accumulator
+cotangents: d_carry = sum_i vjp_i(d_agg), with each chunk's vjp recomputed
+on the fly. Plain lax.scan differentiation misses this — it saves every
+chunk's message tensors (equiformer-v2 x ogb_products measured 5.5 TB of
+saved residuals), and checkpointing the body instead saves n_chunks copies
+of the accumulator carry. This helper makes both directions stream through
+chunks at O(chunk) extra memory — the same structure production GNN /
+flash-attention backwards use.
+
+Contract:
+  * ``carry_args`` and ``edge_args`` hold ONLY inexact (float) leaves;
+    integer per-edge data (source ids, masks) goes in ``int_edge_args``.
+  * per-edge leaves have leading dim E, divisible by ``n_chunks``
+    (callers pad with masked slots).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def _slice_tree(tree: Any, start, size: int) -> Any:
+    return jax.tree.map(
+        lambda x: jax.lax.dynamic_slice_in_dim(x, start, size, axis=0), tree
+    )
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2))
+def chunked_edge_aggregate(
+    msg_fn: Callable,  # (carry_args, edge_slice, int_slice) -> msg [chunk, ...]
+    n_nodes: int,
+    n_chunks: int,
+    carry_args: Any,  # float pytree (node features, layer params, ...)
+    edge_args: Any,  # float per-edge pytree, leading dim E
+    int_edge_args: Any,  # int per-edge pytree (src ids, ...), leading dim E
+    dst: jax.Array,  # int32[E] destination ids
+) -> jax.Array:
+    return _forward(msg_fn, n_nodes, n_chunks, carry_args, edge_args,
+                    int_edge_args, dst)
+
+
+def _forward(msg_fn, n_nodes, n_chunks, carry_args, edge_args, int_edge_args,
+             dst):
+    e = dst.shape[0]
+    chunk = e // n_chunks
+    assert chunk * n_chunks == e, (e, n_chunks)
+    probe = jax.eval_shape(
+        msg_fn, carry_args, _slice_tree(edge_args, 0, chunk),
+        _slice_tree(int_edge_args, 0, chunk),
+    )
+    acc0 = jnp.zeros((n_nodes,) + probe.shape[1:], probe.dtype)
+
+    def body(i, acc):
+        es = _slice_tree(edge_args, i * chunk, chunk)
+        ie = _slice_tree(int_edge_args, i * chunk, chunk)
+        d_i = jax.lax.dynamic_slice_in_dim(dst, i * chunk, chunk)
+        msg = msg_fn(carry_args, es, ie)
+        return acc + jax.ops.segment_sum(msg, d_i, num_segments=n_nodes)
+
+    return jax.lax.fori_loop(0, n_chunks, body, acc0)
+
+
+def _fwd(msg_fn, n_nodes, n_chunks, carry_args, edge_args, int_edge_args, dst):
+    out = _forward(msg_fn, n_nodes, n_chunks, carry_args, edge_args,
+                   int_edge_args, dst)
+    return out, (carry_args, edge_args, int_edge_args, dst)
+
+
+def _bwd(msg_fn, n_nodes, n_chunks, res, g):
+    carry_args, edge_args, int_edge_args, dst = res
+    e = dst.shape[0]
+    chunk = e // n_chunks
+
+    d_carry0 = jax.tree.map(jnp.zeros_like, carry_args)
+    d_edge0 = jax.tree.map(jnp.zeros_like, edge_args)
+
+    def body(i, acc):
+        d_carry, d_edge = acc
+        start = i * chunk
+        es = _slice_tree(edge_args, start, chunk)
+        ie = _slice_tree(int_edge_args, start, chunk)
+        d_i = jax.lax.dynamic_slice_in_dim(dst, start, chunk)
+
+        def f(c, e_):
+            return jax.ops.segment_sum(msg_fn(c, e_, ie), d_i,
+                                       num_segments=n_nodes)
+
+        _, vjp = jax.vjp(f, carry_args, es)
+        dc_i, de_i = vjp(g)
+        d_carry = jax.tree.map(jnp.add, d_carry, dc_i)
+        d_edge = jax.tree.map(
+            lambda full, u: jax.lax.dynamic_update_slice_in_dim(
+                full, u.astype(full.dtype), start, axis=0),
+            d_edge, de_i)
+        return d_carry, d_edge
+
+    d_carry, d_edge = jax.lax.fori_loop(0, n_chunks, body, (d_carry0, d_edge0))
+    # int inputs take no gradient: None is the float0 stand-in custom_vjp
+    # accepts for integer-dtype primals.
+    d_int = jax.tree.map(lambda _: None, int_edge_args)
+    return d_carry, d_edge, d_int, None
+
+
+chunked_edge_aggregate.defvjp(_fwd, _bwd)

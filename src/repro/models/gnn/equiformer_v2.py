@@ -1,0 +1,229 @@
+"""EquiformerV2 [arXiv:2306.12059] — equivariant graph attention via eSCN.
+
+Assigned config: 12 layers, 128 channels, l_max=6, m_max=2, 8 heads.
+
+The eSCN trick: a full SO(3) tensor-product convolution at l_max=6 costs
+O(l_max^6); rotating each edge's features into a frame where the edge is the
+z-axis makes the convolution *block-diagonal in m* and truncatable to
+|m| <= m_max, reducing it to a handful of dense per-m linear maps (SO(2)
+convolutions), O(l_max^3).  The per-edge rotation itself is two analytic
+z-rotations + two static J-matrix multiplies (so3.py) — this is the
+TPU-friendly reformulation: everything is dense einsums over static index
+sets; no per-edge Wigner-d evaluation, no scatter inside the hot loop.
+
+Edge flow per layer (attention):
+    gather src/dst features -> rotate to edge frame -> truncate to m<=m_max
+    -> SO(2) linear (separate W per m, complex-pair structure for m>0)
+    -> attention logits from the m=0 (invariant) block -> edge softmax
+    -> value messages * alpha -> un-truncate -> rotate back -> segment_sum.
+
+Memory: edges are processed in static chunks (two passes: logits, then
+messages) so the (E, C, d) tensors never materialize for web-scale graphs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init
+from repro.models.gnn.graph import GraphBatch, edge_softmax
+from repro.models.gnn.so3 import m_array, n_comps, rotate_to_edge_frame
+
+
+@dataclasses.dataclass(frozen=True)
+class EquiformerV2Config:
+    name: str = "equiformer-v2"
+    n_layers: int = 12
+    d_hidden: int = 128
+    l_max: int = 6
+    m_max: int = 2
+    n_heads: int = 8
+    edge_chunk: int = 32_768
+    remat: bool = False
+
+
+@functools.lru_cache(maxsize=None)
+def _m_indices(l_max: int, m_max: int):
+    """Component slots per |m| <= m_max: (idx_m0, [(idx_+m, idx_-m)] m=1..)."""
+    ms = m_array(l_max)
+    ls = np.concatenate([[l] * (2 * l + 1) for l in range(l_max + 1)])
+    idx0 = np.nonzero(ms == 0)[0]
+    pairs = []
+    for m in range(1, m_max + 1):
+        plus = np.nonzero(ms == m)[0]
+        minus = np.nonzero(ms == -m)[0]
+        assert len(plus) == len(minus)
+        pairs.append((plus, minus))
+    return idx0, pairs
+
+
+def _so2_sizes(cfg) -> list[int]:
+    idx0, pairs = _m_indices(cfg.l_max, cfg.m_max)
+    return [len(idx0)] + [len(p) for p, _ in pairs]
+
+
+def init_layer(cfg: EquiformerV2Config, key) -> dict:
+    d = cfg.d_hidden
+    sizes = _so2_sizes(cfg)
+    ks = jax.random.split(key, 8 + 2 * len(sizes))
+    p = {
+        "alpha_w1": dense_init(ks[0], 2 * sizes[0] * d, d),
+        "alpha_w2": dense_init(ks[1], d, cfg.n_heads),
+        "ffn_w1": dense_init(ks[2], d, 2 * d),
+        "ffn_w2": dense_init(ks[3], 2 * d, d),
+        "ffn_gate": dense_init(ks[4], d, (cfg.l_max) * d),
+        "out_w": dense_init(ks[5], d, d),
+    }
+    # SO(2) conv weights: m=0 real; m>0 complex pairs. Input is the CONCAT of
+    # rotated src+dst features (2d channels) -> d channels.
+    for mi, n_l in enumerate(sizes):
+        d_in, d_out = n_l * 2 * d, n_l * d
+        if mi == 0:
+            p[f"so2_m0"] = dense_init(ks[6], d_in, d_out)
+        else:
+            p[f"so2_m{mi}_r"] = dense_init(ks[6 + 2 * mi], d_in, d_out)
+            p[f"so2_m{mi}_i"] = dense_init(ks[7 + 2 * mi], d_in, d_out)
+    return p
+
+
+def init_params(cfg: EquiformerV2Config, key, d_in: int) -> dict:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "embed": dense_init(k1, d_in, cfg.d_hidden),
+        "layers": jax.vmap(lambda k: init_layer(cfg, k))(
+            jax.random.split(k2, cfg.n_layers)
+        ),
+        "head_w1": dense_init(k3, cfg.d_hidden, cfg.d_hidden),
+        "head_w2": jnp.zeros((cfg.d_hidden, 1)),
+    }
+
+
+def _so2_conv(cfg, p, x):
+    """SO(2) convolution on edge-frame features x: (E, C, 2d) -> (E, C, d)."""
+    e = x.shape[0]
+    d = cfg.d_hidden
+    idx0, pairs = _m_indices(cfg.l_max, cfg.m_max)
+    out = jnp.zeros((e, n_comps(cfg.l_max), d), x.dtype)
+    x0 = x[:, idx0, :].reshape(e, -1)
+    out = out.at[:, idx0, :].set((x0 @ p["so2_m0"]).reshape(e, len(idx0), d))
+    for mi, (plus, minus) in enumerate(pairs, start=1):
+        xp_ = x[:, plus, :].reshape(e, -1)
+        xm_ = x[:, minus, :].reshape(e, -1)
+        wr, wi = p[f"so2_m{mi}_r"], p[f"so2_m{mi}_i"]
+        yp = (xp_ @ wr - xm_ @ wi).reshape(e, len(plus), d)
+        ym = (xp_ @ wi + xm_ @ wr).reshape(e, len(plus), d)
+        out = out.at[:, plus, :].set(yp)
+        out = out.at[:, minus, :].set(ym)
+    return out
+
+
+def _equiv_layer_norm(h):
+    """Normalize per-l subspace norms (equivariant)."""
+    # h: (N, C, d); norm over (comps of each l, channel-wise RMS)
+    sq = jnp.mean(h * h, axis=(1,), keepdims=True)  # (N, 1, d) — l-mixed RMS
+    return h * jax.lax.rsqrt(sq + 1e-6)
+
+
+def _attention_layer(cfg, p, h, g: GraphBatch, inv_sqrt_deg):
+    from repro.models.gnn.chunked import chunked_edge_aggregate
+
+    n_edges = g.n_edges
+    d = cfg.d_hidden
+    idx0, _ = _m_indices(cfg.l_max, cfg.m_max)
+    vec = g.positions[g.edge_src] - g.positions[g.edge_dst]
+
+    n_chunks = max(n_edges // cfg.edge_chunk, 1)
+    chunk = -(-n_edges // n_chunks)
+    pad = n_chunks * chunk - n_edges
+
+    src = jnp.pad(g.edge_src, (0, pad))
+    dst = jnp.pad(g.edge_dst, (0, pad))
+    vec_p = jnp.pad(vec, ((0, pad), (0, 0)))
+
+    def rotate_mix(h_, so2_p, s, t, v):
+        """Shared first half: rotated + SO(2)-mixed features for a chunk."""
+        x = jnp.concatenate([h_[s], h_[t]], axis=-1)  # (chunk, C, 2d)
+        x = jnp.swapaxes(x, 1, 2)  # comps last for the so3 helper
+        x = rotate_to_edge_frame(x, v[:, None, :], l_max=cfg.l_max)
+        x = jnp.swapaxes(x, 1, 2)
+        return _so2_conv(cfg, so2_p, x)  # (chunk, C, d)
+
+    so2_keys = [k for k in p if k.startswith("so2_")]
+    so2_p = {k: p[k] for k in so2_keys}
+
+    # ---- pass 1: attention logits (invariant m=0 block) -------------------
+    # lax.map with a checkpointed body: ys cotangents stream per chunk and
+    # the rotate/mix recomputes in backward (no per-chunk residual stacks).
+    @functools.partial(jax.checkpoint, prevent_cse=False)
+    def logits_chunk(i):
+        s = jax.lax.dynamic_slice_in_dim(src, i * chunk, chunk)
+        t = jax.lax.dynamic_slice_in_dim(dst, i * chunk, chunk)
+        v = jax.lax.dynamic_slice_in_dim(vec_p, i * chunk, chunk)
+        mixed = rotate_mix(h, so2_p, s, t, v)
+        inv = mixed[:, idx0, :].reshape(chunk, -1)
+        z = jax.nn.silu(jnp.concatenate([inv, inv], axis=-1) @ p["alpha_w1"])
+        return z @ p["alpha_w2"]  # (chunk, H)
+
+    logits = jax.lax.map(logits_chunk, jnp.arange(n_chunks))
+    logits = logits.reshape(-1, cfg.n_heads)[:n_edges]
+    alpha = edge_softmax(logits, g.edge_dst, g.n_nodes, g.edge_mask)  # (E, H)
+    alpha_p = jnp.pad(alpha, ((0, pad), (0, 0)))
+
+    # ---- pass 2: weighted messages via the linear-aggregate custom VJP ----
+    def msg_fn(carry, es, ie):
+        h_, so2_ = carry
+        mixed = rotate_mix(h_, so2_, ie["src"], ie["dst"], es["vec"])
+        val = mixed.reshape(mixed.shape[0], -1, cfg.n_heads, d // cfg.n_heads)
+        val = val * es["alpha"][:, None, :, None]
+        val = val.reshape(val.shape[0], n_comps(cfg.l_max), d)
+        val = jnp.swapaxes(val, 1, 2)
+        val = rotate_to_edge_frame(val, es["vec"][:, None, :],
+                                   l_max=cfg.l_max, inverse=True)
+        return jnp.swapaxes(val, 1, 2)
+
+    agg = chunked_edge_aggregate(
+        msg_fn, g.n_nodes, n_chunks,
+        (h, so2_p),
+        {"vec": vec_p, "alpha": alpha_p},
+        {"src": src, "dst": dst},
+        dst,
+    )
+    agg = agg * inv_sqrt_deg[:, None, None]
+
+    h = h + jnp.einsum("ncd,df->ncf", agg, p["out_w"])
+    h = _equiv_layer_norm(h)
+
+    # ---- pointwise equivariant FFN ----------------------------------------
+    scalars = h[:, 0, :]
+    z = jax.nn.silu(scalars @ p["ffn_w1"]) @ p["ffn_w2"]
+    gates = jax.nn.sigmoid(scalars @ p["ffn_gate"]).reshape(
+        -1, cfg.l_max, cfg.d_hidden
+    )
+    out = h.at[:, 0, :].add(z)
+    for l in range(1, cfg.l_max + 1):
+        sl = slice(l * l, (l + 1) * (l + 1))
+        out = out.at[:, sl, :].multiply(gates[:, l - 1 : l, :])
+    return out
+
+
+def forward(cfg: EquiformerV2Config, params: dict, g: GraphBatch) -> jax.Array:
+    """Per-graph energies (n_graphs,) — the OC20-style readout."""
+    deg = jax.ops.segment_sum(g.edge_mask, g.edge_dst, num_segments=g.n_nodes)
+    inv_sqrt_deg = jax.lax.rsqrt(jnp.maximum(deg, 1.0))
+    h0 = g.node_feat @ params["embed"]
+    h = jnp.zeros((g.n_nodes, n_comps(cfg.l_max), cfg.d_hidden), h0.dtype)
+    h = h.at[:, 0, :].set(h0)
+
+    def body(h, lp):
+        return _attention_layer(cfg, lp, h, g, inv_sqrt_deg), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    h, _ = jax.lax.scan(body, h, params["layers"])
+    e_atom = jax.nn.silu(h[:, 0, :] @ params["head_w1"]) @ params["head_w2"]
+    e_atom = e_atom[:, 0] * g.node_mask
+    return jax.ops.segment_sum(e_atom, g.graph_id, num_segments=g.n_graphs)

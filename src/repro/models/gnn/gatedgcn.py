@@ -1,0 +1,86 @@
+"""GatedGCN [arXiv:2003.00982 benchmarking / 1711.07553] — edge-gated MPNN.
+
+Layer (Bresson & Laurent):
+    e'_ij = E1 e_ij + E2 h_i + E3 h_j                       (edge update)
+    eta_ij = sigma(e'_ij) / (sum_{j'} sigma(e'_ij') + eps)  (gates)
+    h'_i  = A h_i + sum_j eta_ij ⊙ (B h_j)                  (node update)
+with BN->ReLU->residual on both streams (we use LayerNorm — batch-size-free
+and the standard modern substitution).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, layer_norm
+from repro.models.gnn.graph import GraphBatch, scatter_sum
+
+
+@dataclasses.dataclass(frozen=True)
+class GatedGCNConfig:
+    name: str = "gatedgcn"
+    n_layers: int = 16
+    d_hidden: int = 70
+    d_out: int = 16
+    aggregator: str = "gated"
+    remat: bool = False
+
+
+def init_layer(cfg: GatedGCNConfig, key) -> dict:
+    d = cfg.d_hidden
+    ks = jax.random.split(key, 5)
+    return {
+        "A": dense_init(ks[0], d, d),
+        "B": dense_init(ks[1], d, d),
+        "E1": dense_init(ks[2], d, d),
+        "E2": dense_init(ks[3], d, d),
+        "E3": dense_init(ks[4], d, d),
+        "ln_h_g": jnp.ones((d,)),
+        "ln_h_b": jnp.zeros((d,)),
+        "ln_e_g": jnp.ones((d,)),
+        "ln_e_b": jnp.zeros((d,)),
+    }
+
+
+def init_params(cfg: GatedGCNConfig, key, d_in: int, d_edge_in: int = 8) -> dict:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    layers = jax.vmap(lambda k: init_layer(cfg, k))(
+        jax.random.split(k3, cfg.n_layers)
+    )
+    return {
+        "embed_h": dense_init(k1, d_in, cfg.d_hidden),
+        "embed_e": dense_init(k2, d_edge_in, cfg.d_hidden),
+        "layers": layers,
+        "head": dense_init(k4, cfg.d_hidden, cfg.d_out),
+    }
+
+
+def _layer(cfg: GatedGCNConfig, p: dict, h, e, g: GraphBatch):
+    hi = h[g.edge_src]
+    hj = h[g.edge_dst]
+    e_new = e @ p["E1"] + hi @ p["E2"] + hj @ p["E3"]
+    gate = jax.nn.sigmoid(e_new) * g.edge_mask[:, None]
+    denom = scatter_sum(gate, g.edge_dst, g.n_nodes) + 1e-6
+    msg = scatter_sum(gate * (hi @ p["B"]), g.edge_dst, g.n_nodes)
+    h_new = h @ p["A"] + msg / denom
+    h = h + jax.nn.relu(layer_norm(h_new, p["ln_h_g"], p["ln_h_b"]))
+    e = e + jax.nn.relu(layer_norm(e_new, p["ln_e_g"], p["ln_e_b"]))
+    return h, e
+
+
+def forward(cfg: GatedGCNConfig, params: dict, g: GraphBatch) -> jax.Array:
+    """Node-level outputs [N, d_out]."""
+    h = g.node_feat @ params["embed_h"]
+    e = g.edge_feat @ params["embed_e"]
+
+    def body(carry, lp):
+        h, e = carry
+        h, e = _layer(cfg, lp, h, e, g)
+        return (h, e), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    (h, e), _ = jax.lax.scan(body, (h, e), params["layers"])
+    return h @ params["head"]

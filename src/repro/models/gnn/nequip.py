@@ -1,0 +1,194 @@
+"""NequIP [arXiv:2101.03164] — E(3)-equivariant interatomic potential.
+
+Assigned config: 5 layers, 32 channels, l_max=2, 8 Bessel RBFs, cutoff 5 A.
+
+Features are (N, C_irr, d) with C_irr = (l_max+1)^2 SH-indexed components and
+d channels.  An interaction layer computes, per edge (j -> i):
+
+    m_ij[l3] = sum_paths  R_path(|r|) * G_{l1 l2 l3} ( h_j[l1] (x) Y_{l2}(r^) )
+
+with learned radial MLPs R on a Bessel basis under a smooth polynomial
+cutoff, followed by per-l self-interactions and gated nonlinearities
+(scalars: silu; l>0: sigmoid gates from scalar channels — the NequIP gate).
+
+Energy = sum_atoms MLP(h[l=0]); forces = -dE/dpositions via jax.grad (tested
+for rotation equivariance end-to-end).  Parity subtleties of full E(3)
+(improper reflections) are not tracked separately — see DESIGN.md
+§Arch-adaptation.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init
+from repro.models.gnn.graph import GraphBatch
+from repro.models.gnn.so3 import gaunt_tensor, n_comps, real_sph_harm
+
+
+@dataclasses.dataclass(frozen=True)
+class NequIPConfig:
+    name: str = "nequip"
+    n_layers: int = 5
+    d_hidden: int = 32
+    l_max: int = 2
+    n_rbf: int = 8
+    cutoff: float = 5.0
+    edge_chunk: int = 65_536
+    remat: bool = False
+
+
+@functools.lru_cache(maxsize=None)
+def _paths(l_max: int) -> tuple:
+    """All (l1, l2, l3) with non-vanishing Gaunt coupling, l* <= l_max."""
+    out = []
+    for l1 in range(l_max + 1):
+        for l2 in range(l_max + 1):
+            for l3 in range(abs(l1 - l2), min(l1 + l2, l_max) + 1):
+                g = gaunt_tensor(l1, l2, l3)
+                if np.abs(g).max() > 1e-10:
+                    out.append((l1, l2, l3))
+    return tuple(out)
+
+
+def _sl(l: int) -> slice:
+    return slice(l * l, (l + 1) * (l + 1))
+
+
+def bessel_rbf(r: jax.Array, n: int, cutoff: float) -> jax.Array:
+    """Bessel radial basis with smooth polynomial cutoff envelope."""
+    r = jnp.maximum(r, 1e-6)
+    k = jnp.arange(1, n + 1, dtype=jnp.float32)
+    basis = jnp.sqrt(2.0 / cutoff) * jnp.sin(k * jnp.pi * r[..., None] / cutoff) / r[..., None]
+    x = jnp.clip(r / cutoff, 0.0, 1.0)
+    env = 1.0 - 10.0 * x**3 + 15.0 * x**4 - 6.0 * x**5  # p=2 poly cutoff
+    return basis * env[..., None]
+
+
+def init_params(cfg: NequIPConfig, key, d_in: int) -> dict:
+    d = cfg.d_hidden
+    paths = _paths(cfg.l_max)
+    n_l = cfg.l_max + 1
+
+    def layer_init(k):
+        ks = jax.random.split(k, 6)
+        return {
+            # radial MLP -> one weight per (path, channel)
+            "rad_w1": dense_init(ks[0], cfg.n_rbf, 64),
+            "rad_w2": dense_init(ks[1], 64, len(paths) * d),
+            # per-l self interactions (channel mixing)
+            "self_w": jax.vmap(lambda kk: dense_init(kk, d, d))(
+                jax.random.split(ks[2], n_l)
+            ),
+            "msg_w": jax.vmap(lambda kk: dense_init(kk, d, d))(
+                jax.random.split(ks[3], n_l)
+            ),
+            # gates for l > 0 from scalar channels
+            "gate_w": dense_init(ks[4], d, (n_l - 1) * d),
+        }
+
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "embed": dense_init(k1, d_in, d),
+        "layers": jax.vmap(layer_init)(jax.random.split(k2, cfg.n_layers)),
+        "head_w1": dense_init(k3, d, d),
+        "head_w2": jnp.zeros((d, 1)),
+    }
+
+
+def _interaction(cfg: NequIPConfig, p: dict, h, g: GraphBatch, y_edge, rbf):
+    """One message-passing layer. h: (N, C, d).
+
+    Edge messages stream through ``chunked_edge_aggregate`` (custom VJP —
+    see chunked.py): radial MLP, Gaunt couplings and gathers all live
+    inside the chunk function, so nothing E-sized beyond the (E, C_sh) SH
+    values and (E, n_rbf) basis ever materializes, in EITHER direction.
+    """
+    from repro.models.gnn.chunked import chunked_edge_aggregate
+
+    paths = _paths(cfg.l_max)
+    d = cfg.d_hidden
+    n_edges = g.n_edges
+    n_chunks = max(n_edges // cfg.edge_chunk, 1)
+    chunk = -(-n_edges // n_chunks)
+    pad = n_chunks * chunk - n_edges
+    src = jnp.pad(g.edge_src, (0, pad))
+    dst = jnp.pad(g.edge_dst, (0, pad))
+    mask = jnp.pad(g.edge_mask, (0, pad))
+    y_pad = jnp.pad(y_edge, ((0, pad), (0, 0)))
+    rbf_pad = jnp.pad(rbf, ((0, pad), (0, 0)))
+
+    def msg_fn(carry, es, ie):
+        h_, w1, w2 = carry
+        rad = jax.nn.silu(es["rbf"] @ w1) @ w2
+        rad = rad.reshape(rad.shape[0], len(paths), d)
+        h_src = h_[ie["src"]]  # (chunk, C, d)
+        msg = jnp.zeros((rad.shape[0], n_comps(cfg.l_max), d), h_.dtype)
+        for pi, (l1, l2, l3) in enumerate(paths):
+            gt = jnp.asarray(gaunt_tensor(l1, l2, l3), h_.dtype)
+            contrib = jnp.einsum(
+                "abc,ead,eb,ed->ecd",
+                gt, h_src[:, _sl(l1), :], es["y"][:, _sl(l2)], rad[:, pi, :],
+            )
+            msg = msg.at[:, _sl(l3), :].add(contrib)
+        return msg * es["mask"][:, None, None]
+
+    agg = chunked_edge_aggregate(
+        msg_fn, g.n_nodes, n_chunks,
+        (h, p["rad_w1"], p["rad_w2"]),
+        {"y": y_pad, "rbf": rbf_pad, "mask": mask},
+        {"src": src},
+        dst,
+    )
+
+    # self-interaction + message mix per l, then gated nonlinearity
+    h_new = jnp.zeros_like(h)
+    for l in range(cfg.l_max + 1):
+        mixed = h[:, _sl(l), :] @ p["self_w"][l] + agg[:, _sl(l), :] @ p["msg_w"][l]
+        h_new = h_new.at[:, _sl(l), :].set(mixed)
+    scalars = h_new[:, 0, :]
+    gates = jax.nn.sigmoid(scalars @ p["gate_w"]).reshape(
+        -1, cfg.l_max, cfg.d_hidden
+    )
+    out = h_new.at[:, 0, :].set(jax.nn.silu(scalars))
+    for l in range(1, cfg.l_max + 1):
+        out = out.at[:, _sl(l), :].multiply(gates[:, l - 1 : l, :])
+    return h + out  # residual
+
+
+def energy(cfg: NequIPConfig, params: dict, g: GraphBatch,
+           positions: jax.Array) -> jax.Array:
+    """Total energy per graph: (n_graphs,). Differentiable in positions."""
+    vec = positions[g.edge_src] - positions[g.edge_dst]
+    dist = jnp.linalg.norm(vec + 1e-12, axis=-1)
+    vhat = vec / jnp.maximum(dist[:, None], 1e-9)
+    y_edge = real_sph_harm(vhat, cfg.l_max, xp=jnp)  # (E, C)
+    rbf = bessel_rbf(dist, cfg.n_rbf, cfg.cutoff)
+
+    h0 = g.node_feat @ params["embed"]  # (N, d) scalars
+    h = jnp.zeros((g.n_nodes, n_comps(cfg.l_max), cfg.d_hidden), h0.dtype)
+    h = h.at[:, 0, :].set(h0)
+
+    def body(h, lp):
+        return _interaction(cfg, lp, h, g, y_edge, rbf), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    h, _ = jax.lax.scan(body, h, params["layers"])
+
+    e_atom = jax.nn.silu(h[:, 0, :] @ params["head_w1"]) @ params["head_w2"]
+    e_atom = e_atom[:, 0] * g.node_mask
+    return jax.ops.segment_sum(e_atom, g.graph_id, num_segments=g.n_graphs)
+
+
+def energy_and_forces(cfg: NequIPConfig, params: dict, g: GraphBatch):
+    def total_e(pos):
+        return energy(cfg, params, g, pos).sum()
+
+    e = energy(cfg, params, g, g.positions)
+    forces = -jax.grad(total_e)(g.positions)
+    return e, forces

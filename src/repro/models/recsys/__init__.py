@@ -1,0 +1,3 @@
+from repro.models.recsys import fm
+
+__all__ = ["fm"]

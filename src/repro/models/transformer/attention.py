@@ -1,0 +1,191 @@
+"""GQA attention: RoPE, logit softcap, sliding-window/global, QK-norm.
+
+Memory discipline: a 32k-token prefill cannot materialize (S, S) scores
+(256 GB at gemma3 scale), so training/prefill attention is *blockwise*:
+an outer lax.scan over query chunks with an online-softmax inner loop over
+KV chunks (the FlashAttention recurrence, expressed in pure JAX so XLA/Mosaic
+fuses it; a Pallas port is a further perf step, see EXPERIMENTS.md §Perf).
+
+  * global layers: inner fori over KV chunks; a scalar lax.cond skips chunks
+    that lie entirely in the causal future (real compute skip, not a mask).
+  * local (sliding-window) layers: each query chunk dynamic-slices a
+    (window + chunk_q) KV slab — compute is O(S * window), which is what
+    makes the gemma-2/3 and mixtral long-context shapes sub-quadratic.
+
+Decode (q_len == 1) attends to the full cache in one fused einsum chain —
+O(S) and bandwidth-bound by design.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import rms_norm, softcap
+
+NEG_INF = -1e30
+
+
+def rope_frequencies(d_head: int, theta: float) -> jax.Array:
+    exponent = jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head
+    return 1.0 / (theta**exponent)  # (d_head/2,)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, Dh), positions: broadcastable to (..., S)."""
+    freqs = rope_frequencies(x.shape[-1], theta)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, Dh/2)
+    sin = jnp.sin(angles)[..., None, :]
+    cos = jnp.cos(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def _scores(q, k, scale, cap):
+    """q: (B, Tq, KV, G, Dh), k: (B, Tk, KV, Dh) -> (B, KV, G, Tq, Tk)."""
+    s = jnp.einsum("bqkgd,btkd->bkgqt", q, k, preferred_element_type=jnp.float32)
+    return softcap(s * scale, cap)
+
+
+def _mask(q_pos, k_pos, window):
+    """(Tq, Tk) additive mask: causal, plus sliding window when window>0."""
+    ok = k_pos[None, :] <= q_pos[:, None]
+    if window is not None and window > 0:
+        ok &= k_pos[None, :] > q_pos[:, None] - window
+    return jnp.where(ok, 0.0, NEG_INF)
+
+
+def blockwise_attention(
+    q: jax.Array,  # (B, S, H, Dh)
+    k: jax.Array,  # (B, S, KV, Dh)
+    v: jax.Array,  # (B, S, KV, Dh)
+    *,
+    window: int | None,  # None -> global
+    attn_cap: float | None,
+    chunk_q: int,
+    chunk_kv: int,
+) -> jax.Array:
+    b, s, h, dh = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    scale = 1.0 / np.sqrt(dh)
+    chunk_q = min(chunk_q, s)
+    nq = -(-s // chunk_q)
+    sq_pad = nq * chunk_q
+    qp = jnp.pad(q, ((0, 0), (0, sq_pad - s), (0, 0), (0, 0)))
+    qp = qp.reshape(b, nq, chunk_q, kv, g, dh)
+
+    if window is not None and window > 0:
+        # ---- sliding window: one static KV slab per query chunk ----------
+        slab = window + chunk_q
+        kpad = jnp.pad(k, ((0, 0), (slab, sq_pad - s), (0, 0), (0, 0)))
+        vpad = jnp.pad(v, ((0, 0), (slab, sq_pad - s), (0, 0), (0, 0)))
+
+        @functools.partial(jax.checkpoint, prevent_cse=False)
+        def q_chunk(i):
+            # remat per q-chunk: the layer-level checkpoint recomputes the
+            # layer forward, but WITHIN that recomputation the backward
+            # would otherwise hold every chunk's (Tq, window+Tq) score
+            # tensor at once (~10 GiB/layer at gemma2 train_4k). Chunk-level
+            # remat caps residuals at one chunk (§Perf iteration 1).
+            q_i = qp[:, i]  # (B, Tq, KV, G, Dh)
+            start = i * chunk_q  # first q position in chunk
+            # Slab covers original positions [start - window, start + Tq - 1];
+            # position x lives at index x + slab in the padded arrays, so the
+            # slice starts at (start - window) + slab == start + chunk_q.
+            k_i = jax.lax.dynamic_slice_in_dim(kpad, start + chunk_q, slab, axis=1)
+            v_i = jax.lax.dynamic_slice_in_dim(vpad, start + chunk_q, slab, axis=1)
+            s_i = _scores(q_i, k_i, scale, attn_cap)
+            q_pos = start + jnp.arange(chunk_q)
+            k_pos = start - window + jnp.arange(slab)  # true positions of slab
+            valid = (k_pos >= 0) & (k_pos < s)
+            s_i = s_i + _mask(q_pos, k_pos, window) + jnp.where(valid, 0.0, NEG_INF)
+            p = jax.nn.softmax(s_i, axis=-1)
+            return jnp.einsum("bkgqt,btkd->bqkgd", p.astype(v.dtype), v_i)
+
+        out = jax.lax.map(q_chunk, jnp.arange(nq))  # (nq, B, Tq, KV, G, Dh)
+        out = jnp.moveaxis(out, 0, 1).reshape(b, sq_pad, h, dh)
+        return out[:, :s]
+
+    # ---- global causal: online softmax over KV chunks --------------------
+    chunk_kv = min(chunk_kv, s)
+    nk = -(-s // chunk_kv)
+    sk_pad = nk * chunk_kv
+    kp = jnp.pad(k, ((0, 0), (0, sk_pad - s), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, sk_pad - s), (0, 0), (0, 0)))
+
+    @functools.partial(jax.checkpoint, prevent_cse=False)
+    def q_chunk(i):
+        q_i = qp[:, i]
+        q_pos = i * chunk_q + jnp.arange(chunk_q)
+
+        def kv_step(j, carry):
+            m, l, acc = carry
+
+            @functools.partial(jax.checkpoint, prevent_cse=False)
+            def visit(carry):
+                m, l, acc = carry
+                k_j = jax.lax.dynamic_slice_in_dim(kp, j * chunk_kv, chunk_kv, 1)
+                v_j = jax.lax.dynamic_slice_in_dim(vp, j * chunk_kv, chunk_kv, 1)
+                s_ij = _scores(q_i, k_j, scale, attn_cap)
+                k_pos = j * chunk_kv + jnp.arange(chunk_kv)
+                s_ij = s_ij + _mask(q_pos, k_pos, None) + jnp.where(
+                    k_pos < s, 0.0, NEG_INF
+                )
+                m_new = jnp.maximum(m, s_ij.max(axis=-1))
+                alpha = jnp.exp(m - m_new)
+                p = jnp.exp(s_ij - m_new[..., None])
+                l_new = l * alpha + p.sum(axis=-1)
+                acc_new = acc * alpha[..., None] + jnp.einsum(
+                    "bkgqt,btkd->bkgqd", p, v_j.astype(jnp.float32)
+                )
+                return m_new, l_new, acc_new
+
+            # Real skip for chunks fully in the causal future.
+            first_q = i * chunk_q
+            return jax.lax.cond(j * chunk_kv <= first_q + chunk_q - 1, visit,
+                                lambda c: c, carry)
+
+        m0 = jnp.full((b, kv, g, chunk_q), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, kv, g, chunk_q), jnp.float32)
+        a0 = jnp.zeros((b, kv, g, chunk_q, dh), jnp.float32)
+        m, l, acc = jax.lax.fori_loop(0, nk, kv_step, (m0, l0, a0))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return jnp.moveaxis(out, 3, 1)  # (B, Tq, KV, G, Dh)
+
+    out = jax.lax.map(q_chunk, jnp.arange(nq))
+    out = jnp.moveaxis(out, 0, 1).reshape(b, sq_pad, kv * g, dh).astype(q.dtype)
+    return out[:, :s]
+
+
+def decode_attention(
+    q: jax.Array,  # (B, 1, H, Dh)
+    k_cache: jax.Array,  # (B, S, KV, Dh)
+    v_cache: jax.Array,  # (B, S, KV, Dh)
+    cache_len: jax.Array,  # scalar int32: number of valid cache positions
+    *,
+    window: int | None,
+    attn_cap: float | None,
+) -> jax.Array:
+    b, s, kvh, dh = k_cache.shape
+    h = q.shape[2]
+    g = h // kvh
+    scale = 1.0 / np.sqrt(dh)
+    qr = q.reshape(b, 1, kvh, g, dh)
+    scores = _scores(qr, k_cache, scale, attn_cap)[..., 0, :]  # (B, KV, G, S)
+    pos = jnp.arange(s)
+    ok = pos[None, None, None, :] < cache_len
+    if window is not None and window > 0:
+        ok &= pos[None, None, None, :] > cache_len - 1 - window
+    scores = jnp.where(ok, scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgt,btkd->bkgd", p.astype(v_cache.dtype), v_cache)
+    return out.reshape(b, 1, h, dh)
+
+
+def qk_rms_norm(x: jax.Array, gamma: jax.Array, eps: float) -> jax.Array:
+    """Per-head RMS norm on q/k (Gemma-3 replaces softcapping with this)."""
+    return rms_norm(x, gamma, eps)

@@ -1,0 +1,502 @@
+"""Transformer model: init / train forward / prefill / decode.
+
+Layer stacking: parameters are stacked (n_periods, period, ...) and the
+forward pass is a single ``lax.scan`` over *pattern periods* (gemma-2's
+local/global alternation has period 2, gemma-3's 5:1 has period 6, uniform
+archs period 1).  The period is unrolled in Python inside the scan body, so
+each layer kind is statically specialized (no dead branches, no per-layer
+cond) while HLO size stays O(period), keeping 62-layer compiles cheap.
+
+Loss: cross-entropy is computed in sequence chunks with the vocab dimension
+model-sharded (Megatron-style vocab-parallel CE); full (B, S, V) logits are
+never materialized (gemma3 would need 33 GB/device otherwise).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import (
+    ACTIVATIONS,
+    dense_init,
+    normal_init,
+    rms_norm,
+    softcap,
+    stacked_layer_init,
+)
+from repro.models.transformer.attention import (
+    apply_rope,
+    blockwise_attention,
+    decode_attention,
+    qk_rms_norm,
+)
+from repro.models.transformer.config import TransformerConfig
+from repro.models.transformer.moe import moe_ffn
+
+
+def _period(cfg: TransformerConfig) -> int:
+    return len(cfg.layer_pattern)
+
+
+def _dtype(cfg: TransformerConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------- params --
+
+def init_layer(cfg: TransformerConfig, key: jax.Array) -> dict:
+    ks = jax.random.split(key, 8)
+    d, h, kv, dh, f = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head, cfg.d_ff
+    dt = _dtype(cfg)
+    p = {
+        "ln_attn": jnp.zeros((d,), dt),
+        "wq": dense_init(ks[0], d, h * dh, dt),
+        "wk": dense_init(ks[1], d, kv * dh, dt),
+        "wv": dense_init(ks[2], d, kv * dh, dt),
+        "wo": dense_init(ks[3], h * dh, d, dt),
+        "ln_mlp": jnp.zeros((d,), dt),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((dh,), dt)
+        p["k_norm"] = jnp.zeros((dh,), dt)
+    if cfg.post_norms:
+        p["ln_post_attn"] = jnp.zeros((d,), dt)
+        p["ln_post_mlp"] = jnp.zeros((d,), dt)
+    fin = 2 * f if cfg.gated_mlp else f
+    if cfg.is_moe:
+        p["router"] = dense_init(ks[4], d, cfg.n_experts, jnp.float32)
+        p["w_in"] = jax.vmap(lambda k_: dense_init(k_, d, fin, dt))(
+            jax.random.split(ks[5], cfg.n_experts)
+        )
+        p["w_out"] = jax.vmap(lambda k_: dense_init(k_, f, d, dt))(
+            jax.random.split(ks[6], cfg.n_experts)
+        )
+    else:
+        p["w_in"] = dense_init(ks[5], d, fin, dt)
+        p["w_out"] = dense_init(ks[6], f, d, dt)
+    return p
+
+
+def init_params(cfg: TransformerConfig, key: jax.Array) -> dict:
+    k_embed, k_layers, k_head, k_tail = jax.random.split(key, 4)
+    per = _period(cfg)
+    n_per = cfg.n_layers // per
+    rem = cfg.n_layers - n_per * per  # tail layers when period doesn't divide
+    dt = _dtype(cfg)
+
+    def init_period(k_):
+        return [init_layer(cfg, kk) for kk in jax.random.split(k_, per)]
+
+    layers = stacked_layer_init(init_period, k_layers, n_per)
+    params = {
+        # 1/sqrt(d) keeps tied-head logits ~unit-scale at init; the Gemma
+        # embed_scale (sqrt(d) on the input side) restores unit embeddings.
+        "embed": normal_init(k_embed, (cfg.vocab, cfg.d_model),
+                             cfg.d_model**-0.5, dt),
+        "layers": layers,  # list of per dicts, leaves (n_per, ...)
+        "tail": [init_layer(cfg, kk) for kk in jax.random.split(k_tail, rem)]
+        if rem else [],
+        "ln_final": jnp.zeros((cfg.d_model,), dt),
+    }
+    if not cfg.tie_embed:
+        params["lm_head"] = dense_init(k_head, cfg.d_model, cfg.vocab, dt)
+    return params
+
+
+# --------------------------------------------------------------- forward --
+
+def _cache_write(cache: jax.Array, new: jax.Array, offset: jax.Array) -> jax.Array:
+    """Write ``new`` (B, s, KV, Dh) into cache (B, S, KV, Dh) at ``offset``
+    along S, as a shard-friendly one-hot select (no dynamic-update-slice)."""
+    s_new = new.shape[1]
+    s_max = cache.shape[1]
+    pos = jnp.arange(s_max, dtype=jnp.int32)
+    in_window = (pos >= offset) & (pos < offset + s_new)
+    if s_new == 1:
+        # decode: plain broadcast — fuses into the select, no gather temp
+        placed = jnp.broadcast_to(new.astype(cache.dtype), cache.shape)
+    else:
+        # prefill: roll new into place via clipped gather, masked below
+        idx = jnp.clip(pos - offset, 0, s_new - 1)
+        placed = jnp.take(new.astype(cache.dtype), idx, axis=1)
+    return jnp.where(in_window[None, :, None, None], placed, cache)
+
+
+def _attn_block(cfg: TransformerConfig, p: dict, x, positions, is_local: bool,
+                cache=None, cache_len=None):
+    """Returns (out, (k, v)) — k/v returned for prefill cache collection."""
+    b, s, d = x.shape
+    h, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    y = rms_norm(x, p["ln_attn"], cfg.norm_eps)
+    q = jnp.einsum("bsd,dh->bsh", y, p["wq"]).reshape(b, s, h, dh)
+    k = jnp.einsum("bsd,dh->bsh", y, p["wk"]).reshape(b, s, kv, dh)
+    v = jnp.einsum("bsd,dh->bsh", y, p["wv"]).reshape(b, s, kv, dh)
+    if cfg.qk_norm:
+        q = qk_rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = qk_rms_norm(k, p["k_norm"], cfg.norm_eps)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    window = cfg.window if is_local else None
+
+    if cache is None:
+        # Training: no cache.
+        out = blockwise_attention(
+            q, k, v, window=window, attn_cap=cfg.attn_softcap,
+            chunk_q=cfg.attn_chunk_q, chunk_kv=cfg.attn_chunk_kv,
+        )
+    elif s > 1:
+        # Prefill: blockwise attention over the prompt, then write the cache.
+        # Cache writes are ONE-HOT selects, not dynamic_update_slice: the S
+        # dim may be sharded (long-context serving) and an elementwise
+        # select keeps SPMD from all-gathering the cache.
+        k_cache, v_cache = cache
+        out = blockwise_attention(
+            q, k, v, window=window, attn_cap=cfg.attn_softcap,
+            chunk_q=cfg.attn_chunk_q, chunk_kv=cfg.attn_chunk_kv,
+        )
+        k, v = _cache_write(k_cache, k, cache_len), _cache_write(v_cache, v, cache_len)
+    else:
+        # Decode: one token against the full cache.
+        k_cache, v_cache = cache
+        k_cache = _cache_write(k_cache, k, cache_len)
+        v_cache = _cache_write(v_cache, v, cache_len)
+        out = decode_attention(
+            q, k_cache, v_cache, cache_len + s,
+            window=window, attn_cap=cfg.attn_softcap,
+        )
+        k, v = k_cache, v_cache
+
+    out = out.reshape(b, s, h * dh)
+    out = jnp.einsum("bsh,hd->bsd", out, p["wo"])
+    if cfg.post_norms:
+        out = rms_norm(out, p["ln_post_attn"], cfg.norm_eps)
+    return out, (k, v)
+
+
+def _gather_weight(cfg: TransformerConfig, w: jax.Array, f_dim: int):
+    """ZeRO-3 gather-at-use: FFN weights are STORED sharded over every mesh
+    axis (launch/shardings.py) but must be model-only-sharded at the einsum
+    — if d_ff stays data-sharded while activations are data-sharded on
+    batch, SPMD reshards the (huge) activations instead of the (small)
+    weights (mixtral train measured 175 GiB/device). Only active in
+    distributed mode (zero3_gather set by the dry-run cell builder)."""
+    if not cfg.zero3_gather:
+        return w
+    from jax.sharding import PartitionSpec as P
+
+    spec = [None] * w.ndim
+    spec[f_dim] = "model"
+    return jax.lax.with_sharding_constraint(w, P(*spec))
+
+
+def _ffn_block(cfg: TransformerConfig, p: dict, x):
+    """Returns (out, aux_loss)."""
+    b, s, d = x.shape
+    y = rms_norm(x, p["ln_mlp"], cfg.norm_eps)
+    if cfg.is_moe:
+        from repro.models.transformer.moe import moe_ffn_grouped
+
+        # NOTE: no _gather_weight here — the grouped shard_map declares the
+        # all-axes (ZeRO) layout in its in_specs and all-gathers over the DP
+        # axes itself; constraining first would just double the resharding.
+        out, aux = moe_ffn_grouped(
+            y.reshape(b * s, d), p["router"], p["w_in"], p["w_out"],
+            top_k=cfg.top_k, capacity_factor=cfg.capacity_factor,
+            act=cfg.act, gated=cfg.gated_mlp,
+            groups=cfg.moe_groups, group_axes=cfg.seq_parallel,
+        )
+        out = out.reshape(b, s, d)
+    else:
+        w_in = _gather_weight(cfg, p["w_in"], 1)  # (D, F*)
+        w_out = _gather_weight(cfg, p["w_out"], 0)  # (F, D)
+        h = jnp.einsum("bsd,df->bsf", y, w_in)
+        if cfg.gated_mlp:
+            g, u = jnp.split(h, 2, axis=-1)
+            h = ACTIVATIONS[cfg.act](g) * u
+        else:
+            h = ACTIVATIONS[cfg.act](h)
+        out = jnp.einsum("bsf,fd->bsd", h, w_out)
+        aux = jnp.zeros((), jnp.float32)
+    if cfg.post_norms:
+        out = rms_norm(out, p["ln_post_mlp"], cfg.norm_eps)
+    return out, aux
+
+
+def _layer(cfg, p, x, positions, is_local, cache=None, cache_len=None):
+    attn_out, new_cache = _attn_block(cfg, p, x, positions, is_local, cache, cache_len)
+    x = x + attn_out
+    ffn_out, aux = _ffn_block(cfg, p, x)
+    return x + ffn_out, aux, new_cache
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _sharded_embed_lookup(meta, embed, tokens):
+    return embed[tokens]
+
+
+def _sel_fwd(meta, embed, tokens):
+    return embed[tokens], tokens
+
+
+def _sel_bwd(meta, tokens, g):
+    """Vocab-parallel embedding gradient (Megatron style).
+
+    A plain ``zeros.at[tokens].add(g)`` makes SPMD materialize the FULL
+    (V, D) f32 cotangent before any sharding constraint applies (gemma3:
+    6 x 5.25 GiB measured). Instead each model shard scatters only its own
+    vocab row range locally under shard_map, then psums over the
+    data-parallel axes — peak is (V/n_model, D) per device."""
+    vocab, d_model, dtype_str, dp = meta
+    mesh = None
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+        if mesh is None or not mesh.axis_names or "model" not in mesh.axis_names:
+            mesh = None
+    except Exception:
+        mesh = None
+    if mesh is None or dp is None:
+        d_embed = jnp.zeros((vocab, d_model), g.dtype).at[tokens].add(g)
+        return d_embed.astype(jnp.dtype(dtype_str)), None
+
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    n_model = mesh.shape["model"]
+    rows = vocab // n_model
+    dp_t = tuple(dp)
+
+    def local(tok, g_loc):
+        my = jax.lax.axis_index("model")
+        idx = tok - my * rows
+        valid = (idx >= 0) & (idx < rows)
+        idx = jnp.where(valid, idx, rows)  # out of bounds -> dropped
+        d_loc = jnp.zeros((rows, d_model), g_loc.dtype).at[idx].add(
+            jnp.where(valid[..., None], g_loc, 0.0), mode="drop")
+        for ax in dp_t:
+            d_loc = jax.lax.psum(d_loc, ax)
+        return d_loc
+
+    d_embed = shard_map(
+        local, mesh=mesh,
+        in_specs=(P(dp_t, None), P(dp_t, None, None)),
+        out_specs=P("model", None),
+    )(tokens, g)
+    return d_embed.astype(jnp.dtype(dtype_str)), None
+
+
+_sharded_embed_lookup.defvjp(_sel_fwd, _sel_bwd)
+
+
+def embed_tokens(cfg: TransformerConfig, params, tokens):
+    if cfg.zero3_gather:  # distributed mode: sharded-cotangent lookup
+        x = _sharded_embed_lookup(
+            (cfg.vocab, cfg.d_model, cfg.dtype, cfg.seq_parallel),
+            params["embed"], tokens)
+    else:
+        x = params["embed"][tokens]
+    if cfg.embed_scale:
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), x.dtype)
+    return x
+
+
+def _seq_shard(cfg: TransformerConfig, x):
+    """Sequence-parallel annotation for the residual stream (see config)."""
+    if cfg.seq_parallel is None:
+        return x
+    from jax.sharding import PartitionSpec as P
+
+    return jax.lax.with_sharding_constraint(
+        x, P(tuple(cfg.seq_parallel), "model", None)
+    )
+
+
+def forward_hidden(cfg: TransformerConfig, params, tokens, positions):
+    """Token ids -> final hidden states (B, S, D); scan over periods."""
+    x = embed_tokens(cfg, params, tokens)
+    kinds = cfg.layer_kinds()
+    per = _period(cfg)
+
+    def body(carry, period_params):
+        # Remat is PER LAYER, not per period: a period-level checkpoint
+        # keeps all ``per`` layers' residuals live during the body backward
+        # (gemma3's 5:1 pattern -> 6x residual concurrency, measured +25
+        # GiB). Per-layer checkpoints bound it to one layer while the scan
+        # still saves only one carry per period.
+        x, aux = carry
+        x = _seq_shard(cfg, x)
+        for j in range(per):
+            def layer_fn(x_, p_, _j=j):
+                out, a_, _ = _layer(cfg, p_, x_, positions, kinds[_j])
+                return out, a_
+
+            if cfg.remat:
+                layer_fn = jax.checkpoint(layer_fn, prevent_cse=False)
+            x, a = layer_fn(x, period_params[j])
+            aux = aux + a
+        return (_seq_shard(cfg, x), aux), None
+
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                               params["layers"])
+    n_scanned = (cfg.n_layers // per) * per
+    for j, p_tail in enumerate(params["tail"]):
+        # tail layers get the same remat treatment as the scanned stack —
+        # unrematted they each pin full attention residuals (§Perf it. 7)
+        def tail_fn(x_, p_):
+            out, a_, _ = _layer(cfg, p_, x_, positions, kinds[n_scanned + j])
+            return out, a_
+
+        if cfg.remat:
+            tail_fn = jax.checkpoint(tail_fn, prevent_cse=False)
+        x, a = tail_fn(x, p_tail)
+        aux = aux + a
+    x = rms_norm(x, params["ln_final"], cfg.norm_eps)
+    return x, aux
+
+
+def logits_from_hidden(cfg: TransformerConfig, params, hidden):
+    w = params["embed"].T if cfg.tie_embed else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", hidden, w)
+    return softcap(logits, cfg.final_softcap)
+
+
+def chunked_ce_loss(cfg: TransformerConfig, params, hidden, labels,
+                    mask=None):
+    """Vocab-parallel chunked cross entropy; never materializes (B,S,V)."""
+    b, s, d = hidden.shape
+    chunk = min(cfg.ce_chunk, s)
+    n = -(-s // chunk)
+    pad = n * chunk - s
+    hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+    labels = jnp.pad(labels, ((0, 0), (0, pad)))
+    if mask is None:
+        mask = jnp.ones((b, s), jnp.float32)
+    mask = jnp.pad(mask, ((0, 0), (0, pad)))
+    w = params["embed"].T if cfg.tie_embed else params["lm_head"]
+
+    @functools.partial(jax.checkpoint, prevent_cse=False)
+    def chunk_loss(i, acc):
+        # remat: without this the loss scan's backward would hold every
+        # chunk's (B, chunk, V/model) f32 logits (~4 GiB at gemma scale).
+        h_c = jax.lax.dynamic_slice_in_dim(hidden, i * chunk, chunk, 1)
+        l_c = jax.lax.dynamic_slice_in_dim(labels, i * chunk, chunk, 1)
+        m_c = jax.lax.dynamic_slice_in_dim(mask, i * chunk, chunk, 1)
+        logits = softcap(
+            jnp.einsum("bsd,dv->bsv", h_c, w).astype(jnp.float32),
+            cfg.final_softcap,
+        )
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        true = jnp.take_along_axis(logits, l_c[..., None], axis=-1)[..., 0]
+        return acc + jnp.sum((lse - true) * m_c)
+
+    total = jax.lax.fori_loop(0, n, chunk_loss, jnp.zeros((), jnp.float32))
+    return total / jnp.maximum(mask.sum(), 1.0)
+
+
+def lm_loss(cfg: TransformerConfig, params, tokens, labels,
+            aux_weight: float = 0.01):
+    positions = jnp.arange(tokens.shape[1], dtype=jnp.int32)[None, :]
+    hidden, aux = forward_hidden(cfg, params, tokens, positions)
+    ce = chunked_ce_loss(cfg, params, hidden, labels)
+    return ce + aux_weight * aux, {"ce": ce, "aux": aux}
+
+
+# --------------------------------------------------------------- serving --
+
+class KVCache(NamedTuple):
+    k: jax.Array  # (n_per, per, B, S_max, KV, Dh)
+    v: jax.Array
+    k_tail: jax.Array  # (rem, B, S_max, KV, Dh) — possibly rem == 0
+    v_tail: jax.Array
+    length: jax.Array  # scalar int32
+
+
+def init_cache(cfg: TransformerConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> KVCache:
+    per = _period(cfg)
+    n_per = cfg.n_layers // per
+    rem = cfg.n_layers - n_per * per
+    shape = (n_per, per, batch, max_len, cfg.n_kv_heads, cfg.d_head)
+    tail_shape = (rem, batch, max_len, cfg.n_kv_heads, cfg.d_head)
+    return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype),
+                   jnp.zeros(tail_shape, dtype), jnp.zeros(tail_shape, dtype),
+                   jnp.zeros((), jnp.int32))
+
+
+def prefill(cfg: TransformerConfig, params, tokens, cache: KVCache):
+    """Run the prompt through the model, filling the cache; returns
+    (next-token logits, cache)."""
+    b, s = tokens.shape
+    positions = jnp.arange(s, dtype=jnp.int32)[None, :]
+    x = embed_tokens(cfg, params, tokens)
+    kinds = cfg.layer_kinds()
+    per = _period(cfg)
+
+    def body(x, scanned):
+        period_params, k_cache, v_cache = scanned
+        new_ks, new_vs = [], []
+        for j in range(per):
+            cache_j = (k_cache[j], v_cache[j])
+            x_new, _, (k_j, v_j) = _layer(
+                cfg, period_params[j], x, positions, kinds[j],
+                cache=cache_j, cache_len=jnp.zeros((), jnp.int32))
+            x = x_new
+            new_ks.append(k_j)
+            new_vs.append(v_j)
+        return x, (jnp.stack(new_ks), jnp.stack(new_vs))
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, (ks, vs) = jax.lax.scan(body, x, (params["layers"], cache.k, cache.v))
+    n_scanned = (cfg.n_layers // per) * per
+    tail_ks, tail_vs = [], []
+    for j, p_tail in enumerate(params["tail"]):
+        x, _, (k_j, v_j) = _layer(
+            cfg, p_tail, x, positions, kinds[n_scanned + j],
+            cache=(cache.k_tail[j], cache.v_tail[j]),
+            cache_len=jnp.zeros((), jnp.int32))
+        tail_ks.append(k_j)
+        tail_vs.append(v_j)
+    k_tail = jnp.stack(tail_ks) if tail_ks else cache.k_tail
+    v_tail = jnp.stack(tail_vs) if tail_vs else cache.v_tail
+    x = rms_norm(x, params["ln_final"], cfg.norm_eps)
+    logits = logits_from_hidden(cfg, params, x[:, -1:])
+    return logits, KVCache(ks, vs, k_tail, v_tail, jnp.asarray(s, jnp.int32))
+
+
+def decode_step(cfg: TransformerConfig, params, tokens, cache: KVCache):
+    """One decode step: tokens (B, 1) -> (logits, updated cache)."""
+    positions = jnp.full((tokens.shape[0], 1), cache.length, jnp.int32)
+    x = embed_tokens(cfg, params, tokens)
+    kinds = cfg.layer_kinds()
+    per = _period(cfg)
+
+    def body(x, scanned):
+        period_params, k_cache, v_cache = scanned
+        new_ks, new_vs = [], []
+        for j in range(per):
+            x, _, (k_j, v_j) = _layer(
+                cfg, period_params[j], x, positions, kinds[j],
+                cache=(k_cache[j], v_cache[j]), cache_len=cache.length)
+            new_ks.append(k_j)
+            new_vs.append(v_j)
+        return x, (jnp.stack(new_ks), jnp.stack(new_vs))
+
+    x, (ks, vs) = jax.lax.scan(body, x, (params["layers"], cache.k, cache.v))
+    n_scanned = (cfg.n_layers // per) * per
+    tail_ks, tail_vs = [], []
+    for j, p_tail in enumerate(params["tail"]):
+        x, _, (k_j, v_j) = _layer(
+            cfg, p_tail, x, positions, kinds[n_scanned + j],
+            cache=(cache.k_tail[j], cache.v_tail[j]), cache_len=cache.length)
+        tail_ks.append(k_j)
+        tail_vs.append(v_j)
+    k_tail = jnp.stack(tail_ks) if tail_ks else cache.k_tail
+    v_tail = jnp.stack(tail_vs) if tail_vs else cache.v_tail
+    x = rms_norm(x, params["ln_final"], cfg.norm_eps)
+    logits = logits_from_hidden(cfg, params, x)
+    return logits, KVCache(ks, vs, k_tail, v_tail, cache.length + 1)

@@ -1,0 +1,18 @@
+from repro.streams.generators import (
+    DATASETS,
+    FileStream,
+    StreamSpec,
+    SyntheticStream,
+    make_stream,
+)
+from repro.streams.reservoir import Reservoir, sample_stream
+
+__all__ = [
+    "DATASETS",
+    "FileStream",
+    "StreamSpec",
+    "SyntheticStream",
+    "make_stream",
+    "Reservoir",
+    "sample_stream",
+]

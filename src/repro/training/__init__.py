@@ -1,0 +1,21 @@
+from repro.training.optimizer import (
+    AdamWConfig,
+    AdamWState,
+    adamw_init,
+    adamw_update,
+    cosine_warmup_lr,
+    global_norm,
+)
+from repro.training.steps import TrainState, init_train_state, make_train_step
+
+__all__ = [
+    "AdamWConfig",
+    "AdamWState",
+    "adamw_init",
+    "adamw_update",
+    "cosine_warmup_lr",
+    "global_norm",
+    "TrainState",
+    "init_train_state",
+    "make_train_step",
+]

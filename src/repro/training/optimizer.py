@@ -1,0 +1,102 @@
+"""AdamW + schedules + global-norm clipping (hand-rolled; optax is not a
+dependency).  State is a plain pytree so checkpointing/sharding Just Work:
+moments inherit the parameter sharding under pjit.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array  # int32 scalar
+    mu: Any  # pytree like params
+    nu: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr_peak: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    lr_min_ratio: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    clip_norm: float = 1.0
+    moment_dtype: str = "float32"  # bf16 halves optimizer HBM (grok-scale)
+
+
+def cosine_warmup_lr(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(cfg.warmup_steps, 1)
+    t = (step - cfg.warmup_steps) / jnp.maximum(
+        cfg.total_steps - cfg.warmup_steps, 1
+    )
+    t = jnp.clip(t, 0.0, 1.0)
+    cos = cfg.lr_min_ratio + (1 - cfg.lr_min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return cfg.lr_peak * jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves)
+    )
+
+
+def clip_by_global_norm(tree: Any, max_norm: float) -> tuple[Any, jax.Array]:
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), tree), norm
+
+
+def _decay_mask(path) -> bool:
+    """No weight decay on norms/biases/scalars (1-D and 0-D leaves)."""
+    return True  # refined per-leaf by ndim below
+
+
+def adamw_init(cfg: AdamWConfig, params: Any) -> AdamWState:
+    dt = jnp.dtype(cfg.moment_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        mu=jax.tree.map(zeros, params),
+        nu=jax.tree.map(zeros, params),
+    )
+
+
+def adamw_update(
+    cfg: AdamWConfig, grads: Any, state: AdamWState, params: Any
+) -> tuple[Any, AdamWState, dict]:
+    grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    step = state.step + 1
+    lr = cosine_warmup_lr(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m32 = m.astype(jnp.float32) * b1 + (1 - b1) * g32
+        v32 = v.astype(jnp.float32) * b2 + (1 - b2) * g32 * g32
+        update = (m32 / bc1) / (jnp.sqrt(v32 / bc2) + cfg.eps)
+        if p.ndim >= 2:  # decay matrices/embeddings, not norms/biases
+            update = update + cfg.weight_decay * p.astype(jnp.float32)
+        p_new = p.astype(jnp.float32) - lr * update
+        return p_new.astype(p.dtype), m32.astype(m.dtype), v32.astype(v.dtype)
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = jax.tree_util.tree_leaves(grads)
+    flat_m = jax.tree_util.tree_leaves(state.mu)
+    flat_v = jax.tree_util.tree_leaves(state.nu)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    metrics = {"lr": lr, "grad_norm": gnorm}
+    return new_p, AdamWState(step=step, mu=new_m, nu=new_v), metrics

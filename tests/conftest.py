@@ -1,0 +1,13 @@
+import os
+
+# Smoke tests and benches must see exactly ONE device; only launch/dryrun.py
+# force-sets 512 host devices (and it does so before importing jax).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,102 @@
+"""Assigned-architecture config fidelity: every number from the assignment
+table must appear verbatim, and every (arch x shape) cell must BUILD
+(eval_shape only — compilation is the dry-run's job)."""
+import numpy as np
+import pytest
+
+from repro.configs.lm import LM_CONFIGS
+from repro.configs.registry import all_cells, archs
+from repro.configs.shapes import GNN_SHAPES, LM_SHAPES, RECSYS_SHAPES
+
+
+def test_gemma2_2b_assignment():
+    c = LM_CONFIGS["gemma2-2b"]
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff, c.vocab) \
+        == (26, 2304, 8, 4, 9216, 256_000)
+    assert c.layer_pattern == ("local", "global")  # alternating
+    assert c.attn_softcap and c.final_softcap  # logit softcaps
+
+
+def test_internlm2_20b_assignment():
+    c = LM_CONFIGS["internlm2-20b"]
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff, c.vocab) \
+        == (48, 6144, 48, 8, 16384, 92_544)
+    assert c.is_pure_global
+
+
+def test_gemma3_27b_assignment():
+    c = LM_CONFIGS["gemma3-27b"]
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff, c.vocab) \
+        == (62, 5376, 32, 16, 21504, 262_144)
+    # 5:1 local:global
+    kinds = c.layer_kinds()
+    assert sum(kinds) / len(kinds) == pytest.approx(5 / 6, abs=0.03)
+
+
+def test_mixtral_assignment():
+    c = LM_CONFIGS["mixtral-8x7b"]
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff, c.vocab) \
+        == (32, 4096, 32, 8, 14336, 32_000)
+    assert (c.n_experts, c.top_k) == (8, 2)
+    # ~46.7B total / ~12.9B active
+    assert abs(c.param_count() / 1e9 - 46.7) < 2.0
+    assert abs(c.active_param_count() / 1e9 - 12.9) < 1.0
+
+
+def test_grok_assignment():
+    c = LM_CONFIGS["grok-1-314b"]
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff, c.vocab) \
+        == (64, 6144, 48, 8, 32768, 131_072)
+    assert (c.n_experts, c.top_k) == (8, 2)
+    assert abs(c.param_count() / 1e9 - 314) < 20
+
+
+def test_gnn_assignments():
+    a = archs()
+    gc = a["graphcast"].config
+    assert (gc.n_layers, gc.d_hidden, gc.n_vars) == (16, 512, 227)
+    gg = a["gatedgcn"].config
+    assert (gg.n_layers, gg.d_hidden, gg.aggregator) == (16, 70, "gated")
+    eq = a["equiformer-v2"].config
+    assert (eq.n_layers, eq.d_hidden, eq.l_max, eq.m_max, eq.n_heads) \
+        == (12, 128, 6, 2, 8)
+    nq = a["nequip"].config
+    assert (nq.n_layers, nq.d_hidden, nq.l_max, nq.n_rbf, nq.cutoff) \
+        == (5, 32, 2, 8, 5.0)
+
+
+def test_fm_assignment():
+    c = archs()["fm"].config
+    assert (c.n_fields, c.embed_dim, c.interaction) == (39, 10, "fm-2way")
+
+
+def test_shape_tables_match_assignment():
+    assert LM_SHAPES["train_4k"].seq_len == 4096
+    assert LM_SHAPES["train_4k"].global_batch == 256
+    assert LM_SHAPES["prefill_32k"].global_batch == 32
+    assert LM_SHAPES["decode_32k"].global_batch == 128
+    assert LM_SHAPES["long_500k"].seq_len == 524_288
+    assert GNN_SHAPES["full_graph_sm"].n_nodes == 2_708  # cora
+    assert GNN_SHAPES["minibatch_lg"].fanout == (15, 10)
+    assert GNN_SHAPES["ogb_products"].n_nodes == 2_449_029
+    assert GNN_SHAPES["molecule"].batch_graphs == 128
+    assert RECSYS_SHAPES["train_batch"].batch == 65_536
+    assert RECSYS_SHAPES["retrieval_cand"].n_candidates == 1_000_000
+
+
+def test_cell_enumeration():
+    cells = all_cells()
+    assert len(cells) == 38  # 18 LM (2 long_500k skips) + 16 GNN + 4 recsys
+    # skip rules honoured
+    assert ("internlm2-20b", "long_500k") not in cells
+    assert ("grok-1-314b", "long_500k") not in cells
+    assert ("mixtral-8x7b", "long_500k") in cells  # SWA -> sub-quadratic
+    assert ("gemma3-27b", "long_500k") in cells
+
+
+def test_every_arch_selectable():
+    assert set(archs()) == {
+        "gemma2-2b", "internlm2-20b", "gemma3-27b", "mixtral-8x7b",
+        "grok-1-314b", "graphcast", "gatedgcn", "equiformer-v2", "nequip",
+        "fm",
+    }

@@ -1,0 +1,118 @@
+"""Distributed sketch (shard_map DP + partition-parallel) on 8 forced host
+devices. Runs in a subprocess so the forced device count never leaks into
+other tests (jax locks device count at first init)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import EdgeBatch, KMatrix, kmatrix, vertex_stats_from_sample
+from repro.core.metrics import exact_edge_frequencies, lookup_exact
+from repro.distributed.sketch_parallel import (
+    build_owner_map,
+    make_dp_edge_freq,
+    make_dp_ingest,
+    make_pp_edge_freq,
+    make_pp_ingest,
+)
+from repro.streams import make_stream, sample_stream
+
+assert len(jax.devices()) == 8
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+
+stream = make_stream("cit-HepPh", batch_size=2048, seed=3, scale=0.05)
+ssrc, sdst, sw = sample_stream(stream, 4000, seed=5)
+stats = vertex_stats_from_sample(ssrc, sdst, sw)
+sk0 = KMatrix.create(bytes_budget=1 << 16, stats=stats, depth=3, seed=1)
+
+# ---- reference: single-device ingest of the whole stream ----
+ref = sk0
+ing = jax.jit(kmatrix.ingest)
+for b in stream:
+    ref = ing(ref, b)
+src, dst, w = stream.all_edges_numpy()
+fmap = exact_edge_frequencies(src, dst, w)
+qs, qd, _ = sample_stream(stream, 512, seed=9)
+true = lookup_exact(fmap, qs, qd)
+ref_est = np.asarray(kmatrix.edge_freq(ref, jnp.asarray(qs), jnp.asarray(qd)))
+
+results = {}
+
+# ---- data-parallel: replicas over 'data', psum at query ----
+with jax.set_mesh(mesh):
+    dp_ingest = make_dp_ingest(sk0, mesh)
+    dp_query = make_dp_edge_freq(sk0, mesh)
+    n_data = mesh.shape["data"]
+    pool = jnp.broadcast_to(sk0.pool, (n_data,) + sk0.pool.shape).reshape(
+        (n_data * sk0.pool.shape[0],) + sk0.pool.shape[1:])
+    # state as stacked replicas: [n_data*d, pool] rows
+    pool = jnp.zeros((n_data * sk0.pool.shape[0], sk0.pool.shape[1]), jnp.int32)
+    conn = jnp.zeros((n_data * sk0.conn.shape[0],) + sk0.conn.shape[1:], jnp.int32)
+    for b in stream:
+        pool, conn = dp_ingest(pool, conn, b.src, b.dst, b.weight)
+    dp_est = np.asarray(dp_query(pool, conn, jnp.asarray(qs), jnp.asarray(qd)))
+results["dp_exact"] = bool((dp_est == ref_est).all())
+
+# ---- partition-parallel: allgather mode (exact) ----
+n_rep = mesh.shape["data"] * mesh.shape["model"]
+with jax.set_mesh(mesh):
+    pp_ingest, owner = make_pp_ingest(sk0, mesh, mode="allgather")
+    pp_query = make_pp_edge_freq(sk0, mesh)
+    pool = jnp.zeros((n_rep * sk0.pool.shape[0], sk0.pool.shape[1]), jnp.int32)
+    conn = jnp.zeros((n_rep * sk0.conn.shape[0],) + sk0.conn.shape[1:], jnp.int32)
+    for b in stream:
+        pool, conn, dropped = pp_ingest(pool, conn, b.src, b.dst, b.weight)
+    ag_est = np.asarray(pp_query(pool, conn, jnp.asarray(qs), jnp.asarray(qd)))
+results["pp_allgather_exact"] = bool((ag_est == ref_est).all())
+
+# ---- partition-parallel: a2a mode ----
+# cf=4: at this toy scale each model rank handles only B/8 edges, so
+# buckets are small and the heavy band overflows at cf=2 (~10% drops);
+# production capacity is sized from the balanced-band load (see DESIGN).
+with jax.set_mesh(mesh):
+    pp_ingest, owner = make_pp_ingest(sk0, mesh, mode="a2a", capacity_factor=4.0)
+    pool = jnp.zeros((n_rep * sk0.pool.shape[0], sk0.pool.shape[1]), jnp.int32)
+    conn = jnp.zeros((n_rep * sk0.conn.shape[0],) + sk0.conn.shape[1:], jnp.int32)
+    total_dropped = 0
+    for b in stream:
+        pool, conn, dropped = pp_ingest(pool, conn, b.src, b.dst, b.weight)
+        total_dropped += int(dropped)
+    a2a_est = np.asarray(pp_query(pool, conn, jnp.asarray(qs), jnp.asarray(qd)))
+results["a2a_dropped"] = total_dropped
+results["a2a_overcount_ok"] = bool((a2a_est <= ref_est).all())
+results["owner_balanced"] = bool(np.bincount(owner, minlength=4).max()
+                                 <= len(owner))
+
+print("RESULTS:" + json.dumps(results))
+"""
+
+
+@pytest.mark.slow
+def test_distributed_sketch_modes(tmp_path):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    proc = subprocess.run(
+        [sys.executable, "-c", _SCRIPT], env=env, capture_output=True,
+        text=True, timeout=1200,
+    )
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULTS:")]
+    assert line, proc.stdout
+    results = json.loads(line[0][len("RESULTS:"):])
+    assert results["dp_exact"], results
+    assert results["pp_allgather_exact"], results
+    # a2a estimates can only UNDER-count relative to the exact reference
+    # when capacity drops edges; with cf=4 drops should be rare (<2% of
+    # the ~21k-edge stream at this 8-device toy scale)
+    assert results["a2a_overcount_ok"], results
+    assert results["a2a_dropped"] < 450, results

@@ -1,0 +1,64 @@
+"""Dry-run harness units: HLO collective parsing, cell registry building,
+and one real (small) lower+compile on a subprocess production mesh."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.launch.dryrun import _result_bytes, parse_collectives
+
+
+def test_result_bytes_parsing():
+    line = ("  %all-gather.1 = bf16[16,4608,128]{2,1,0} "
+            "all-gather(%x), replica_groups=...")
+    assert _result_bytes(line) == 16 * 4608 * 128 * 2
+    line2 = "%ar = f32[128]{0} all-reduce(%y)"
+    assert _result_bytes(line2) == 512
+
+
+def test_parse_collectives_loop_multiplier():
+    hlo = """
+ENTRY %main {
+  %a = f32[100]{0} all-reduce(%x)
+}
+%while_body.1 {
+  %b = bf16[10,10]{1,0} all-gather(%y)
+}
+"""
+    out = parse_collectives(hlo, loop_multiplier=5)
+    # all-reduce outside loop: 100*4*2 (ring factor) = 800
+    assert out["bytes"]["all-reduce"] == 800
+    # all-gather inside while body: 10*10*2 * 5 = 1000
+    assert out["bytes"]["all-gather"] == 1000
+    assert out["counts"]["all-gather"] == 1
+
+
+_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import json
+from repro.launch.dryrun import run_cell
+rec = run_cell("fm", "serve_p99", multi_pod=False, verbose=False)
+print("REC:" + json.dumps({"ok": rec["ok"],
+                            "mesh": rec["mesh"],
+                            "peak": rec.get("memory", {}).get("peak_bytes")}))
+rec2 = run_cell("fm", "serve_p99", multi_pod=True, verbose=False)
+print("REC:" + json.dumps({"ok": rec2["ok"], "mesh": rec2["mesh"]}))
+"""
+
+
+@pytest.mark.slow
+def test_dryrun_cell_compiles_on_production_meshes():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    proc = subprocess.run([sys.executable, "-c", _SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    recs = [json.loads(l[4:]) for l in proc.stdout.splitlines()
+            if l.startswith("REC:")]
+    assert len(recs) == 2
+    assert recs[0]["ok"] and recs[0]["mesh"] == "16x16"
+    assert recs[1]["ok"] and recs[1]["mesh"] == "2x16x16"
+    assert recs[0]["peak"] > 0

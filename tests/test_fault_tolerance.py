@@ -1,0 +1,120 @@
+"""Fault-tolerance: crash/restart bit-exactness, elastic re-sharding,
+straggler-tolerant merge semantics. These validate the 1000-node design
+contracts on a single host (see DESIGN.md §Fault-tolerance)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import store
+from repro.core import EdgeBatch, KMatrix, kmatrix, vertex_stats_from_sample
+from repro.streams import make_stream, sample_stream
+
+
+def _build(depth=3, budget=1 << 14):
+    stream = make_stream("cit-HepPh", batch_size=1024, seed=3, scale=0.02)
+    ssrc, sdst, sw = sample_stream(stream, 2000, seed=5)
+    stats = vertex_stats_from_sample(ssrc, sdst, sw)
+    sk = KMatrix.create(bytes_budget=budget, stats=stats, depth=depth, seed=1)
+    return stream, sk
+
+
+def test_crash_restart_is_bit_exact(tmp_path):
+    """Kill mid-stream, restore (sketch, offset), resume -> identical state."""
+    stream, sk0 = _build()
+    ing = jax.jit(kmatrix.ingest)
+
+    # uninterrupted run
+    ref = sk0
+    for b in stream:
+        ref = ing(ref, b)
+
+    # interrupted run: checkpoint at batch 4, "crash", restore, resume
+    sk = sk0
+    for i, b in stream.iter_from(0):
+        sk = ing(sk, b)
+        if i == 3:
+            store.save(str(tmp_path), i + 1, sk,
+                       extra={"stream_offset": i + 1, "seed": 3})
+            break
+    del sk  # crash
+
+    restored, meta = store.restore(str(tmp_path), sk0)
+    resume_from = meta["extra"]["stream_offset"]
+    sk = restored
+    for i, b in stream.iter_from(resume_from):
+        sk = ing(sk, b)
+
+    np.testing.assert_array_equal(np.asarray(sk.pool), np.asarray(ref.pool))
+    np.testing.assert_array_equal(np.asarray(sk.conn), np.asarray(ref.conn))
+
+
+def test_worker_failure_merge_recovery():
+    """Counters are additive: a failed worker's sub-stream can be replayed
+    by any other worker and merged — final state identical to no-failure."""
+    stream, sk0 = _build()
+    ing = jax.jit(kmatrix.ingest)
+    n = stream.num_batches
+
+    # 2 workers split batches even/odd; worker B dies after 2 batches.
+    worker_a, worker_b = sk0, sk0
+    done_b = []
+    for i in range(n):
+        if i % 2 == 0:
+            worker_a = ing(worker_a, stream.batch(i))
+        elif len(done_b) < 2:
+            worker_b = ing(worker_b, stream.batch(i))
+            done_b.append(i)
+    # worker C (replacement) replays B's unfinished shard via seekable stream
+    worker_c = sk0
+    for i in range(n):
+        if i % 2 == 1 and i not in done_b:
+            worker_c = ing(worker_c, stream.batch(i))
+
+    merged = kmatrix.merge(kmatrix.merge(worker_a, worker_b), worker_c)
+
+    ref = sk0
+    for b in stream:
+        ref = ing(ref, b)
+    np.testing.assert_array_equal(np.asarray(merged.pool), np.asarray(ref.pool))
+
+
+def test_elastic_rescale_data_parallel():
+    """Re-sharding a data-parallel run from 4 'workers' to 2 preserves the
+    global sketch exactly (merge is associative + commutative)."""
+    stream, sk0 = _build()
+    ing = jax.jit(kmatrix.ingest)
+    n = stream.num_batches
+
+    def run_workers(k):
+        workers = [sk0] * k
+        for i in range(n):
+            workers[i % k] = ing(workers[i % k], stream.batch(i))
+        out = workers[0]
+        for w in workers[1:]:
+            out = kmatrix.merge(out, w)
+        return out
+
+    a = run_workers(4)
+    b = run_workers(2)
+    np.testing.assert_array_equal(np.asarray(a.pool), np.asarray(b.pool))
+
+
+def test_straggler_mitigation_out_of_order_merge():
+    """Late (straggler) partial results can merge in any order."""
+    stream, sk0 = _build()
+    ing = jax.jit(kmatrix.ingest)
+    shards = []
+    for i in range(min(stream.num_batches, 6)):
+        shards.append(ing(sk0, stream.batch(i)))
+    import itertools
+
+    ref = None
+    for perm in list(itertools.permutations(range(len(shards))))[:4]:
+        acc = shards[perm[0]]
+        for j in perm[1:]:
+            acc = kmatrix.merge(acc, shards[j])
+        if ref is None:
+            ref = acc
+        else:
+            np.testing.assert_array_equal(np.asarray(acc.pool),
+                                          np.asarray(ref.pool))

@@ -1,0 +1,157 @@
+"""GNN smoke + property tests: reduced configs, shapes/finiteness, and
+rotation-equivariance of the geometric models (the invariant that matters)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.models.gnn import (
+    GraphBatch,
+    equiformer_v2,
+    gatedgcn,
+    graphcast,
+    nequip,
+    sampler,
+    so3,
+    synthetic_graph,
+)
+
+
+def _small_graph(seed=0, n=24, e=64, d=12, n_graphs=1, **kw):
+    return synthetic_graph(n, e, d, seed=seed, n_graphs=n_graphs, **kw)
+
+
+def test_gatedgcn_smoke():
+    cfg = gatedgcn.GatedGCNConfig(n_layers=3, d_hidden=16, d_out=4)
+    g = _small_graph(d=12)
+    params = gatedgcn.init_params(cfg, jax.random.PRNGKey(0), d_in=12)
+    out = jax.jit(lambda p, g_: gatedgcn.forward(cfg, p, g_))(params, g)
+    assert out.shape == (g.n_nodes, 4)
+    assert np.isfinite(np.asarray(out)).all()
+    # gradient flows
+    loss = lambda p: (gatedgcn.forward(cfg, p, g) ** 2).mean()
+    grads = jax.grad(loss)(params)
+    assert all(np.isfinite(np.asarray(x)).all() for x in jax.tree_util.tree_leaves(grads))
+
+
+def test_graphcast_smoke():
+    cfg = graphcast.GraphCastConfig(n_layers=2, d_hidden=32, n_vars=13)
+    g = _small_graph(d=13)
+    params = graphcast.init_params(cfg, jax.random.PRNGKey(1))
+    out = jax.jit(lambda p, g_: graphcast.forward(cfg, p, g_))(params, g)
+    assert out.shape == (g.n_nodes, 13)
+    assert np.isfinite(np.asarray(out)).all()
+
+
+def test_nequip_smoke_and_forces():
+    cfg = nequip.NequIPConfig(n_layers=2, d_hidden=8, l_max=2, edge_chunk=32)
+    g = _small_graph(d=5, n_graphs=3, n=10, e=24)
+    params = nequip.init_params(cfg, jax.random.PRNGKey(2), d_in=5)
+    e, forces = jax.jit(lambda p, g_: nequip.energy_and_forces(cfg, p, g_))(params, g)
+    assert e.shape == (3,)
+    assert forces.shape == g.positions.shape
+    assert np.isfinite(np.asarray(e)).all() and np.isfinite(np.asarray(forces)).all()
+
+
+def test_equiformer_smoke():
+    cfg = equiformer_v2.EquiformerV2Config(
+        n_layers=2, d_hidden=16, l_max=3, m_max=2, n_heads=4, edge_chunk=32
+    )
+    g = _small_graph(d=6, n_graphs=2, n=8, e=20)
+    params = equiformer_v2.init_params(cfg, jax.random.PRNGKey(3), d_in=6)
+    out = jax.jit(lambda p, g_: equiformer_v2.forward(cfg, p, g_))(params, g)
+    assert out.shape == (2,)
+    assert np.isfinite(np.asarray(out)).all()
+
+
+def _rotate_graph(g: GraphBatch, rot: np.ndarray) -> GraphBatch:
+    return g.replace(positions=jnp.asarray(np.asarray(g.positions) @ rot.T))
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_nequip_energy_rotation_invariant(seed):
+    cfg = nequip.NequIPConfig(n_layers=2, d_hidden=8, l_max=2, edge_chunk=32)
+    g = _small_graph(seed=seed, d=5, n=12, e=30)
+    params = nequip.init_params(cfg, jax.random.PRNGKey(4), d_in=5)
+    rot = so3._rot_z(0.7) @ so3._rot_y(-1.1) @ so3._rot_x(0.3)
+    e1 = nequip.energy(cfg, params, g, g.positions)
+    g2 = _rotate_graph(g, rot)
+    e2 = nequip.energy(cfg, params, g2, g2.positions)
+    np.testing.assert_allclose(np.asarray(e1), np.asarray(e2), rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_nequip_forces_rotation_equivariant(seed):
+    cfg = nequip.NequIPConfig(n_layers=2, d_hidden=8, l_max=2, edge_chunk=32)
+    g = _small_graph(seed=seed, d=5, n=12, e=30)
+    params = nequip.init_params(cfg, jax.random.PRNGKey(5), d_in=5)
+    rot = so3._rot_y(0.9) @ so3._rot_z(-0.4)
+    _, f1 = nequip.energy_and_forces(cfg, params, g)
+    g2 = _rotate_graph(g, rot)
+    _, f2 = nequip.energy_and_forces(cfg, params, g2)
+    np.testing.assert_allclose(
+        np.asarray(f1) @ rot.T, np.asarray(f2), rtol=1e-3, atol=1e-4
+    )
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_equiformer_energy_rotation_invariant(seed):
+    cfg = equiformer_v2.EquiformerV2Config(
+        n_layers=2, d_hidden=16, l_max=4, m_max=2, n_heads=4, edge_chunk=64
+    )
+    g = _small_graph(seed=seed, d=6, n=10, e=24)
+    params = equiformer_v2.init_params(cfg, jax.random.PRNGKey(6), d_in=6)
+    rot = so3._rot_x(1.2) @ so3._rot_z(0.5)
+    e1 = equiformer_v2.forward(cfg, params, g)
+    e2 = equiformer_v2.forward(cfg, params, _rotate_graph(g, rot))
+    np.testing.assert_allclose(np.asarray(e1), np.asarray(e2), rtol=1e-4, atol=1e-5)
+
+
+def test_nequip_translation_invariant():
+    cfg = nequip.NequIPConfig(n_layers=2, d_hidden=8, l_max=2, edge_chunk=32)
+    g = _small_graph(d=5, n=12, e=30)
+    params = nequip.init_params(cfg, jax.random.PRNGKey(7), d_in=5)
+    e1 = nequip.energy(cfg, params, g, g.positions)
+    e2 = nequip.energy(cfg, params, g, g.positions + jnp.asarray([3.0, -1.0, 2.0]))
+    np.testing.assert_allclose(np.asarray(e1), np.asarray(e2), rtol=1e-5)
+
+
+def test_edge_chunking_invariance():
+    """Results must not depend on the edge_chunk size (pure perf knob)."""
+    g = _small_graph(d=5, n=12, e=30)
+    params = nequip.init_params(
+        nequip.NequIPConfig(n_layers=2, d_hidden=8), jax.random.PRNGKey(8), d_in=5
+    )
+    outs = []
+    for chunk in [8, 30, 64]:
+        cfg = nequip.NequIPConfig(n_layers=2, d_hidden=8, edge_chunk=chunk)
+        outs.append(np.asarray(nequip.energy(cfg, params, g, g.positions)))
+    np.testing.assert_allclose(outs[0], outs[1], rtol=1e-5)
+    np.testing.assert_allclose(outs[0], outs[2], rtol=1e-5)
+
+
+def test_sampler_budgets_and_locality():
+    graph = sampler.random_regular_csr(5000, avg_degree=20, seed=0)
+    seeds = np.arange(64, dtype=np.int64)
+    nodes, src, dst, mask = sampler.sample_subgraph(graph, seeds, (15, 10), seed=1)
+    assert len(nodes) == 64 * (1 + 15 + 150)
+    assert len(src) == 64 * (15 + 150)
+    # all local ids in range, dst of hop-1 edges are seed slots
+    assert src.max() < len(nodes) and dst.max() < len(nodes)
+    assert (dst[: 64 * 15] < 64).all()
+    # message passing runs on the sampled subgraph
+    g = GraphBatch(
+        node_feat=jnp.asarray(np.random.default_rng(0).normal(size=(len(nodes), 8)), jnp.float32),
+        edge_src=jnp.asarray(src),
+        edge_dst=jnp.asarray(dst),
+        edge_feat=jnp.zeros((len(src), 8), jnp.float32),
+        positions=jnp.zeros((len(nodes), 3), jnp.float32),
+        node_mask=jnp.ones(len(nodes), jnp.float32),
+        edge_mask=jnp.asarray(mask),
+        graph_id=jnp.zeros(len(nodes), jnp.int32),
+        n_graphs=1,
+    )
+    cfg = gatedgcn.GatedGCNConfig(n_layers=2, d_hidden=16, d_out=4)
+    params = gatedgcn.init_params(cfg, jax.random.PRNGKey(0), d_in=8)
+    out = gatedgcn.forward(cfg, params, g)
+    assert np.isfinite(np.asarray(out)).all()

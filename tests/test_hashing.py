@@ -1,0 +1,81 @@
+"""Hash family invariants: determinism, range, uniformity, independence."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.common.hashing import HashFamily, fastrange, hash_pair_mix, np_hash_into
+
+
+def test_range_and_determinism():
+    fam = HashFamily.create(0, 5)
+    x = jnp.arange(10000, dtype=jnp.int32)
+    h1 = fam.hash_into(x, 1234)
+    h2 = fam.hash_into(x, 1234)
+    assert (np.asarray(h1) == np.asarray(h2)).all()
+    assert h1.shape == (5, 10000)
+    assert int(h1.min()) >= 0 and int(h1.max()) < 1234
+
+
+@given(w=st.integers(min_value=1, max_value=1 << 20), seed=st.integers(0, 1 << 16))
+@settings(max_examples=25, deadline=None)
+def test_fastrange_bounds(w, seed):
+    rng = np.random.default_rng(seed)
+    h = jnp.asarray(rng.integers(0, 1 << 32, size=256, dtype=np.uint32))
+    out = np.asarray(fastrange(h, w))
+    assert (out >= 0).all() and (out < w).all()
+
+
+def test_uniformity_chi2():
+    """Bucket counts should look uniform (loose 3-sigma bound on chi^2)."""
+    fam = HashFamily.create(42, 4)
+    w = 256
+    x = jnp.arange(1 << 16, dtype=jnp.int32)
+    h = np.asarray(fam.hash_into(x, w))
+    n = x.shape[0]
+    expected = n / w
+    for r in range(4):
+        counts = np.bincount(h[r], minlength=w)
+        chi2 = ((counts - expected) ** 2 / expected).sum()
+        # dof = w-1 -> mean ~255, std ~sqrt(2*255)~22.6
+        assert chi2 < 255 + 6 * 22.6, f"layer {r} chi2={chi2}"
+
+
+def test_layers_differ():
+    fam = HashFamily.create(7, 6)
+    x = jnp.arange(4096, dtype=jnp.int32)
+    h = np.asarray(fam.hash_into(x, 512))
+    for r in range(6):
+        for s in range(r + 1, 6):
+            agree = float((h[r] == h[s]).mean())
+            assert agree < 0.05, (r, s, agree)
+
+
+def test_pairwise_collision_rate():
+    """2-universal family: P[h(x)==h(y)] ~ 1/w for x != y."""
+    w = 128
+    rng = np.random.default_rng(3)
+    xs = jnp.asarray(rng.choice(1 << 30, size=2048, replace=False).astype(np.int32))
+    fam = HashFamily.create(11, 8)
+    h = np.asarray(fam.hash_into(xs, w))  # [8, 2048]
+    rate = []
+    for r in range(8):
+        hh = h[r]
+        eq = (hh[:, None] == hh[None, :]).sum() - len(hh)
+        rate.append(eq / (len(hh) * (len(hh) - 1)))
+    mean_rate = float(np.mean(rate))
+    assert abs(mean_rate - 1.0 / w) < 0.3 / w, mean_rate
+
+
+def test_np_oracle_matches_jax():
+    fam = HashFamily.create(5, 3)
+    x = np.arange(1000, dtype=np.int32)
+    ours = np.asarray(fam.hash_into(jnp.asarray(x), 777))
+    oracle = np_hash_into(np.asarray(fam.a), np.asarray(fam.b), x, 777)
+    assert (ours == oracle).all()
+
+
+def test_hash_pair_mix_asymmetric():
+    a = jnp.asarray([1, 2, 3], dtype=jnp.int32)
+    b = jnp.asarray([3, 2, 1], dtype=jnp.int32)
+    assert int(hash_pair_mix(a, b)[0]) != int(hash_pair_mix(b, a)[0])

@@ -1,0 +1,59 @@
+"""Metric definitions (paper Eqs. 9-12) + estimator-theory sanity checks."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.metrics import (
+    average_relative_error,
+    effective_queries,
+    exact_edge_frequencies,
+    lookup_exact,
+    percent_effective_queries,
+    relative_error,
+)
+
+
+def test_relative_error_eq9():
+    est = jnp.asarray([4.0, 2.0, 10.0])
+    true = jnp.asarray([2.0, 2.0, 5.0])
+    np.testing.assert_allclose(np.asarray(relative_error(est, true)),
+                               [1.0, 0.0, 1.0])
+
+
+def test_are_eq10_with_mask():
+    est = jnp.asarray([4.0, 2.0, 100.0])
+    true = jnp.asarray([2.0, 2.0, 1.0])
+    valid = jnp.asarray([1.0, 1.0, 0.0])
+    assert float(average_relative_error(est, true, valid)) == pytest.approx(0.5)
+
+
+def test_neq_peq_eq11_12():
+    est = jnp.asarray([5.0, 10.0, 100.0, 7.0])
+    true = jnp.asarray([4.0, 4.0, 4.0, 7.0])
+    assert int(effective_queries(est, true, g0=1.0)) == 2  # |err| <= 1
+    assert float(percent_effective_queries(est, true, g0=1.0)) == 50.0
+
+
+@given(seed=st.integers(0, 500), n=st.integers(1, 200))
+@settings(max_examples=20, deadline=None)
+def test_exact_frequency_oracle(seed, n):
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, 20, n).astype(np.int32)
+    dst = rng.integers(0, 20, n).astype(np.int32)
+    w = rng.integers(1, 5, n).astype(np.int64)
+    fmap = exact_edge_frequencies(src, dst, w)
+    # total mass conserved
+    assert sum(fmap.values()) == pytest.approx(float(w.sum()))
+    # lookups match a brute-force count
+    got = lookup_exact(fmap, src[:5], dst[:5])
+    for i in range(min(5, n)):
+        brute = w[(src == src[i]) & (dst == dst[i])].sum()
+        assert got[i] == pytest.approx(float(brute))
+
+
+def test_unseen_edges_zero():
+    fmap = exact_edge_frequencies(np.asarray([1]), np.asarray([2]),
+                                  np.asarray([3]))
+    out = lookup_exact(fmap, np.asarray([9]), np.asarray([9]))
+    assert out[0] == 0.0

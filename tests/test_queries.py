@@ -1,0 +1,88 @@
+"""Type II query surface: reachability (vs networkx oracle), heavy hitters, paths."""
+import networkx as nx
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import EdgeBatch, KMatrix, MatrixSketch, vertex_stats_from_sample
+from repro.core import kmatrix, matrix_sketch
+from repro.core import queries
+
+
+def _graph(seed=0, n_nodes=40, n_edges=80):
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n_nodes, n_edges).astype(np.int32)
+    dst = rng.integers(0, n_nodes, n_edges).astype(np.int32)
+    keep = src != dst
+    return src[keep], dst[keep]
+
+
+def test_reachability_no_false_negatives():
+    """Sketch reachability may overconnect (collisions) but never misses."""
+    src, dst = _graph(0)
+    sk = MatrixSketch.create(bytes_budget=1 << 18, depth=4, seed=9)
+    sk = matrix_sketch.ingest(sk, EdgeBatch.from_numpy(src, dst))
+    g = nx.DiGraph(zip(src.tolist(), dst.tolist()))
+    qs, qd, truth = [], [], []
+    nodes = sorted(g.nodes())
+    for a in nodes[:15]:
+        for b in nodes[:15]:
+            if a == b:
+                continue
+            qs.append(a)
+            qd.append(b)
+            truth.append(nx.has_path(g, a, b))
+    est = np.asarray(
+        queries.reachability(sk, jnp.asarray(qs, jnp.int32), jnp.asarray(qd, jnp.int32))
+    )
+    truth = np.asarray(truth)
+    assert (est | ~truth).all(), "false negative in sketch reachability"
+    # With a huge sketch relative to graph size we expect few false positives.
+    fp_rate = float((est & ~truth).mean())
+    assert fp_rate < 0.25, fp_rate
+
+
+def test_kmatrix_reachability_no_false_negatives():
+    src, dst = _graph(1)
+    stats = vertex_stats_from_sample(src, dst)
+    sk = KMatrix.create(bytes_budget=1 << 18, stats=stats, depth=4, seed=3, conn_frac=0.5)
+    sk = kmatrix.ingest(sk, EdgeBatch.from_numpy(src, dst))
+    g = nx.DiGraph(zip(src.tolist(), dst.tolist()))
+    nodes = sorted(g.nodes())[:12]
+    qs = np.repeat(nodes, len(nodes)).astype(np.int32)
+    qd = np.tile(nodes, len(nodes)).astype(np.int32)
+    truth = np.asarray([nx.has_path(g, a, b) for a, b in zip(qs, qd)])
+    est = np.asarray(queries.kmatrix_reachability(sk, jnp.asarray(qs), jnp.asarray(qd)))
+    assert (est | ~truth).all()
+
+
+def test_heavy_nodes_sweep_finds_the_heavy_vertex():
+    n_nodes = 100
+    src = np.concatenate([np.full(500, 7, np.int32), np.arange(50, dtype=np.int32)])
+    dst = np.concatenate(
+        [np.arange(500, dtype=np.int32) % 90, (np.arange(50, dtype=np.int32) + 1) % 100]
+    ).astype(np.int32)
+    sk = MatrixSketch.create(bytes_budget=1 << 18, depth=4, seed=5)
+    sk = matrix_sketch.ingest(sk, EdgeBatch.from_numpy(src, dst))
+    ids, freqs = queries.heavy_nodes(
+        lambda v: matrix_sketch.node_out_freq(sk, v), n_nodes, threshold=400, chunk=64
+    )
+    ids = np.asarray(ids)
+    found = set(ids[ids >= 0].tolist())
+    assert 7 in found
+    assert len(found) <= 5  # few false positives at this budget
+
+
+def test_heavy_edges_and_path_weight():
+    src = np.asarray([1, 1, 2, 3], np.int32)
+    dst = np.asarray([2, 2, 3, 4], np.int32)
+    w = np.asarray([5, 5, 2, 1], np.int32)
+    sk = MatrixSketch.create(bytes_budget=1 << 16, depth=4, seed=6)
+    sk = matrix_sketch.ingest(sk, EdgeBatch.from_numpy(src, dst, w))
+    fn = lambda s, d: matrix_sketch.edge_freq(sk, s, d)
+    keep, est, _ = queries.heavy_edges(
+        fn, jnp.asarray([1, 2, 3], jnp.int32), jnp.asarray([2, 3, 4], jnp.int32), 5
+    )
+    assert np.asarray(keep).tolist() == [True, False, False]
+    pw = queries.path_weight(fn, jnp.asarray([1, 2, 3, 4], jnp.int32))
+    assert float(pw) >= 13.0  # 10 + 2 + 1, one-sided

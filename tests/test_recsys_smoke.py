@@ -1,0 +1,95 @@
+"""FM smoke tests: reduced config, train/serve/retrieval paths, kernel parity."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.models.recsys.fm import (
+    FMConfig,
+    bce_loss,
+    forward,
+    forward_with_kernel,
+    init_params,
+    retrieval_scores,
+)
+
+CFG = FMConfig(total_vocab=5_000, n_fields=7, embed_dim=10)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_params(CFG, jax.random.PRNGKey(0))
+
+
+def _ids(key, b, f=CFG.n_fields):
+    return jax.random.randint(key, (b, f), 0, 1 << 30)
+
+
+def test_forward_shapes_and_finite(params):
+    logits = jax.jit(lambda p, i: forward(CFG, p, i))(params, _ids(jax.random.PRNGKey(1), 32))
+    assert logits.shape == (32,)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_train_step(params):
+    ids = _ids(jax.random.PRNGKey(2), 64)
+    labels = jax.random.bernoulli(jax.random.PRNGKey(3), 0.5, (64,)).astype(jnp.float32)
+    loss, grads = jax.value_and_grad(lambda p: bce_loss(CFG, p, ids, labels))(params)
+    assert np.isfinite(float(loss)) and float(loss) > 0
+    # embedding grads are row-sparse but finite
+    assert np.isfinite(np.asarray(grads["emb"])).all()
+    # loss near log 2 at init (tiny logits)
+    assert abs(float(loss) - np.log(2)) < 0.05
+
+
+def test_fm_sum_square_identity(params):
+    """FM output equals the explicit O(F^2) pairwise sum."""
+    ids = _ids(jax.random.PRNGKey(4), 8)
+    from repro.models.recsys.fm import _flat_ids
+
+    rows = _flat_ids(CFG, ids)
+    v = np.asarray(params["emb"])[np.asarray(rows)]  # (B, F, k)
+    explicit = np.zeros(8)
+    f = CFG.n_fields
+    for i in range(f):
+        for j in range(i + 1, f):
+            explicit += (v[:, i] * v[:, j]).sum(-1)
+    lin = np.asarray(params["lin"])[np.asarray(rows)][..., 0].sum(-1)
+    expect = float(params["bias"]) + lin + explicit
+    got = np.asarray(forward(CFG, params, ids))
+    np.testing.assert_allclose(got, expect, rtol=1e-4, atol=1e-5)
+
+
+def test_retrieval_matches_pairwise_scoring(params):
+    """retrieval_scores (GEMV path) == forward() on concatenated fields."""
+    q = _ids(jax.random.PRNGKey(5), 1)[0]
+    cands = _ids(jax.random.PRNGKey(6), 50)
+    scores = np.asarray(retrieval_scores(CFG, params, q, cands))
+    assert scores.shape == (50,)
+    # independent check for candidate 7: score decomposition
+    s7 = float(forward(CFG, params, q[None, :])[0]) + float(
+        forward(CFG, params, cands[7:8])[0]
+    )
+    from repro.models.recsys.fm import _flat_ids
+
+    vq = np.asarray(params["emb"])[np.asarray(_flat_ids(CFG, q[None, :]))].sum(1)[0]
+    vc = np.asarray(params["emb"])[np.asarray(_flat_ids(CFG, cands[7:8]))].sum(1)[0]
+    np.testing.assert_allclose(scores[7], s7 + vq @ vc, rtol=1e-4)
+
+
+def test_kernel_path_matches_reference(params):
+    ids = _ids(jax.random.PRNGKey(7), 16)
+    a = np.asarray(forward(CFG, params, ids))
+    b = np.asarray(forward_with_kernel(CFG, params, ids, interpret=True))
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5)
+
+
+def test_field_vocab_partition():
+    sizes = CFG.field_vocabs()
+    offs = CFG.field_offsets()
+    assert len(sizes) == CFG.n_fields
+    assert (sizes >= 4).all()
+    # table_rows pads the raw total up to a multiple of 512 (sharding)
+    raw = int(offs[-1] + sizes[-1])
+    assert raw <= CFG.table_rows < raw + 512
+    assert CFG.table_rows % 512 == 0

@@ -1,0 +1,174 @@
+"""Sketch correctness: exactness regimes, one-sided error, additivity, ARE ordering."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    CountMin,
+    GSketch,
+    KMatrix,
+    MatrixSketch,
+    EdgeBatch,
+    vertex_stats_from_sample,
+)
+from repro.core import countmin, gsketch, kmatrix, matrix_sketch
+from repro.core.metrics import (
+    average_relative_error,
+    exact_edge_frequencies,
+    lookup_exact,
+)
+from repro.streams import make_stream, sample_stream
+
+
+def _random_edges(rng, n, n_nodes=64):
+    src = rng.integers(0, n_nodes, n).astype(np.int32)
+    dst = rng.integers(0, n_nodes, n).astype(np.int32)
+    w = rng.integers(1, 5, n).astype(np.int32)
+    return src, dst, w
+
+
+def _stats(rng, n_nodes=64):
+    src, dst, w = _random_edges(rng, 512, n_nodes)
+    return vertex_stats_from_sample(src, dst, w)
+
+
+def _all_sketches(rng, budget=1 << 16, depth=4):
+    stats = _stats(rng)
+    return {
+        "countmin": (CountMin.create(bytes_budget=budget, depth=depth, seed=1), countmin),
+        "gsketch": (
+            GSketch.create(bytes_budget=budget, stats=stats, depth=depth, seed=1, min_width=16),
+            gsketch,
+        ),
+        "tcm": (MatrixSketch.create(bytes_budget=budget, depth=depth, seed=1, kind="tcm"), matrix_sketch),
+        "gmatrix": (
+            MatrixSketch.create(bytes_budget=budget, depth=depth, seed=2, kind="gmatrix"),
+            matrix_sketch,
+        ),
+        "kmatrix": (
+            KMatrix.create(bytes_budget=budget, stats=stats, depth=depth, seed=1),
+            kmatrix,
+        ),
+    }
+
+
+@pytest.mark.parametrize("name", ["countmin", "gsketch", "tcm", "gmatrix", "kmatrix"])
+def test_one_sided_overestimate(name):
+    """CountMin-family estimates NEVER undercount (core invariant)."""
+    rng = np.random.default_rng(0)
+    sk, mod = _all_sketches(rng)[name]
+    src, dst, w = _random_edges(rng, 2048)
+    sk = jax.jit(mod.ingest)(sk, EdgeBatch.from_numpy(src, dst, w))
+    fmap = exact_edge_frequencies(src, dst, w)
+    true = lookup_exact(fmap, src, dst)
+    est = np.asarray(mod.edge_freq(sk, jnp.asarray(src), jnp.asarray(dst)))
+    assert (est >= true - 1e-6).all()
+
+
+@pytest.mark.parametrize("name", ["countmin", "tcm", "gmatrix", "kmatrix"])
+def test_exact_when_sparse(name):
+    """With far more cells than distinct edges, estimates are exact."""
+    rng = np.random.default_rng(1)
+    sk, mod = _all_sketches(rng, budget=1 << 20, depth=4)[name]
+    src = np.arange(50, dtype=np.int32)
+    dst = (np.arange(50, dtype=np.int32) + 7) % 50
+    w = np.full(50, 3, np.int32)
+    sk = mod.ingest(sk, EdgeBatch.from_numpy(src, dst, w))
+    est = np.asarray(mod.edge_freq(sk, jnp.asarray(src), jnp.asarray(dst)))
+    assert (est == 3).all()
+
+
+@pytest.mark.parametrize("name", ["countmin", "gsketch", "tcm", "gmatrix", "kmatrix"])
+def test_padding_is_noop(name):
+    rng = np.random.default_rng(2)
+    sk, mod = _all_sketches(rng)[name]
+    src, dst, w = _random_edges(rng, 128)
+    full = mod.ingest(sk, EdgeBatch.pad_to(src, dst, w, 512))
+    tight = mod.ingest(sk, EdgeBatch.from_numpy(src, dst, w))
+    for a, b in zip(jax.tree_util.tree_leaves(full), jax.tree_util.tree_leaves(tight)):
+        assert (np.asarray(a) == np.asarray(b)).all()
+
+
+def test_merge_additivity():
+    """sketch(A ++ B) == merge(sketch(A), sketch(B)) — the DP/FT primitive."""
+    rng = np.random.default_rng(3)
+    stats = _stats(rng)
+    base = KMatrix.create(bytes_budget=1 << 16, stats=stats, depth=4, seed=5)
+    s1, d1, w1 = _random_edges(rng, 256)
+    s2, d2, w2 = _random_edges(rng, 256)
+    a = kmatrix.ingest(base, EdgeBatch.from_numpy(s1, d1, w1))
+    b = kmatrix.ingest(base, EdgeBatch.from_numpy(s2, d2, w2))
+    both = kmatrix.ingest(a, EdgeBatch.from_numpy(s2, d2, w2))
+    merged = kmatrix.merge(a, b)
+    assert (np.asarray(merged.pool) == np.asarray(both.pool)).all()
+    assert (np.asarray(merged.conn) == np.asarray(both.conn)).all()
+
+
+def test_ingest_order_invariance():
+    rng = np.random.default_rng(4)
+    sk, mod = _all_sketches(rng)["kmatrix"]
+    src, dst, w = _random_edges(rng, 512)
+    fwd = mod.ingest(sk, EdgeBatch.from_numpy(src, dst, w))
+    rev = mod.ingest(sk, EdgeBatch.from_numpy(src[::-1], dst[::-1], w[::-1]))
+    assert (np.asarray(fwd.pool) == np.asarray(rev.pool)).all()
+
+
+@given(seed=st.integers(0, 1000), n=st.integers(1, 300))
+@settings(max_examples=20, deadline=None)
+def test_property_one_sided_and_additive(seed, n):
+    rng = np.random.default_rng(seed)
+    stats = _stats(rng)
+    sk = KMatrix.create(bytes_budget=1 << 14, stats=stats, depth=3, seed=seed)
+    src, dst, w = _random_edges(rng, n)
+    cut = n // 2
+    a = kmatrix.ingest(sk, EdgeBatch.pad_to(src[:cut], dst[:cut], w[:cut], n))
+    ab = kmatrix.ingest(a, EdgeBatch.pad_to(src[cut:], dst[cut:], w[cut:], n))
+    fmap = exact_edge_frequencies(src, dst, w)
+    true = lookup_exact(fmap, src, dst)
+    est = np.asarray(kmatrix.edge_freq(ab, jnp.asarray(src), jnp.asarray(dst)))
+    assert (est >= true - 1e-6).all()
+    # total pool mass == total ingested weight per layer
+    pool_mass = np.asarray(ab.pool).sum(axis=1)
+    assert (pool_mass == w.sum()).all()
+
+
+def test_node_out_freq_matrix_and_kmatrix():
+    rng = np.random.default_rng(5)
+    sketches = _all_sketches(rng, budget=1 << 18)
+    src = np.repeat(np.arange(8, dtype=np.int32), 4)
+    dst = np.arange(32, dtype=np.int32) % 13 + 20
+    w = np.full(32, 2, np.int32)
+    for name in ["tcm", "kmatrix"]:
+        sk, mod = sketches[name]
+        sk = mod.ingest(sk, EdgeBatch.from_numpy(src, dst, w))
+        est = np.asarray(mod.node_out_freq(sk, jnp.arange(8, dtype=jnp.int32)))
+        assert (est >= 8 - 1e-6).all(), name  # 4 out-edges x weight 2
+
+
+def test_kmatrix_beats_global_sketches_on_skewed_stream():
+    """The paper's headline claim, as a regression test (fixed seeds)."""
+    stream = make_stream("cit-HepPh", batch_size=8192, seed=1, scale=0.25)
+    ssrc, sdst, sw = sample_stream(stream, 10000, seed=7)
+    stats = vertex_stats_from_sample(ssrc, sdst, sw)
+    budget, depth = 64 * 1024, 5
+    tcm = MatrixSketch.create(bytes_budget=budget, depth=depth, seed=3, kind="tcm")
+    gm = MatrixSketch.create(bytes_budget=budget, depth=depth, seed=4, kind="gmatrix")
+    kn = KMatrix.create(bytes_budget=budget, stats=stats, depth=depth, seed=3)
+    ing_m = jax.jit(matrix_sketch.ingest)
+    ing_k = jax.jit(kmatrix.ingest)
+    for b in stream:
+        tcm, gm, kn = ing_m(tcm, b), ing_m(gm, b), ing_k(kn, b)
+    src, dst, w = stream.all_edges_numpy()
+    fmap = exact_edge_frequencies(src, dst, w)
+    qs, qd, _ = sample_stream(stream, 4000, seed=99)
+    true = jnp.asarray(lookup_exact(fmap, qs, qd))
+    ares = {}
+    for name, sk in [("tcm", tcm), ("gmatrix", gm)]:
+        est = matrix_sketch.edge_freq(sk, jnp.asarray(qs), jnp.asarray(qd))
+        ares[name] = float(average_relative_error(est, true))
+    est = kmatrix.edge_freq(kn, jnp.asarray(qs), jnp.asarray(qd))
+    ares["kmatrix"] = float(average_relative_error(est, true))
+    assert ares["kmatrix"] < ares["tcm"], ares
+    assert ares["kmatrix"] < ares["gmatrix"], ares

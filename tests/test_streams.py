@@ -1,0 +1,110 @@
+"""Stream pipeline: replayability, reservoir statistics, partition planning."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import vertex_stats_from_sample
+from repro.core.partitioning import (
+    plan_partitions,
+    plan_partitions_banded,
+    good_turing_outlier_share,
+)
+from repro.streams import Reservoir, SyntheticStream, make_stream, sample_stream
+from repro.streams.generators import DATASETS
+
+
+def test_batch_is_pure_function_of_index():
+    s = make_stream("cit-HepPh", batch_size=1024, seed=3, scale=0.02)
+    a = s.batch_numpy(2)
+    b = s.batch_numpy(2)
+    for x, y in zip(a, b):
+        assert (x == y).all()
+    # A different stream object with the same seed replays identically (the
+    # fault-tolerance contract: restart == seek).
+    s2 = make_stream("cit-HepPh", batch_size=1024, seed=3, scale=0.02)
+    for x, y in zip(s.batch_numpy(1), s2.batch_numpy(1)):
+        assert (x == y).all()
+
+
+def test_iter_from_offset_matches_full_iteration():
+    s = make_stream("email-EuAll", batch_size=512, seed=1, scale=0.01)
+    full = [np.asarray(b.src) for b in s]
+    resumed = {i: np.asarray(b.src) for i, b in s.iter_from(3)}
+    for i in range(3, s.num_batches):
+        assert (full[i] == resumed[i]).all()
+
+
+def test_edge_counts_and_padding():
+    s = make_stream("unicorn-wget", batch_size=1000, seed=0, scale=0.01)
+    src, dst, w = s.all_edges_numpy()
+    assert len(src) == s.spec.n_edges
+    assert (w > 0).all()
+    assert src.max() < s.spec.n_nodes and dst.max() < s.spec.n_nodes
+
+
+def test_power_law_skew():
+    """Out-degree distribution must be heavy-tailed (what kMatrix exploits)."""
+    s = make_stream("cit-HepPh", batch_size=8192, seed=5, scale=0.2)
+    src, _, _ = s.all_edges_numpy()
+    counts = np.bincount(src)
+    counts = counts[counts > 0]
+    top1pct = np.sort(counts)[-max(len(counts) // 100, 1):].sum() / counts.sum()
+    assert top1pct > 0.08, f"top-1% vertices carry only {top1pct:.2%} of stream"
+
+
+def test_reservoir_uniformity():
+    res = Reservoir(k=500, seed=0)
+    n = 20000
+    src = np.arange(n, dtype=np.int32)
+    for lo in range(0, n, 1000):
+        sl = src[lo : lo + 1000]
+        res.offer_batch(sl, sl, np.ones_like(sl))
+    smp, _, _ = res.sample
+    # mean of a uniform sample over [0, n) should be ~n/2
+    assert abs(smp.mean() - n / 2) < n * 0.06
+    assert len(np.unique(smp)) == 500
+
+
+@given(k=st.integers(10, 200), n=st.integers(1, 5000))
+@settings(max_examples=15, deadline=None)
+def test_reservoir_size_property(k, n):
+    res = Reservoir(k=k, seed=1)
+    src = np.arange(n, dtype=np.int32)
+    res.offer_batch(src, src, np.ones_like(src))
+    smp, _, _ = res.sample
+    assert len(smp) == min(k, n)
+
+
+@pytest.mark.parametrize("partitioner", [plan_partitions, plan_partitions_banded])
+def test_partition_plan_invariants(partitioner):
+    rng = np.random.default_rng(0)
+    src = rng.zipf(1.5, 4000).astype(np.int32) % 1000
+    dst = rng.integers(0, 1000, 4000).astype(np.int32)
+    stats = vertex_stats_from_sample(src, dst)
+    plan = partitioner(stats, 256, square=True)
+    # every sampled vertex routed exactly once
+    routed = np.concatenate([p.vertices for p in plan.partitions])
+    assert len(routed) == len(np.unique(routed)) == len(np.asarray(stats.vertex))
+    # route table sorted + aligned
+    assert (np.diff(plan.route_keys) > 0).all()
+    assert len(plan.route_keys) == len(plan.route_part)
+    # memory conservation: total area within budget
+    area = sum(p.width**2 for p in plan.partitions)
+    assert area <= 256 * 256 * 1.001
+    assert area >= 256 * 256 * 0.85, "partitioner stranded >15% of the budget"
+    # outlier owns no vertices
+    assert len(plan.partitions[plan.outlier].vertices) == 0
+
+
+def test_good_turing_share():
+    assert good_turing_outlier_share(np.asarray([1.0] * 100)) >= 0.5
+    assert good_turing_outlier_share(np.asarray([50.0] * 100)) <= 0.06
+
+
+def test_dataset_presets_match_paper():
+    assert DATASETS["email-EuAll"].n_nodes == 265_214
+    assert DATASETS["email-EuAll"].n_edges == 420_045
+    assert DATASETS["cit-HepPh"].n_nodes == 34_546
+    assert DATASETS["cit-HepPh"].n_edges == 421_578
+    assert DATASETS["unicorn-wget"].n_nodes == 17_778
+    assert DATASETS["unicorn-wget"].n_edges == 277_972  # 10% reservoir filter

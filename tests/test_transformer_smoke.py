@@ -1,0 +1,143 @@
+"""Per-arch smoke tests: reduced configs, one forward/train/decode step on CPU,
+asserting output shapes + finiteness (the assignment's smoke contract)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.lm import LM_CONFIGS, reduced
+from repro.models.transformer import (
+    decode_step,
+    forward_hidden,
+    init_cache,
+    init_params,
+    lm_loss,
+    prefill,
+)
+from repro.models.transformer.attention import blockwise_attention
+
+ARCHS = sorted(LM_CONFIGS)
+
+
+@pytest.fixture(scope="module")
+def rng_key():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_step_smoke(arch, rng_key):
+    cfg = reduced(LM_CONFIGS[arch])
+    params = init_params(cfg, rng_key)
+    b, s = 2, 64
+    tokens = jax.random.randint(rng_key, (b, s), 0, cfg.vocab)
+    labels = jnp.roll(tokens, -1, axis=1)
+
+    def loss_fn(p):
+        loss, metrics = lm_loss(cfg, p, tokens, labels)
+        return loss, metrics
+
+    (loss, metrics), grads = jax.jit(
+        jax.value_and_grad(loss_fn, has_aux=True)
+    )(params)
+    assert np.isfinite(float(loss)), arch
+    assert float(loss) > 0
+    for leaf in jax.tree_util.tree_leaves(grads):
+        assert np.isfinite(np.asarray(leaf)).all(), arch
+    # loss should be ~ log(vocab) at init
+    assert abs(float(metrics["ce"]) - np.log(cfg.vocab)) < 2.0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_then_decode_smoke(arch, rng_key):
+    cfg = reduced(LM_CONFIGS[arch])
+    params = init_params(cfg, rng_key)
+    b, s_prompt, s_max = 2, 16, 48
+    cache = init_cache(cfg, b, s_max, dtype=jnp.float32)
+    tokens = jax.random.randint(rng_key, (b, s_prompt), 0, cfg.vocab)
+    logits, cache = jax.jit(lambda p, t, c: prefill(cfg, p, t, c))(
+        params, tokens, cache
+    )
+    assert logits.shape == (b, 1, cfg.vocab)
+    assert int(cache.length) == s_prompt
+    step = jax.jit(lambda p, t, c: decode_step(cfg, p, t, c))
+    nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+    for i in range(3):
+        logits, cache = step(params, nxt, cache)
+        assert logits.shape == (b, 1, cfg.vocab)
+        assert np.isfinite(np.asarray(logits)).all(), arch
+        nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+    assert int(cache.length) == s_prompt + 3
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_matches_forward(arch, rng_key):
+    """Prefill+decode must agree with the training forward pass (same tokens)."""
+    cfg = reduced(LM_CONFIGS[arch])
+    params = init_params(cfg, rng_key)
+    b, s = 1, 24
+    tokens = jax.random.randint(jax.random.PRNGKey(7), (b, s), 0, cfg.vocab)
+    positions = jnp.arange(s, dtype=jnp.int32)[None]
+    hidden, _ = forward_hidden(cfg, params, tokens, positions)
+    from repro.models.transformer.model import logits_from_hidden
+    full_logits = logits_from_hidden(cfg, params, hidden)
+
+    cache = init_cache(cfg, b, s + 8, dtype=jnp.float32)
+    logits_p, cache = prefill(cfg, params, tokens[:, :-1], cache)
+    np.testing.assert_allclose(
+        np.asarray(logits_p[:, 0]), np.asarray(full_logits[:, -2]),
+        rtol=2e-3, atol=2e-3,
+    )
+    logits_d, cache = decode_step(cfg, params, tokens[:, -1:], cache)
+    np.testing.assert_allclose(
+        np.asarray(logits_d[:, 0]), np.asarray(full_logits[:, -1]),
+        rtol=2e-3, atol=2e-3,
+    )
+
+
+def test_blockwise_attention_vs_naive():
+    """Blockwise online-softmax == naive masked attention, global & windowed."""
+    key = jax.random.PRNGKey(3)
+    b, s, h, kv, dh = 2, 96, 4, 2, 16
+    q = jax.random.normal(key, (b, s, h, dh))
+    k = jax.random.normal(jax.random.PRNGKey(4), (b, s, kv, dh))
+    v = jax.random.normal(jax.random.PRNGKey(5), (b, s, kv, dh))
+
+    def naive(window):
+        g = h // kv
+        qr = q.reshape(b, s, kv, g, dh)
+        scores = jnp.einsum("bqkgd,btkd->bkgqt", qr, k) / np.sqrt(dh)
+        pos = np.arange(s)
+        ok = pos[None, :] <= pos[:, None]
+        if window:
+            ok &= pos[None, :] > pos[:, None] - window
+        scores = jnp.where(ok, scores, -1e30)
+        p = jax.nn.softmax(scores, -1)
+        out = jnp.einsum("bkgqt,btkd->bqkgd", p, v)
+        return out.reshape(b, s, h, dh)
+
+    for window in [None, 24]:
+        out = blockwise_attention(
+            q, k, v, window=window, attn_cap=None, chunk_q=32, chunk_kv=32
+        )
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(naive(window)), rtol=2e-4, atol=2e-4
+        )
+
+
+def test_moe_aux_loss_and_balance():
+    cfg = reduced(LM_CONFIGS["mixtral-8x7b"])
+    params = init_params(cfg, jax.random.PRNGKey(1))
+    tokens = jax.random.randint(jax.random.PRNGKey(2), (2, 64), 0, cfg.vocab)
+    loss, metrics = lm_loss(cfg, params, tokens, tokens)
+    assert float(metrics["aux"]) > 0  # balance loss active per layer
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_param_count_analytic_matches(arch, rng_key):
+    """config.param_count() (used for roofline MODEL_FLOPS) must match the
+    actually-initialized tree."""
+    from repro.models.common import count_params
+
+    cfg = reduced(LM_CONFIGS[arch])
+    params = init_params(cfg, rng_key)
+    assert count_params(params) == cfg.param_count(), arch

@@ -186,11 +186,31 @@ def kernel_micro(quick: bool) -> None:
         _emit(f"kernel/{name}", us, f"edges={c}")
 
 
+def serve_mixed(scale: float, quick: bool) -> None:
+    """Beyond-paper: online serving QPS/latency (benchmarks/serve_bench.py)."""
+    from benchmarks.serve_bench import run_serve_bench
+
+    _log("\n== serve_mixed (live ingest + batched query engine) ==")
+    rec = run_serve_bench(scale=scale, n_requests=1000 if quick else 4000,
+                          target_qps=1000.0 if quick else 2000.0)
+    if not rec["engine_matches_direct"]:
+        raise RuntimeError(
+            "serve_mixed: engine answers diverged from direct queries — "
+            "QPS numbers for wrong answers are meaningless")
+    _emit("serve/qps", 1e6 / max(rec["achieved_qps"], 1e-9),
+          f"qps={rec['achieved_qps']};p50_ms={rec['p50_ms']};"
+          f"p99_ms={rec['p99_ms']}")
+    _emit("serve/closure_cache", rec["closure_build_ms"] * 1e3,
+          f"hit_ms={rec['closure_cache_hit_ms']};"
+          f"speedup={rec['closure_cache_speedup']}")
+
+
 BENCHES = {
     "fig6_build_time": lambda a: fig6_build_time(a.scale),
     "fig7_are": lambda a: fig7_fig8_accuracy(a.scale, a.quick),
     "partitioner_ablation": lambda a: partitioner_ablation(a.scale),
     "kernel_micro": lambda a: kernel_micro(a.quick),
+    "serve_mixed": lambda a: serve_mixed(a.scale, a.quick),
 }
 
 

@@ -83,6 +83,25 @@ class HashFamily:
         return fastrange(self.mix(x), w)
 
 
+def families_match(a: HashFamily, b: HashFamily) -> bool | None:
+    """Whether two hash families are identical (same seeds/params).
+
+    Returns ``None`` when either family is a tracer (inside jit the values
+    are not inspectable; callers skip the check there).  Used by sketch
+    ``merge`` to reject operands built with different seeds — the layouts
+    can agree while the hash functions do not, which would silently corrupt
+    every estimate.
+    """
+    xs = (a.a, a.b, b.a, b.b)
+    if any(isinstance(x, jax.core.Tracer) for x in xs):
+        return None
+    return (
+        a.a.shape == b.a.shape
+        and bool(np.array_equal(np.asarray(a.a), np.asarray(b.a)))
+        and bool(np.array_equal(np.asarray(a.b), np.asarray(b.b)))
+    )
+
+
 def fastrange(h: jax.Array, w: int | jax.Array) -> jax.Array:
     """Map uniform uint32 ``h`` to ``[0, w)`` via (h * w) >> 32.
 

@@ -136,6 +136,11 @@ def reduced(cfg: TransformerConfig) -> TransformerConfig:
         vocab=512,
         window=32,
         n_experts=4 if cfg.is_moe else 0,
+        # Dropless at smoke scale (cap >= t * top_k): capacity drops depend
+        # on the co-batched token set, so train-forward (s tokens), prefill
+        # (s-1) and decode (1) would disagree on which assignments drop and
+        # the decode-vs-forward parity tests would compare different models.
+        capacity_factor=4.0 if cfg.is_moe else cfg.capacity_factor,
         attn_chunk_q=16,
         attn_chunk_kv=32,
         ce_chunk=32,

@@ -9,7 +9,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.common.hashing import HashFamily, fastrange, hash_pair_mix
+from repro.common.hashing import HashFamily, families_match, fastrange, hash_pair_mix
 from repro.common.struct import pytree_dataclass, static_field
 from repro.core.types import EdgeBatch
 
@@ -59,3 +59,18 @@ def edge_freq(sk: CountMin, src: jax.Array, dst: jax.Array) -> jax.Array:
     rows = jnp.arange(d, dtype=jnp.int32).reshape((d,) + (1,) * src.ndim)
     vals = sk.table[rows, idx]
     return jnp.min(vals, axis=0)
+
+
+def empty_like(sk: CountMin) -> CountMin:
+    """Zero-counter sketch sharing layout + hashes (serving snapshot hook)."""
+    return sk.replace(table=jnp.zeros_like(sk.table))
+
+
+def merge(a: CountMin, b: CountMin) -> CountMin:
+    """Counter-additivity; operands must share layout AND hash seeds."""
+    assert a.w == b.w and a.table.shape == b.table.shape
+    if families_match(a.hashes, b.hashes) is False:
+        raise ValueError(
+            "merge: operands use different hash families (built with "
+            "different seeds); merging them silently corrupts estimates")
+    return a.replace(table=a.table + b.table)

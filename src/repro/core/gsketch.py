@@ -11,10 +11,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.common.hashing import HashFamily, fastrange, hash_pair_mix
+from repro.common.hashing import HashFamily, families_match, fastrange, hash_pair_mix
 from repro.common.struct import pytree_dataclass, static_field
 from repro.core.partitioning import plan_partitions
-from repro.core.routing import RouteTable, route_table_from_plan
+from repro.core.routing import RouteTable, route_table_from_plan, routes_match
 from repro.core.types import EdgeBatch, VertexStats
 
 
@@ -99,3 +99,23 @@ def edge_freq(sk: GSketch, src: jax.Array, dst: jax.Array) -> jax.Array:
     idx = _edge_cells(sk, src, dst)
     rows = jnp.arange(sk.depth, dtype=jnp.int32).reshape((sk.depth,) + (1,) * src.ndim)
     return jnp.min(sk.pool[rows, idx], axis=0)
+
+
+def empty_like(sk: GSketch) -> GSketch:
+    """Zero-counter sketch sharing layout, routing + hashes (serving hook)."""
+    return sk.replace(pool=jnp.zeros_like(sk.pool))
+
+
+def merge(a: GSketch, b: GSketch) -> GSketch:
+    """Counter-additivity; operands must share layout AND hash seeds."""
+    assert a.pool_size == b.pool_size
+    if families_match(a.hashes, b.hashes) is False:
+        raise ValueError(
+            "merge: operands use different hash families (built with "
+            "different seeds); merging them silently corrupts estimates")
+    if routes_match(a.route, b.route) is False:
+        raise ValueError(
+            "merge: operands use different partition plans (built from "
+            "different samples); edges route to different slabs, so summing "
+            "the pools silently corrupts estimates")
+    return a.replace(pool=a.pool + b.pool)

@@ -29,10 +29,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.common.hashing import HashFamily, fastrange
+from repro.common.hashing import HashFamily, families_match, fastrange
 from repro.common.struct import pytree_dataclass, static_field
 from repro.core.partitioning import PartitionPlan, plan_partitions
-from repro.core.routing import RouteTable, route_table_from_plan
+from repro.core.routing import RouteTable, route_table_from_plan, routes_match
 from repro.core.types import EdgeBatch, VertexStats
 
 
@@ -125,6 +125,11 @@ def edge_cells(sk: KMatrix, src: jax.Array, dst: jax.Array) -> jax.Array:
     return off[None] + hi * w[None] + hj
 
 
+def conn_cells(sk: KMatrix, v: jax.Array) -> jax.Array:
+    """Per-layer slot of vertex ``v`` in the global connectivity matrix."""
+    return fastrange(sk.hashes.mix(v), sk.conn_w)
+
+
 def ingest(sk: KMatrix, batch: EdgeBatch) -> KMatrix:
     idx = edge_cells(sk, batch.src, batch.dst)  # [d, B]
     rows = jnp.arange(sk.depth, dtype=jnp.int32)[:, None]
@@ -167,12 +172,33 @@ def node_out_freq(sk: KMatrix, v: jax.Array) -> jax.Array:
     return jnp.min(jnp.sum(vals, axis=-1), axis=0)
 
 
+def empty_like(sk: KMatrix) -> KMatrix:
+    """A zero-counter sketch sharing ``sk``'s layout, routing and hashes.
+
+    Snapshot hook (DESIGN.md §Serving): the serving double-buffer ingests
+    into an ``empty_like`` delta and folds it into the published sketch with
+    ``merge`` at epoch publish.
+    """
+    return sk.replace(pool=jnp.zeros_like(sk.pool), conn=jnp.zeros_like(sk.conn))
+
+
 def merge(a: KMatrix, b: KMatrix) -> KMatrix:
     """Counter-additivity: the sketch of a union stream is the elementwise sum.
 
-    This is the primitive behind both data-parallel ingest (each data shard
-    sketches its sub-stream; query-time psum) and fault-tolerant re-joins.
-    Both operands must share layout + hash seeds.
+    This is the primitive behind data-parallel ingest (each data shard
+    sketches its sub-stream; query-time psum), fault-tolerant re-joins and
+    serving snapshot publishes.  Both operands must share layout AND hash
+    seeds — layouts can coincide across seeds, so we check the hash-family
+    parameters explicitly (outside jit) rather than trusting shapes.
     """
     assert a.pool_size == b.pool_size and a.conn_w == b.conn_w
+    if families_match(a.hashes, b.hashes) is False:
+        raise ValueError(
+            "merge: operands use different hash families (built with "
+            "different seeds); merging them silently corrupts estimates")
+    if routes_match(a.route, b.route) is False:
+        raise ValueError(
+            "merge: operands use different partition plans (built from "
+            "different samples); edges route to different slabs, so summing "
+            "the pools silently corrupts estimates")
     return a.replace(pool=a.pool + b.pool, conn=a.conn + b.conn)

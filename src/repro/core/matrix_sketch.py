@@ -16,7 +16,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.common.hashing import HashFamily, fastrange
+from repro.common.hashing import HashFamily, families_match, fastrange
 from repro.common.struct import pytree_dataclass, static_field
 from repro.core.types import EdgeBatch
 
@@ -76,6 +76,21 @@ def node_out_freq(sk: MatrixSketch, v: jax.Array) -> jax.Array:
     rows = jnp.arange(sk.depth, dtype=jnp.int32).reshape((sk.depth,) + (1,) * v.ndim)
     sums = jnp.sum(sk.table[rows, hv, :], axis=-1)  # [d, *S]
     return jnp.min(sums, axis=0)
+
+
+def empty_like(sk: MatrixSketch) -> MatrixSketch:
+    """Zero-counter sketch sharing layout + hashes (serving snapshot hook)."""
+    return sk.replace(table=jnp.zeros_like(sk.table))
+
+
+def merge(a: MatrixSketch, b: MatrixSketch) -> MatrixSketch:
+    """Counter-additivity; operands must share layout AND hash seeds."""
+    assert a.w == b.w and a.table.shape == b.table.shape
+    if families_match(a.hashes, b.hashes) is False:
+        raise ValueError(
+            "merge: operands use different hash families (built with "
+            "different seeds); merging them silently corrupts estimates")
+    return a.replace(table=a.table + b.table)
 
 
 def node_in_freq(sk: MatrixSketch, v: jax.Array) -> jax.Array:

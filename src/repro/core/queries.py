@@ -25,7 +25,6 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
-from repro.common.hashing import fastrange
 from repro.core import kmatrix as km
 from repro.core import matrix_sketch as ms
 
@@ -45,27 +44,78 @@ def _bool_closure(adj: jax.Array, max_hops: int | None = None) -> jax.Array:
     return reach > 0.5
 
 
+# --- engine-callable pure functions (explicit closure injection) -------------
+#
+# The O(log w) squaring cascade is the expensive half of a reachability query;
+# the per-pair lookup is a few gathers.  Splitting them lets the serving
+# engine compute ``build_closure`` ONCE per (tenant, epoch) and answer every
+# subsequent reachability query against the cached closure (DESIGN.md
+# §Serving).  The classic one-shot entry points below are thin wrappers.
+
+
+@functools.partial(jax.jit, static_argnames=("max_hops",))
+def build_closure(adj_layers: jax.Array,
+                  max_hops: int | None = None) -> jax.Array:
+    """Per-layer boolean closure: counter layers [d, w, w] -> bool [d, w, w]."""
+    return jax.vmap(lambda a: _bool_closure(a > 0, max_hops))(adj_layers)
+
+
+def reachability_from_closure(closure: jax.Array, hi: jax.Array,
+                              hj: jax.Array) -> jax.Array:
+    """Pair lookup against a prebuilt closure.
+
+    ``hi``/``hj`` are per-layer node slots [d, *S]; a pair is reachable only
+    if EVERY layer agrees (one-sided error, like CountMin).
+    """
+    d = closure.shape[0]
+    rows = jnp.arange(d, dtype=jnp.int32).reshape((d,) + (1,) * (hi.ndim - 1))
+    return jnp.all(closure[rows, hi, hj], axis=0)
+
+
+def closure_layers(sk) -> jax.Array:
+    """The [d, w, w] adjacency layers a sketch uses for connectivity queries.
+
+    Only matrix-shaped Type II sketches qualify; CountMin/gSketch hash the
+    whole edge to one cell, so no adjacency structure exists to close over —
+    rejecting them here beats returning silently meaningless reachability.
+    """
+    if isinstance(sk, km.KMatrix):
+        assert sk.conn_w > 0, (
+            "kMatrix built with conn_frac=0 cannot answer reachability")
+        return sk.conn
+    if isinstance(sk, ms.MatrixSketch):
+        return sk.table
+    raise ValueError(
+        f"reachability is not answerable by {type(sk).__name__}: "
+        "no [d, w, w] adjacency layers")
+
+
+def reach_cells(sk, v: jax.Array) -> jax.Array:
+    """Per-layer connectivity-matrix slot of vertex ``v`` -> int32[d, *S]."""
+    if isinstance(sk, km.KMatrix):
+        return km.conn_cells(sk, v)
+    if isinstance(sk, ms.MatrixSketch):
+        return ms.node_cells(sk, v)
+    raise ValueError(
+        f"reachability is not answerable by {type(sk).__name__}: "
+        "no [d, w, w] adjacency layers")
+
+
 def reachability(sk: ms.MatrixSketch, src: jax.Array, dst: jax.Array,
                  max_hops: int | None = None) -> jax.Array:
     """Estimated reachability src ->* dst. True may be a false positive
     (hash collisions merge nodes) but never a false negative."""
-    closure = jax.vmap(lambda a: _bool_closure(a > 0, max_hops))(sk.table)  # [d,w,w]
-    hi = ms.node_cells(sk, src)  # [d, *S]
-    hj = ms.node_cells(sk, dst)
-    rows = jnp.arange(sk.depth, dtype=jnp.int32).reshape((sk.depth,) + (1,) * src.ndim)
-    per_layer = closure[rows, hi, hj]
-    return jnp.all(per_layer, axis=0)
+    closure = build_closure(sk.table, max_hops)  # [d,w,w]
+    return reachability_from_closure(
+        closure, ms.node_cells(sk, src), ms.node_cells(sk, dst))
 
 
 def kmatrix_reachability(sk: km.KMatrix, src: jax.Array, dst: jax.Array,
                          max_hops: int | None = None) -> jax.Array:
     """Reachability on kMatrix via its global connectivity matrix."""
-    assert sk.conn_w > 0, "kMatrix built with conn_frac=0 cannot answer reachability"
-    closure = jax.vmap(lambda a: _bool_closure(a > 0, max_hops))(sk.conn)
-    hi = fastrange(sk.hashes.mix(src), sk.conn_w)
-    hj = fastrange(sk.hashes.mix(dst), sk.conn_w)
-    rows = jnp.arange(sk.depth, dtype=jnp.int32).reshape((sk.depth,) + (1,) * src.ndim)
-    return jnp.all(closure[rows, hi, hj], axis=0)
+    closure = build_closure(closure_layers(sk), max_hops)
+    return reachability_from_closure(
+        closure, km.conn_cells(sk, src), km.conn_cells(sk, dst))
 
 
 def heavy_nodes(

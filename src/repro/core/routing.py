@@ -60,3 +60,25 @@ def route_table_from_plan(plan: PartitionPlan, *, square: bool) -> tuple[RouteTa
         max_width=int(widths.max()) if len(widths) else 0,
     )
     return table, pool_size
+
+
+def routes_match(a: RouteTable, b: RouteTable) -> bool | None:
+    """Whether two route tables encode the same partition plan.
+
+    Returns ``None`` when either side is a tracer (not inspectable under
+    jit).  Used by sketch ``merge``: same budget + seed but different
+    bootstrap samples yield equal layouts and hash families with different
+    vertex->slab routing, which summing would silently corrupt.
+    """
+    arrs = (a.keys, a.part, a.offsets, a.widths,
+            b.keys, b.part, b.offsets, b.widths)
+    if any(isinstance(x, jax.core.Tracer) for x in arrs):
+        return None
+    return (
+        a.outlier == b.outlier
+        and a.keys.shape == b.keys.shape
+        and a.offsets.shape == b.offsets.shape
+        and all(bool(np.array_equal(np.asarray(x), np.asarray(y)))
+                for x, y in [(a.keys, b.keys), (a.part, b.part),
+                             (a.offsets, b.offsets), (a.widths, b.widths)])
+    )

@@ -36,6 +36,15 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
+# jax 0.4.x mis-types the scan inside the searchsorted-based route lookup
+# under shard_map ("Scan carry input and output got mismatched replication
+# types"), and its own error message prescribes check_rep=False.  Scope the
+# workaround to affected versions so newer jax keeps replication checking
+# (the guard that catches e.g. a dropped psum) enabled.
+_CHECK_REP_COMPAT = (
+    {"check_rep": False} if jax.__version__.startswith("0.4.") else {}
+)
+
 from repro.common.hashing import fastrange
 from repro.core.kmatrix import KMatrix
 from repro.core.types import EdgeBatch
@@ -63,6 +72,7 @@ def make_dp_ingest(sk_template: KMatrix, mesh, axis: str = "data"):
         mesh=mesh,
         in_specs=(P(axis, None), P(axis, None, None), P(axis), P(axis), P(axis)),
         out_specs=(P(axis, None), P(axis, None, None)),
+        **_CHECK_REP_COMPAT,
     )
 
 
@@ -82,6 +92,7 @@ def make_dp_edge_freq(sk_template: KMatrix, mesh, axis: str = "data"):
         mesh=mesh,
         in_specs=(P(axis, None), P(axis, None, None), P(None), P(None)),
         out_specs=P(None),
+        **_CHECK_REP_COMPAT,
     )
 
 
@@ -226,6 +237,7 @@ def make_pp_ingest(
             P(data_axes),
         ),
         out_specs=(P(both, None), P(both, None, None), P()),
+        **_CHECK_REP_COMPAT,
     )
     return fn, owner_np
 
@@ -255,4 +267,5 @@ def make_pp_edge_freq(sk_template: KMatrix, mesh, *,
         mesh=mesh,
         in_specs=(P(both, None), P(both, None, None), P(None), P(None)),
         out_specs=P(None),
+        **_CHECK_REP_COMPAT,
     )

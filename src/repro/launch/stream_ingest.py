@@ -20,43 +20,14 @@ import jax
 import jax.numpy as jnp
 
 from repro.checkpoint import store
-from repro.core import (
-    CountMin,
-    GSketch,
-    KMatrix,
-    MatrixSketch,
-    vertex_stats_from_sample,
-)
-from repro.core import countmin, gsketch, kmatrix, matrix_sketch
+from repro.core import vertex_stats_from_sample
 from repro.core.metrics import (
     average_relative_error,
     exact_edge_frequencies,
     lookup_exact,
 )
+from repro.serving.registry import SKETCHES, build_sketch
 from repro.streams import make_stream, sample_stream
-
-SKETCHES = {
-    "countmin": (CountMin, countmin),
-    "gsketch": (GSketch, gsketch),
-    "tcm": (MatrixSketch, matrix_sketch),
-    "gmatrix": (MatrixSketch, matrix_sketch),
-    "kmatrix": (KMatrix, kmatrix),
-}
-
-
-def build_sketch(name: str, budget: int, stats, depth: int, seed: int,
-                 partitioner: str = "banded"):
-    cls, mod = SKETCHES[name]
-    if name in ("countmin",):
-        return cls.create(bytes_budget=budget, depth=depth, seed=seed), mod
-    if name in ("tcm", "gmatrix"):
-        return cls.create(bytes_budget=budget, depth=depth, seed=seed,
-                          kind=name), mod
-    if name == "gsketch":
-        return cls.create(bytes_budget=budget, stats=stats, depth=depth,
-                          seed=seed), mod
-    return cls.create(bytes_budget=budget, stats=stats, depth=depth,
-                      seed=seed, partitioner=partitioner), mod
 
 
 def main() -> None:

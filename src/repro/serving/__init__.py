@@ -1,0 +1,58 @@
+"""repro.serving — the online query-serving layer over live sketches.
+
+Turns the offline reproduction into an always-on service (DESIGN.md
+§Serving):
+
+  registry  multi-tenant sketch registry; owns per-tenant ingest loops
+  snapshot  double-buffered epoch-stamped read snapshots (snapshot isolation)
+  engine    batched query planner: heterogeneous requests -> dense jitted
+            calls, with per-(tenant, epoch) closure caching for reachability
+  loadgen   open-loop load generator reporting QPS and p50/p99 latency
+
+Entry points: ``launch/query_serve.py`` (ingest + serving end to end) and
+``benchmarks/serve_bench.py`` (the BENCH trajectory's serving row).
+"""
+from repro.serving.engine import (
+    ClosureCache,
+    QueryEngine,
+    Request,
+    Result,
+    edge_freq,
+    heavy_nodes,
+    node_in,
+    node_out,
+    path_weight,
+    reach,
+    subgraph_weight,
+)
+from repro.serving.loadgen import (
+    LoadReport,
+    OpenLoopLoadGen,
+    WorkloadMix,
+    synth_requests,
+)
+from repro.serving.registry import SketchRegistry, Tenant, TenantKey
+from repro.serving.snapshot import Snapshot, SnapshotBuffer
+
+__all__ = [
+    "ClosureCache",
+    "QueryEngine",
+    "Request",
+    "Result",
+    "edge_freq",
+    "heavy_nodes",
+    "node_in",
+    "node_out",
+    "path_weight",
+    "reach",
+    "subgraph_weight",
+    "LoadReport",
+    "OpenLoopLoadGen",
+    "WorkloadMix",
+    "synth_requests",
+    "SketchRegistry",
+    "Tenant",
+    "TenantKey",
+    "Snapshot",
+    "SnapshotBuffer",
+]

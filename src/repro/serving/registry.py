@@ -1,0 +1,159 @@
+"""Multi-tenant sketch registry: one live-ingesting sketch per tenant key.
+
+A *tenant* is one (dataset, sketch kind, budget, seed) combination — the unit
+of isolation for the always-on query service.  The registry owns, per tenant:
+
+  * the seekable stream (batch i is a pure function of (seed, i)),
+  * the bootstrap sample -> VertexStats -> partition plan,
+  * the ingest loop position (next unread batch), and
+  * the ``SnapshotBuffer`` holding the live delta + published snapshot.
+
+``launch/query_serve.py`` and ``benchmarks/serve_bench.py`` drive tenants by
+alternating ``tenant.step(n)`` (ingest) with engine query batches against
+``tenant.snapshot`` — the double buffer guarantees the queries stay
+epoch-consistent while ingest runs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator
+
+from repro.core import (
+    CountMin,
+    GSketch,
+    KMatrix,
+    MatrixSketch,
+    vertex_stats_from_sample,
+)
+from repro.core import countmin, gsketch, kmatrix, matrix_sketch
+from repro.serving.snapshot import Snapshot, SnapshotBuffer
+from repro.streams import make_stream, sample_stream
+
+SKETCHES = {
+    "countmin": (CountMin, countmin),
+    "gsketch": (GSketch, gsketch),
+    "tcm": (MatrixSketch, matrix_sketch),
+    "gmatrix": (MatrixSketch, matrix_sketch),
+    "kmatrix": (KMatrix, kmatrix),
+}
+
+
+def build_sketch(name: str, budget: int, stats, depth: int, seed: int,
+                 partitioner: str = "banded"):
+    """Construct any sketch kind from a byte budget (+ stats if partitioned)."""
+    cls, mod = SKETCHES[name]
+    if name == "countmin":
+        return cls.create(bytes_budget=budget, depth=depth, seed=seed), mod
+    if name in ("tcm", "gmatrix"):
+        return cls.create(bytes_budget=budget, depth=depth, seed=seed,
+                          kind=name), mod
+    if name == "gsketch":
+        return cls.create(bytes_budget=budget, stats=stats, depth=depth,
+                          seed=seed), mod
+    return cls.create(bytes_budget=budget, stats=stats, depth=depth,
+                      seed=seed, partitioner=partitioner), mod
+
+
+@dataclasses.dataclass(frozen=True)
+class TenantKey:
+    dataset: str
+    kind: str
+    budget_kb: int
+    seed: int = 0
+
+    @property
+    def tenant_id(self) -> str:
+        return f"{self.dataset}/{self.kind}/{self.budget_kb}kb/s{self.seed}"
+
+
+class Tenant:
+    """One registered sketch + its stream position + snapshot buffer."""
+
+    def __init__(self, key: TenantKey, stream, buffer: SnapshotBuffer,
+                 mod) -> None:
+        self.key = key
+        self.stream = stream
+        self.buffer = buffer
+        self.mod = mod
+        self.offset = 0  # next stream batch to ingest
+
+    @property
+    def snapshot(self) -> Snapshot:
+        return self.buffer.snapshot
+
+    @property
+    def epoch(self) -> int:
+        return self.buffer.epoch
+
+    @property
+    def exhausted(self) -> bool:
+        return self.offset >= self.stream.num_batches
+
+    def step(self, n_batches: int = 1) -> int:
+        """Ingest up to ``n_batches`` more stream batches into the live delta.
+
+        Returns the number actually consumed (0 once the stream is drained).
+        """
+        done = 0
+        while done < n_batches and not self.exhausted:
+            self.buffer.ingest(self.stream.batch(self.offset))
+            self.offset += 1
+            done += 1
+        return done
+
+    def publish(self) -> Snapshot:
+        return self.buffer.publish()
+
+
+class SketchRegistry:
+    """Registry of live tenants, keyed by (dataset, kind, budget, seed)."""
+
+    def __init__(self, *, depth: int = 5, batch_size: int = 8192,
+                 sample_size: int = 30_000, scale: float = 1.0,
+                 partitioner: str = "banded") -> None:
+        self.depth = depth
+        self.batch_size = batch_size
+        self.sample_size = sample_size
+        self.scale = scale
+        self.partitioner = partitioner
+        self._tenants: dict[TenantKey, Tenant] = {}
+
+    def open(self, dataset: str, kind: str, budget_kb: int,
+             seed: int = 0) -> Tenant:
+        """Get-or-create the tenant for a key (idempotent)."""
+        key = TenantKey(dataset, kind, budget_kb, seed)
+        if key in self._tenants:
+            return self._tenants[key]
+        stream = make_stream(dataset, batch_size=self.batch_size, seed=seed,
+                             scale=self.scale)
+        # Paper §V-A: a reservoir sample of the stream bootstraps the
+        # partitioner before any counter is allocated.
+        n_sample = max(int(self.sample_size * self.scale), 1000)
+        ssrc, sdst, sw = sample_stream(stream, n_sample, seed=seed + 1)
+        stats = vertex_stats_from_sample(ssrc, sdst, sw)
+        sketch, mod = build_sketch(kind, budget_kb * 1024, stats, self.depth,
+                                   seed, self.partitioner)
+        buffer = SnapshotBuffer(sketch, mod, tenant_id=key.tenant_id,
+                                kind=kind)
+        tenant = Tenant(key, stream, buffer, mod)
+        self._tenants[key] = tenant
+        return tenant
+
+    def get(self, key: TenantKey) -> Tenant:
+        return self._tenants[key]
+
+    def __contains__(self, key: TenantKey) -> bool:
+        return key in self._tenants
+
+    def __len__(self) -> int:
+        return len(self._tenants)
+
+    def tenants(self) -> Iterator[Tenant]:
+        return iter(self._tenants.values())
+
+    def step_all(self, n_batches: int = 1) -> int:
+        """Advance every tenant's ingest loop; returns total batches consumed."""
+        return sum(t.step(n_batches) for t in self.tenants())
+
+    def publish_all(self) -> list[Snapshot]:
+        return [t.publish() for t in self.tenants()]

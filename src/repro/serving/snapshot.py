@@ -1,0 +1,116 @@
+"""Double-buffered, epoch-stamped read snapshots over live-ingesting sketches.
+
+The serving contract (DESIGN.md §Serving): queries never observe a
+half-ingested sketch.  Each tenant owns a ``SnapshotBuffer`` with two sides:
+
+  front  — the *published* ``Snapshot``: an immutable, epoch-stamped sketch
+           that every query in flight reads.  JAX arrays are immutable, so
+           holding the pytree reference IS the isolation mechanism — no
+           copies, no locks.
+  back   — the *delta*: an ``empty_like`` twin (same layout, routing and
+           hash seeds) that absorbs ingest batches.
+
+``publish()`` folds the delta into the front via counter-additive ``merge``
+(one elementwise add over the pool — cheap regardless of how many batches
+accumulated), bumps the epoch, and resets the delta to zeros.  Readers of the
+previous epoch keep their reference and stay consistent; the epoch number is
+the cache key for everything derived from a snapshot (notably the boolean
+closure matrices cached by the query engine).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import EdgeBatch
+
+
+@dataclasses.dataclass(frozen=True)
+class Snapshot:
+    """An immutable point-in-time view of a tenant's sketch.
+
+    ``epoch`` is monotonically increasing per tenant and uniquely identifies
+    the counter state: two queries against the same (tenant_id, epoch) are
+    guaranteed to see identical answers.
+    """
+
+    tenant_id: str
+    epoch: int
+    sketch: Any  # KMatrix | MatrixSketch | GSketch | CountMin
+    kind: str
+    n_edges: int  # cumulative non-padding stream updates folded in
+
+    def __repr__(self) -> str:  # keep array payload out of logs
+        return (f"Snapshot({self.tenant_id!r}, epoch={self.epoch}, "
+                f"kind={self.kind!r}, n_edges={self.n_edges})")
+
+
+_anon_ids = itertools.count()
+
+
+class SnapshotBuffer:
+    """Double buffer: live delta sketch (ingest side) + published Snapshot."""
+
+    def __init__(self, sketch: Any, mod: Any, *, tenant_id: str | None = None,
+                 kind: str = "") -> None:
+        self._mod = mod
+        # tenant_id keys every per-(tenant, epoch) cache downstream (notably
+        # the engine's closure cache).  Two buffers must never share an id:
+        # same-named tenants from differently-configured registries reach
+        # the same epoch with different counters, and a shared engine would
+        # serve one tenant the other's closures.  The instance suffix makes
+        # the id unique per buffer while keeping the readable prefix.
+        self._tenant_id = f"{tenant_id or 'anon'}#{next(_anon_ids)}"
+        self._kind = kind or getattr(sketch, "kind", type(sketch).__name__.lower())
+        self._front = Snapshot(self._tenant_id, 0, sketch, self._kind, 0)
+        self._delta = mod.empty_like(sketch)
+        # device-side counter: avoids a host sync per ingest batch; folded
+        # into the ingest kernel so each batch is ONE dispatch
+        self._pending = jnp.zeros((), jnp.int64 if jax.config.x64_enabled
+                                  else jnp.int32)
+        self._jit_ingest = jax.jit(
+            lambda sk, batch, pending: (
+                mod.ingest(sk, batch),
+                pending + jnp.sum((batch.weight > 0).astype(pending.dtype))))
+        # One fused publish kernel: fold delta into front, zero the delta.
+        # Safe to jit (which skips merge's hash-family check): the delta is
+        # empty_like(front) by construction, so the families always match.
+        self._jit_publish = jax.jit(
+            lambda front, delta: (mod.merge(front, delta),
+                                  mod.empty_like(delta)))
+
+    @property
+    def snapshot(self) -> Snapshot:
+        return self._front
+
+    @property
+    def epoch(self) -> int:
+        return self._front.epoch
+
+    def ingest(self, batch: EdgeBatch) -> None:
+        """Absorb a batch into the back buffer; published readers unaffected."""
+        self._delta, self._pending = self._jit_ingest(
+            self._delta, batch, self._pending)
+
+    def publish(self) -> Snapshot:
+        """Fold the delta into the front buffer and stamp a new epoch.
+
+        This is the only host sync point in the ingest path (the pending
+        edge count is fetched to stamp the snapshot).
+        """
+        pending = int(jax.device_get(self._pending))
+        merged, delta = self._jit_publish(self._front.sketch, self._delta)
+        self._front = Snapshot(
+            self._tenant_id,
+            self._front.epoch + 1,
+            merged,
+            self._kind,
+            self._front.n_edges + pending,
+        )
+        self._delta = delta
+        self._pending = jnp.zeros_like(self._pending)
+        return self._front

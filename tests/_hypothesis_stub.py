@@ -1,0 +1,39 @@
+"""No-op shims for ``hypothesis`` so tier-1 collects on images without it.
+
+Property tests decorated with the stub ``given`` are skipped (not silently
+passed); every non-hypothesis test in the same module still runs.  Import as
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ModuleNotFoundError:
+        from _hypothesis_stub import given, settings, st
+"""
+from __future__ import annotations
+
+import pytest
+
+
+def given(*_args, **_kwargs):
+    def deco(fn):
+        return pytest.mark.skip(reason="hypothesis not installed")(fn)
+
+    return deco
+
+
+def settings(*_args, **_kwargs):
+    def deco(fn):
+        return fn
+
+    return deco
+
+
+class _AnyStrategy:
+    """Stands in for ``hypothesis.strategies``: every attribute is a callable
+    returning an inert placeholder (the test body never executes)."""
+
+    def __getattr__(self, _name):
+        return lambda *a, **k: None
+
+
+st = _AnyStrategy()
+strategies = st

@@ -73,6 +73,112 @@ def test_heavy_nodes_sweep_finds_the_heavy_vertex():
     assert len(found) <= 5  # few false positives at this budget
 
 
+@pytest.mark.parametrize("kind", ["gmatrix", "kmatrix"])
+def test_planted_path_is_always_reachable(kind):
+    """Plant an explicit 8-hop chain in noise; every (earlier, later) pair on
+    the chain must be reported reachable — one-sided error guarantees it."""
+    rng = np.random.default_rng(3)
+    noise_s = rng.integers(200, 300, 120).astype(np.int32)
+    noise_d = rng.integers(200, 300, 120).astype(np.int32)
+    chain = np.arange(9, dtype=np.int32)  # 0 -> 1 -> ... -> 8
+    src = np.concatenate([chain[:-1], noise_s])
+    dst = np.concatenate([chain[1:], noise_d])
+    keep = src != dst
+    src, dst = src[keep], dst[keep]
+
+    if kind == "gmatrix":
+        sk = MatrixSketch.create(bytes_budget=1 << 16, depth=4, seed=11)
+        sk = matrix_sketch.ingest(sk, EdgeBatch.from_numpy(src, dst))
+        reach_fn = queries.reachability
+    else:
+        stats = vertex_stats_from_sample(src, dst)
+        sk = KMatrix.create(bytes_budget=1 << 16, stats=stats, depth=4,
+                            seed=11, conn_frac=0.5)
+        sk = kmatrix.ingest(sk, EdgeBatch.from_numpy(src, dst))
+        reach_fn = queries.kmatrix_reachability
+
+    qs, qd = [], []
+    for i in range(9):
+        for j in range(i + 1, 9):
+            qs.append(i)
+            qd.append(j)
+    est = np.asarray(reach_fn(sk, jnp.asarray(qs, jnp.int32),
+                              jnp.asarray(qd, jnp.int32)))
+    assert est.all(), "planted path reported unreachable (false negative)"
+
+
+def test_heavy_nodes_padding_contract():
+    """Static-shape contract: output length is universe rounded up to chunk,
+    misses hold id -1 / freq 0, and every valid id is inside the universe."""
+    src = np.concatenate([np.full(300, 5, np.int32),
+                          np.arange(20, dtype=np.int32)])
+    dst = (np.concatenate([np.arange(300, dtype=np.int32),
+                           np.arange(20, dtype=np.int32) + 1]) % 90).astype(
+        np.int32)
+    sk = MatrixSketch.create(bytes_budget=1 << 18, depth=4, seed=2)
+    sk = matrix_sketch.ingest(sk, EdgeBatch.from_numpy(src, dst))
+    universe, chunk = 90, 64
+    ids, freqs = queries.heavy_nodes(
+        lambda v: matrix_sketch.node_out_freq(sk, v), universe,
+        threshold=250, chunk=chunk)
+    ids, freqs = np.asarray(ids), np.asarray(freqs)
+    padded = -(-universe // chunk) * chunk
+    assert ids.shape == freqs.shape == (padded,)
+    miss = ids < 0
+    assert (ids[miss] == -1).all()
+    assert (freqs[miss] == 0).all()
+    valid = ids[~miss]
+    assert ((valid >= 0) & (valid < universe)).all()
+    assert (freqs[~miss] >= 250).all()
+    assert 5 in set(valid.tolist())
+
+
+def test_path_and_subgraph_weight_vs_exact_ground_truth():
+    """At a generous budget (no collisions) both composite estimators equal
+    the exact sums; at any budget they stay one-sided (>= exact)."""
+    src = np.asarray([0, 1, 2, 3, 0, 2], np.int32)
+    dst = np.asarray([1, 2, 3, 4, 2, 4], np.int32)
+    w = np.asarray([3, 7, 2, 5, 1, 9], np.int32)
+    sk = MatrixSketch.create(bytes_budget=1 << 20, depth=4, seed=8)
+    sk = matrix_sketch.ingest(sk, EdgeBatch.from_numpy(src, dst, w))
+    fn = lambda s, d: matrix_sketch.edge_freq(sk, s, d)
+
+    # path 0 -> 1 -> 2 -> 3 -> 4: exact 3 + 7 + 2 + 5 = 17
+    pw = int(queries.path_weight(fn, jnp.asarray([0, 1, 2, 3, 4], jnp.int32)))
+    assert pw == 17
+
+    # subgraph {(0,2), (2,4)}: exact 1 + 9 = 10
+    sw = int(queries.subgraph_weight(fn, jnp.asarray([0, 2], jnp.int32),
+                                     jnp.asarray([2, 4], jnp.int32)))
+    assert sw == 10
+
+    # one-sidedness survives a starved budget
+    tiny = MatrixSketch.create(bytes_budget=1 << 8, depth=2, seed=8)
+    tiny = matrix_sketch.ingest(tiny, EdgeBatch.from_numpy(src, dst, w))
+    tfn = lambda s, d: matrix_sketch.edge_freq(tiny, s, d)
+    assert int(queries.path_weight(
+        tfn, jnp.asarray([0, 1, 2, 3, 4], jnp.int32))) >= 17
+    assert int(queries.subgraph_weight(
+        tfn, jnp.asarray([0, 2], jnp.int32),
+        jnp.asarray([2, 4], jnp.int32))) >= 10
+
+
+def test_closure_injection_matches_one_shot_reachability():
+    """build_closure + reachability_from_closure == the classic wrappers."""
+    src, dst = _graph(4)
+    stats = vertex_stats_from_sample(src, dst)
+    sk = KMatrix.create(bytes_budget=1 << 16, stats=stats, depth=3, seed=6,
+                        conn_frac=0.4)
+    sk = kmatrix.ingest(sk, EdgeBatch.from_numpy(src, dst))
+    qs = jnp.asarray(src[:20], jnp.int32)
+    qd = jnp.asarray(dst[5:25], jnp.int32)
+    one_shot = np.asarray(queries.kmatrix_reachability(sk, qs, qd))
+    closure = queries.build_closure(queries.closure_layers(sk))
+    injected = np.asarray(queries.reachability_from_closure(
+        closure, queries.reach_cells(sk, qs), queries.reach_cells(sk, qd)))
+    assert (one_shot == injected).all()
+
+
 def test_heavy_edges_and_path_weight():
     src = np.asarray([1, 1, 2, 3], np.int32)
     dst = np.asarray([2, 2, 3, 4], np.int32)

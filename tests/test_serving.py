@@ -1,0 +1,295 @@
+"""Serving subsystem: registry, snapshot isolation, engine exactness,
+closure caching, merge hardening, load generator."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import EdgeBatch, KMatrix, MatrixSketch, vertex_stats_from_sample
+from repro.core import countmin, gsketch, kmatrix, matrix_sketch
+from repro.serving import (
+    OpenLoopLoadGen,
+    QueryEngine,
+    SketchRegistry,
+    SnapshotBuffer,
+    TenantKey,
+    WorkloadMix,
+    synth_requests,
+)
+from repro.serving import engine as eng
+from repro.serving.registry import build_sketch
+
+
+@pytest.fixture(scope="module")
+def registry():
+    reg = SketchRegistry(depth=3, batch_size=1024, scale=0.02)
+    return reg
+
+
+@pytest.fixture(scope="module")
+def tenant(registry):
+    t = registry.open("cit-HepPh", "kmatrix", 64, seed=0)
+    t.step(2)
+    t.publish()
+    return t
+
+
+def _values_match(a, b):
+    if isinstance(a, tuple):
+        return np.array_equal(a[0], b[0]) and np.array_equal(a[1], b[1])
+    return a == b
+
+
+# ---------------------------------------------------------------- registry
+def test_registry_open_is_idempotent(registry, tenant):
+    again = registry.open("cit-HepPh", "kmatrix", 64, seed=0)
+    assert again is tenant
+    assert TenantKey("cit-HepPh", "kmatrix", 64, 0) in registry
+
+
+def test_registry_multi_tenant_isolated_by_key(registry, tenant):
+    other = registry.open("cit-HepPh", "gmatrix", 64, seed=0)
+    assert other is not tenant
+    assert other.key.tenant_id != tenant.key.tenant_id
+    assert len(registry) >= 2
+
+
+def test_tenant_step_consumes_stream_and_counts_edges(registry):
+    t = registry.open("cit-HepPh", "kmatrix", 64, seed=3)
+    n = t.step(2)
+    snap = t.publish()
+    assert n == 2
+    assert snap.epoch == 1
+    assert snap.n_edges == 2 * t.stream.batch_size  # no padding mid-stream
+
+
+# ---------------------------------------------------------------- snapshots
+def test_snapshot_isolation_under_live_ingest(registry):
+    t = registry.open("cit-HepPh", "kmatrix", 64, seed=5)
+    t.step(1)
+    held = t.publish()
+    engine = QueryEngine()
+    reqs = [eng.edge_freq(1, 2), eng.node_out(3), eng.reach(4, 9)]
+    before = [r.value for r in engine.execute(held, reqs)]
+
+    t.step(2)
+    new = t.publish()
+    assert new.epoch == held.epoch + 1
+    after_held = [r.value for r in engine.execute(held, reqs)]
+    assert before == after_held, "held snapshot changed under ingest"
+
+
+def test_publish_epochs_are_monotonic_and_results_stamped(tenant):
+    engine = QueryEngine()
+    res = engine.execute(tenant.snapshot, [eng.edge_freq(0, 1)])
+    assert res[0].epoch == tenant.snapshot.epoch
+
+
+def test_delta_buffer_equals_all_at_once_ingest():
+    """front ⊕ delta publishing must equal ingesting everything into one
+    sketch (counter additivity)."""
+    rng = np.random.default_rng(0)
+    src = rng.integers(0, 50, 400).astype(np.int32)
+    dst = rng.integers(0, 50, 400).astype(np.int32)
+    stats = vertex_stats_from_sample(src, dst)
+    sk = KMatrix.create(bytes_budget=1 << 14, stats=stats, depth=3, seed=1)
+
+    buf = SnapshotBuffer(sk, kmatrix, tenant_id="t")
+    for lo in range(0, 400, 100):
+        buf.ingest(EdgeBatch.from_numpy(src[lo:lo + 100], dst[lo:lo + 100]))
+        buf.publish()
+    direct = kmatrix.ingest(sk, EdgeBatch.from_numpy(src, dst))
+    assert (np.asarray(buf.snapshot.sketch.pool)
+            == np.asarray(direct.pool)).all()
+    assert (np.asarray(buf.snapshot.sketch.conn)
+            == np.asarray(direct.conn)).all()
+    assert buf.snapshot.epoch == 4
+    assert buf.snapshot.n_edges == 400
+
+
+# ---------------------------------------------------------------- engine
+@pytest.mark.parametrize("kind", ["kmatrix", "gmatrix"])
+def test_engine_matches_direct_for_all_families(registry, kind):
+    t = registry.open("cit-HepPh", kind, 64, seed=1)
+    t.step(2)
+    snap = t.publish()
+    n_nodes = t.stream.spec.n_nodes
+    mix = WorkloadMix()
+    reqs = synth_requests(150, mix, n_nodes=n_nodes, seed=2,
+                          heavy_universe=min(n_nodes, 512),
+                          heavy_threshold=50.0)
+    engine = QueryEngine(min_bucket=16)
+    got = [r.value for r in engine.execute(snap, reqs)]
+    want = eng.direct_answers(snap, reqs)
+    for i, (g, w) in enumerate(zip(got, want)):
+        assert _values_match(g, w), (i, reqs[i].family, g, w)
+
+
+def test_engine_padding_odd_batch_sizes(tenant):
+    engine = QueryEngine(min_bucket=4)
+    for n in (1, 3, 5, 17):
+        reqs = [eng.edge_freq(i, i + 1) for i in range(n)]
+        got = [r.value for r in engine.execute(tenant.snapshot, reqs)]
+        want = eng.direct_answers(tenant.snapshot, reqs)
+        assert got == want
+
+
+def test_engine_unsupported_family_raises(registry, tenant):
+    engine = QueryEngine()
+    with pytest.raises(ValueError, match="node_in"):
+        engine.execute(tenant.snapshot, [eng.node_in(1)])
+    cm = registry.open("cit-HepPh", "countmin", 16, seed=0)
+    cm.step(1)
+    snap = cm.publish()
+    with pytest.raises(ValueError, match="node_out"):
+        engine.execute(snap, [eng.node_out(1)])
+    # edge-level families still work on countmin
+    vals = [r.value for r in engine.execute(
+        snap, [eng.edge_freq(1, 2), eng.path_weight([1, 2, 3])])]
+    assert vals == eng.direct_answers(snap, [eng.edge_freq(1, 2),
+                                             eng.path_weight([1, 2, 3])])
+
+
+def test_closure_cache_hits_within_epoch_invalidates_across(registry):
+    t = registry.open("cit-HepPh", "kmatrix", 64, seed=7)
+    t.step(1)
+    snap = t.publish()
+    engine = QueryEngine()
+    reqs = [eng.reach(1, 2), eng.reach(3, 4)]
+    engine.execute(snap, reqs)
+    assert engine.closures.misses == 1
+    engine.execute(snap, reqs)
+    assert engine.closures.hits == 1, "same epoch must hit the closure cache"
+    t.step(1)
+    snap2 = t.publish()
+    engine.execute(snap2, reqs)
+    assert engine.closures.misses == 2, "new epoch must rebuild the closure"
+
+
+def test_engine_rejects_unknown_sketch_type():
+    with pytest.raises(TypeError):
+        eng.sketch_module(object())
+
+
+# ---------------------------------------------------------------- merges
+def test_merge_rejects_mismatched_hash_seeds():
+    rng = np.random.default_rng(0)
+    src = rng.integers(0, 40, 100).astype(np.int32)
+    dst = rng.integers(0, 40, 100).astype(np.int32)
+    stats = vertex_stats_from_sample(src, dst)
+    for name, mod in [("kmatrix", kmatrix), ("gmatrix", matrix_sketch),
+                      ("countmin", countmin), ("gsketch", gsketch)]:
+        a, _ = build_sketch(name, 1 << 14, stats, 3, seed=0)
+        b, _ = build_sketch(name, 1 << 14, stats, 3, seed=1)
+        with pytest.raises(ValueError, match="hash families"):
+            mod.merge(a, b)
+
+
+def test_merge_rejects_mismatched_partition_plans():
+    """Same budget/depth/seed but different bootstrap samples: layouts and
+    hash families agree, routing does not — merge must refuse."""
+    rng = np.random.default_rng(0)
+    stats_a = vertex_stats_from_sample(
+        rng.integers(0, 100, 200).astype(np.int32),
+        rng.integers(0, 100, 200).astype(np.int32))
+    stats_b = vertex_stats_from_sample(
+        rng.integers(100, 200, 200).astype(np.int32),
+        rng.integers(100, 200, 200).astype(np.int32))
+    for name, mod in [("kmatrix", kmatrix), ("gsketch", gsketch)]:
+        a, _ = build_sketch(name, 1 << 14, stats_a, 3, seed=1)
+        b, _ = build_sketch(name, 1 << 14, stats_b, 3, seed=1)
+        if a.pool_size != b.pool_size:
+            continue  # layouts differ -> already rejected by the assert
+        with pytest.raises(ValueError, match="partition plans"):
+            mod.merge(a, b)
+
+
+def test_engine_splits_groups_larger_than_max_bucket(tenant):
+    engine = QueryEngine(min_bucket=4, max_bucket=8)
+    reqs = [eng.edge_freq(i, i + 1) for i in range(21)]
+    got = [r.value for r in engine.execute(tenant.snapshot, reqs)]
+    assert got == eng.direct_answers(tenant.snapshot, reqs)
+    with pytest.raises(ValueError, match="split the path"):
+        engine.execute(tenant.snapshot, [eng.path_weight(range(100))])
+
+
+def test_anonymous_buffers_do_not_share_closure_cache():
+    """Two hand-built buffers at the same epoch must not serve each other's
+    cached closures."""
+    rng = np.random.default_rng(2)
+    src = rng.integers(0, 60, 300).astype(np.int32)
+    dst = rng.integers(0, 60, 300).astype(np.int32)
+    stats = vertex_stats_from_sample(src, dst)
+    sk = KMatrix.create(bytes_budget=1 << 15, stats=stats, depth=3, seed=1,
+                        conn_frac=0.5)
+    full = SnapshotBuffer(kmatrix.ingest(sk, EdgeBatch.from_numpy(src, dst)),
+                          kmatrix)
+    empty = SnapshotBuffer(sk, kmatrix)
+    full.publish()
+    empty.publish()
+    assert full.snapshot.tenant_id != empty.snapshot.tenant_id
+    engine = QueryEngine()
+    reqs = [eng.reach(int(s), int(d)) for s, d in zip(src[:30], dst[:30])]
+    assert all(r.value for r in engine.execute(full.snapshot, reqs))
+    # empty sketch has no edges: nothing (beyond self-loops) is reachable,
+    # which a shared cache entry from `full` would contradict
+    empty_vals = [r.value for r in engine.execute(empty.snapshot, reqs)]
+    want = eng.direct_answers(empty.snapshot, reqs)
+    assert empty_vals == want
+
+
+def test_merge_accepts_same_seed_and_adds_counters():
+    sk = MatrixSketch.create(bytes_budget=1 << 14, depth=3, seed=4)
+    batch = EdgeBatch.from_numpy(np.asarray([1, 2], np.int32),
+                                 np.asarray([2, 3], np.int32))
+    a = matrix_sketch.ingest(sk, batch)
+    m = matrix_sketch.merge(a, a)
+    assert (np.asarray(m.table) == 2 * np.asarray(a.table)).all()
+
+
+def test_empty_like_zeroes_counters_and_keeps_hashes():
+    rng = np.random.default_rng(1)
+    src = rng.integers(0, 40, 100).astype(np.int32)
+    dst = rng.integers(0, 40, 100).astype(np.int32)
+    stats = vertex_stats_from_sample(src, dst)
+    sk, mod = build_sketch("kmatrix", 1 << 14, stats, 3, seed=2)
+    sk = mod.ingest(sk, EdgeBatch.from_numpy(src, dst))
+    z = mod.empty_like(sk)
+    assert int(np.asarray(z.pool).sum()) == 0
+    assert int(np.asarray(z.conn).sum()) == 0
+    assert (np.asarray(z.hashes.a) == np.asarray(sk.hashes.a)).all()
+    # merging the zero delta back is the identity
+    m = mod.merge(sk, z)
+    assert (np.asarray(m.pool) == np.asarray(sk.pool)).all()
+
+
+# ---------------------------------------------------------------- loadgen
+def test_loadgen_open_loop_reports_latency_and_families(tenant):
+    engine = QueryEngine(min_bucket=16)
+    n_nodes = tenant.stream.spec.n_nodes
+    reqs = synth_requests(60, WorkloadMix(), n_nodes=n_nodes, seed=4,
+                          heavy_universe=min(n_nodes, 256),
+                          heavy_threshold=50.0)
+    lg = OpenLoopLoadGen(target_qps=5000.0, batch_max=32)
+    ticks = [0]
+
+    def tick():
+        ticks[0] += 1
+
+    report = lg.run(engine, lambda: tenant.snapshot, reqs,
+                    between_batches=tick)
+    assert report.n_requests == 60
+    assert report.achieved_qps > 0
+    assert report.p99_ms >= report.p50_ms >= 0
+    assert sum(report.family_counts.values()) == 60
+    assert ticks[0] == report.n_batches
+    assert "achieved_qps" in report.to_json()
+
+
+def test_workload_mix_normalizes_and_validates():
+    mix = WorkloadMix(edge_freq=2.0, reach=2.0, node_out=0.0,
+                      path_weight=0.0, subgraph_weight=0.0, heavy_nodes=0.0)
+    norm = mix.normalized()
+    assert norm["edge_freq"] == pytest.approx(0.5)
+    reqs = synth_requests(40, mix, n_nodes=100, seed=0)
+    fams = {r.family for r in reqs}
+    assert fams <= {"edge_freq", "reach"}

@@ -205,12 +205,41 @@ def serve_mixed(scale: float, quick: bool) -> None:
           f"speedup={rec['closure_cache_speedup']}")
 
 
+def serve_concurrent(scale: float, quick: bool) -> None:
+    """Concurrent regime: background runtime ingest under live query load —
+    ingest edges/s and query p50/p99 side by side in one record."""
+    from benchmarks.serve_bench import run_serve_bench_concurrent
+
+    _log("\n== serve_concurrent (background ingest worker + loadgen) ==")
+    rec = run_serve_bench_concurrent(
+        scale=scale, n_requests=1000 if quick else 4000,
+        target_qps=1000.0 if quick else 2000.0)
+    if not rec["engine_matches_direct"]:
+        raise RuntimeError(
+            "serve_concurrent: engine answers diverged from direct queries "
+            "on a published epoch")
+    if not rec["conservation_ok"]:
+        raise RuntimeError(
+            f"serve_concurrent: edge conservation failed "
+            f"(unaccounted={rec['unaccounted_edges']})")
+    _emit("serve/concurrent_qps", 1e6 / max(rec["achieved_qps"], 1e-9),
+          f"qps={rec['achieved_qps']};p50_ms={rec['p50_ms']};"
+          f"p99_ms={rec['p99_ms']};"
+          f"ingest_eps={rec['ingest_edges_per_s_during_serve']}")
+    _emit("serve/concurrent_ingest",
+          rec["mean_publish_latency_ms"] * 1e3,
+          f"epochs={rec['epochs_published']};"
+          f"max_queue_depth={rec['max_queue_depth']};"
+          f"dropped={rec['dropped_edges']}")
+
+
 BENCHES = {
     "fig6_build_time": lambda a: fig6_build_time(a.scale),
     "fig7_are": lambda a: fig7_fig8_accuracy(a.scale, a.quick),
     "partitioner_ablation": lambda a: partitioner_ablation(a.scale),
     "kernel_micro": lambda a: kernel_micro(a.quick),
     "serve_mixed": lambda a: serve_mixed(a.scale, a.quick),
+    "serve_concurrent": lambda a: serve_concurrent(a.scale, a.quick),
 }
 
 

@@ -12,9 +12,16 @@ The BENCH trajectory's serving row.  Measures, in one process:
   * exactness: engine answers vs direct ``repro.core.queries`` answers for
     the same snapshot (hard-fails the bench on any mismatch).
 
+``--concurrent`` switches ingest to a ``repro.runtime`` background worker:
+queries and ingest genuinely overlap, the JSON reports ingest edges/s and
+query p50/p99 side by side, the engine-vs-direct gate is re-checked on
+EVERY epoch the worker published, and the graceful ``Runtime.stop()`` must
+drain with zero unaccounted edges (published + accounted drops == stream
+total) — both gates hard-fail the bench.
+
 Emits a single JSON line on stdout (progress goes to stderr):
 
-  PYTHONPATH=src python -m benchmarks.serve_bench --quick
+  PYTHONPATH=src python -m benchmarks.serve_bench --quick [--concurrent]
 """
 from __future__ import annotations
 
@@ -30,8 +37,9 @@ from repro.serving import (
     OpenLoopLoadGen,
     QueryEngine,
     SketchRegistry,
-    WorkloadMix,
+    mix_for_sketch,
     synth_requests,
+    warm_bucket_ladder,
 )
 from repro.serving import engine as eng
 
@@ -69,27 +77,16 @@ def run_serve_bench(*, dataset: str = "cit-HepPh", sketch: str = "kmatrix",
     _log(f"tenant {tenant.key.tenant_id}: epoch {snap.epoch}, "
          f"{snap.n_edges} edges ingested, universe {n_nodes}")
 
-    mix = WorkloadMix()
-    if sketch in ("countmin", "gsketch"):
-        # Type I sketches answer only edge-level families
-        mix = WorkloadMix(edge_freq=0.8, reach=0.0, node_out=0.0,
-                          path_weight=0.1, subgraph_weight=0.1,
-                          heavy_nodes=0.0)
+    mix = mix_for_sketch(sketch)
     requests = synth_requests(n_requests, mix, n_nodes=n_nodes, seed=seed + 7,
                               heavy_universe=min(n_nodes, 1 << 14),
                               heavy_threshold=100.0)
 
     # ---- warmup: compile the whole bucket ladder off the clock ------------
-    # Arrival batching produces batches of many sizes; walk the power-of-two
-    # ladder so the measured run hits compiled buckets for every family.
     warm = synth_requests(max(batch_max, 256), mix, n_nodes=n_nodes, seed=99,
                           heavy_universe=min(n_nodes, 1 << 14),
                           heavy_threshold=100.0)
-    size = 16
-    while size < len(warm):
-        engine.execute(snap, warm[:size])
-        size *= 2
-    engine.execute(snap, warm)
+    warm_bucket_ladder(engine, snap, warm)
 
     # ---- closure cache: cold rebuild vs hit, same snapshot ----------------
     # Two views, medians of 7 reps each: (a) the cache itself — closure
@@ -180,6 +177,117 @@ def run_serve_bench(*, dataset: str = "cit-HepPh", sketch: str = "kmatrix",
     return record
 
 
+def run_serve_bench_concurrent(*, dataset: str = "cit-HepPh",
+                               sketch: str = "kmatrix", budget_kb: int = 256,
+                               depth: int = 5, seed: int = 0,
+                               scale: float = 1.0,
+                               target_qps: float = 2000.0,
+                               n_requests: int = 4000, batch_max: int = 512,
+                               publish_every: int = 2, warm_batches: int = 8,
+                               queue_capacity: int = 64,
+                               backpressure: str = "block",
+                               publish_policy: str = "",
+                               epoch_check_requests: int = 32) -> dict:
+    """Concurrent regime: loadgen in the main thread, ingest in a
+    ``repro.runtime`` worker.  Gates (both hard-fail): engine == direct on
+    every published epoch; conservation (published + drops == stream total)
+    after a graceful drain."""
+    from repro.runtime import Runtime
+
+    registry = SketchRegistry(depth=depth, scale=scale)
+    tenant = registry.open(dataset, sketch, budget_kb, seed=seed)
+    engine = QueryEngine()
+
+    tenant.step(min(warm_batches, max(1, tenant.stream.num_batches // 2)))
+    snap = tenant.publish()
+    n_nodes = tenant.stream.spec.n_nodes
+    _log(f"tenant {tenant.key.tenant_id}: warm epoch {snap.epoch}, "
+         f"{snap.n_edges} edges ingested, universe {n_nodes}")
+
+    mix = mix_for_sketch(sketch)
+    requests = synth_requests(n_requests, mix, n_nodes=n_nodes, seed=seed + 7,
+                              heavy_universe=min(n_nodes, 1 << 14),
+                              heavy_threshold=100.0)
+    warm = synth_requests(max(batch_max, 256), mix, n_nodes=n_nodes, seed=99,
+                          heavy_universe=min(n_nodes, 1 << 14),
+                          heavy_threshold=100.0)
+    warm_bucket_ladder(engine, snap, warm)
+
+    # every epoch the worker publishes lands here (snapshots are immutable,
+    # so holding them costs only references) and is exactness-gated below
+    published: list = [snap]
+    runtime = Runtime(queue_capacity=queue_capacity,
+                      backpressure=backpressure,
+                      publish_policy=publish_policy
+                      or f"every:{publish_every}")
+    runtime.attach(tenant, on_publish=published.append)
+    runtime.start()
+
+    loadgen = OpenLoopLoadGen(target_qps=target_qps, batch_max=batch_max)
+    t0 = time.perf_counter()
+    report = loadgen.run(engine, lambda: tenant.snapshot, requests)
+    serve_wall_s = time.perf_counter() - t0
+    mid = runtime.metrics()[tenant.key.tenant_id]
+    edges_during_serve = mid["ingested_edges"]
+    _log(report.to_json())
+
+    runtime.join_pumps()  # offer the whole stream, then drain-and-stop
+    final = runtime.stop(drain=True)[tenant.key.tenant_id]
+
+    # ---- gate 1: engine vs direct on EVERY published epoch ----------------
+    check = requests[:epoch_check_requests]
+    mismatched_epochs = []
+    for s in published:
+        got = [r.value for r in engine.execute(s, check)]
+        want = eng.direct_answers(s, check)
+        if not all(_values_match(g, w) for g, w in zip(got, want)):
+            mismatched_epochs.append(s.epoch)
+    if mismatched_epochs:
+        _log(f"MISMATCH engine vs direct at epochs {mismatched_epochs}")
+
+    # ---- gate 2: conservation after graceful drain ------------------------
+    stream_total = tenant.stream.spec.n_edges
+    conserved = (final["unaccounted_edges"] == 0
+                 and final["published_edges"] + final["dropped_edges"]
+                 == stream_total)
+    if not conserved:
+        _log(f"CONSERVATION FAILURE: published {final['published_edges']} "
+             f"+ dropped {final['dropped_edges']} != stream {stream_total} "
+             f"(unaccounted {final['unaccounted_edges']})")
+
+    return {
+        "bench": "serve_concurrent",
+        "dataset": dataset,
+        "sketch": sketch,
+        "budget_kb": budget_kb,
+        "depth": depth,
+        "backpressure": backpressure,
+        "publish_policy": publish_policy or f"every:{publish_every}",
+        "offered_qps": report.offered_qps,
+        "achieved_qps": round(report.achieved_qps, 1),
+        "p50_ms": round(report.p50_ms, 3),
+        "p99_ms": round(report.p99_ms, 3),
+        "n_requests": report.n_requests,
+        "n_batches": report.n_batches,
+        "ingest_edges_during_serve": edges_during_serve,
+        "ingest_edges_per_s_during_serve": round(
+            edges_during_serve / max(serve_wall_s, 1e-9), 1),
+        "ingest_edges_per_s_ewma": mid["edges_per_s_ewma"],
+        "epochs_published": len(published) - 1,
+        "epochs_checked": len(published),
+        "publishes": final["publishes"],
+        "mean_publish_latency_ms": final["mean_publish_latency_ms"],
+        "max_queue_depth": final["max_queue_depth"],
+        "dropped_edges": final["dropped_edges"],
+        "published_edges": final["published_edges"],
+        "stream_total_edges": stream_total,
+        "unaccounted_edges": final["unaccounted_edges"],
+        "conservation_ok": bool(conserved),
+        "engine_matches_direct": not mismatched_epochs,
+        **{f"engine_{k}": v for k, v in engine.stats.items()},
+    }
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--dataset", default="cit-HepPh")
@@ -192,6 +300,13 @@ def main() -> None:
     ap.add_argument("--n-requests", type=int, default=4000)
     ap.add_argument("--batch-max", type=int, default=512)
     ap.add_argument("--publish-every", type=int, default=2)
+    ap.add_argument("--concurrent", action="store_true",
+                    help="background runtime ingest concurrent with queries")
+    ap.add_argument("--backpressure", default="block",
+                    choices=["block", "drop_oldest"])
+    ap.add_argument("--publish-policy", default="",
+                    help="every:N | interval:S | drain[:W]")
+    ap.add_argument("--queue-capacity", type=int, default=64)
     ap.add_argument("--quick", action="store_true",
                     help="small scale + short run (CI)")
     args = ap.parse_args()
@@ -199,6 +314,22 @@ def main() -> None:
         args.scale = min(args.scale, 0.1)
         args.n_requests = min(args.n_requests, 1000)
         args.qps = min(args.qps, 1000.0)
+
+    if args.concurrent:
+        record = run_serve_bench_concurrent(
+            dataset=args.dataset, sketch=args.sketch,
+            budget_kb=args.budget_kb, depth=args.depth, seed=args.seed,
+            scale=args.scale, target_qps=args.qps,
+            n_requests=args.n_requests, batch_max=args.batch_max,
+            publish_every=args.publish_every,
+            queue_capacity=args.queue_capacity,
+            backpressure=args.backpressure,
+            publish_policy=args.publish_policy)
+        print(json.dumps(record))
+        if not (record["engine_matches_direct"]
+                and record["conservation_ok"]):
+            sys.exit(1)
+        return
 
     record = run_serve_bench(
         dataset=args.dataset, sketch=args.sketch, budget_kb=args.budget_kb,

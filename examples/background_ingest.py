@@ -1,0 +1,125 @@
+"""Background ingest runtime tour: workers, backpressure, crash recovery.
+
+    PYTHONPATH=src python examples/background_ingest.py
+
+Walks the `repro.runtime` layer end to end:
+
+  1. concurrency — two tenants ingest their streams in background worker
+     threads while the main thread fires queries the whole time; epochs
+     advance under live query load, answers stay snapshot-consistent;
+  2. lifecycle + metrics — live queue depth / edges-per-s / publish latency
+     while running, then a graceful drain-and-stop whose conservation
+     report accounts every offered edge (published + drops, zero silent);
+  3. crash safety — a second run is killed mid-stream, restored from its
+     last checkpoint into a fresh registry, resumed, and ends bit-identical
+     to the never-crashed sketch (seekable streams + additive counters).
+"""
+import tempfile
+import time
+
+import numpy as np
+
+from repro.runtime import Runtime
+from repro.serving import QueryEngine, SketchRegistry
+from repro.serving import engine as eng
+
+
+def wait_until(cond, timeout_s=60.0, poll_s=0.01):
+    deadline = time.monotonic() + timeout_s
+    while not cond():
+        assert time.monotonic() < deadline, "timed out"
+        time.sleep(poll_s)
+
+
+def main() -> None:
+    # ---- 1 + 2: two tenants ingesting in the background under query load --
+    registry = SketchRegistry(depth=3, batch_size=2048, scale=0.05)
+    t_small = registry.open("cit-HepPh", "kmatrix", 128, seed=0)
+    t_large = registry.open("cit-HepPh", "kmatrix", 512, seed=0)
+
+    runtime = Runtime(queue_capacity=8, backpressure="block",
+                      publish_policy="every:2", reservoir_k=1024)
+    for tenant in (t_small, t_large):
+        runtime.attach(tenant, throttle_s=0.02)  # throttle: keep it watchable
+
+    engine = QueryEngine(min_bucket=8)
+    queries = [eng.edge_freq(1, 2), eng.node_out(7), eng.reach(3, 11)]
+    engine.execute(t_small.snapshot, queries)  # compile before the clock
+
+    runtime.start()
+    epochs_seen: list[int] = []
+    while not runtime.join_pumps(timeout=0.05):
+        res = engine.execute(t_small.snapshot, queries)
+        assert len({r.epoch for r in res}) == 1, "one batch, one epoch"
+        epochs_seen.append(res[0].epoch)
+    m = runtime.metrics()[t_small.key.tenant_id]
+    print(f"live metrics: depth={m['queue_depth']} "
+          f"edges/s={m['edges_per_s_ewma']} epoch={m['epoch']} "
+          f"publish_ms={m['last_publish_latency_ms']}")
+    # HOW MANY distinct epochs the loop catches is scheduling-dependent;
+    # what is guaranteed is that the ones it sees never regress
+    assert epochs_seen == sorted(epochs_seen), "epochs regressed"
+    print(f"queried across {len(set(epochs_seen))} live epoch(s): "
+          f"{sorted(set(epochs_seen))}")
+
+    report = runtime.stop(drain=True)
+    assert t_small.epoch > 0, "background ingest must have published"
+    for tid, r in report.items():
+        print(f"{tid}: offered={r['offered_edges']} "
+              f"published={r['published_edges']} dropped={r['dropped_edges']} "
+              f"unaccounted={r['unaccounted_edges']}")
+        assert r["unaccounted_edges"] == 0, "graceful drain lost edges"
+    sample = runtime.handles()[0].worker.reservoir.sample
+    print(f"online reservoir sample: {len(sample[0])} edges maintained")
+
+    # ---- 3: kill mid-stream, restore from checkpoint, resume --------------
+    ckpt_dir = tempfile.mkdtemp(prefix="runtime_ckpt_")
+    reg_a = SketchRegistry(depth=3, batch_size=2048, scale=0.05)
+    victim = reg_a.open("cit-HepPh", "kmatrix", 128, seed=7)
+    rt_a = Runtime(queue_capacity=2, publish_policy="every:2",
+                   checkpoint_dir=ckpt_dir, checkpoint_every=1, poll_s=0.01)
+    handle = rt_a.attach(victim, throttle_s=0.05)
+    rt_a.start()
+    wait_until(lambda: handle.worker.metrics.checkpoints >= 2)
+    rt_a.kill()  # crash-like: queued + in-delta work is abandoned
+    print(f"killed mid-stream at offset {victim.offset} "
+          f"({handle.worker.metrics.checkpoints} checkpoints on disk)")
+
+    reg_b = SketchRegistry(depth=3, batch_size=2048, scale=0.05)
+    resumed = reg_b.open("cit-HepPh", "kmatrix", 128, seed=7)
+    rt_b = Runtime(queue_capacity=8, publish_policy="every:2",
+                   checkpoint_dir=ckpt_dir)
+    rt_b.attach(resumed, restore=True)
+    print(f"restored: epoch={resumed.epoch} offset={resumed.offset}")
+    rt_b.start()
+    assert rt_b.join_pumps(120)
+    rt_b.stop(drain=True)
+
+    # oracle: the same stream ingested once, no crash
+    import jax
+    from repro.core import kmatrix
+    reg_c = SketchRegistry(depth=3, batch_size=2048, scale=0.05)
+    oracle = reg_c.open("cit-HepPh", "kmatrix", 128, seed=7)
+    sk = oracle.snapshot.sketch
+    ing = jax.jit(kmatrix.ingest)
+    for b in oracle.stream:
+        sk = ing(sk, b)
+    assert (np.asarray(resumed.snapshot.sketch.pool)
+            == np.asarray(sk.pool)).all()
+    assert (np.asarray(resumed.snapshot.sketch.conn)
+            == np.asarray(sk.conn)).all()
+    print("crash -> restore -> resume is bit-identical to a clean run ✓")
+
+
+if __name__ == "__main__":
+    main()
+    # Skip interpreter teardown: XLA's CPU client occasionally aborts
+    # ("terminate called without an active exception") while destroying its
+    # thread pools after a multi-threaded run.  All runtimes are stopped and
+    # all assertions have passed by this point; there is nothing to clean up.
+    import os
+    import sys
+
+    sys.stdout.flush()
+    sys.stderr.flush()
+    os._exit(0)

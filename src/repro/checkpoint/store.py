@@ -74,6 +74,19 @@ def latest_step(directory: str) -> int | None:
     return int(ckpts[-1].split("_")[1])
 
 
+def read_meta(directory: str, step: int | None = None) -> dict:
+    """Metadata of checkpoint ``step`` (default: latest) without loading
+    arrays — lets callers validate identity/compatibility cheaply before a
+    full ``restore``."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {directory}")
+    path = os.path.join(directory, f"step_{step:010d}")
+    with open(os.path.join(path, "meta.json")) as f:
+        return json.load(f)
+
+
 def restore(directory: str, template: Any, step: int | None = None):
     """Restore into the structure of ``template``. Returns (state, meta)."""
     if step is None:

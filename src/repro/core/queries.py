@@ -20,6 +20,7 @@ matmuls (MXU-friendly on TPU) thresholded back to {0,1}.
 from __future__ import annotations
 
 import functools
+import os
 from typing import Callable
 
 import jax
@@ -33,14 +34,13 @@ def _bool_closure(adj: jax.Array, max_hops: int | None = None) -> jax.Array:
     """Reflexive-transitive closure of a boolean adjacency matrix [w, w]."""
     w = adj.shape[-1]
     reach = (adj | jnp.eye(w, dtype=bool)).astype(jnp.float32)
-    n_squarings = max(1, (w - 1).bit_length()) if max_hops is None else max(
-        1, (max_hops).bit_length()
-    )
 
     def body(_, r):
         return jnp.minimum(r @ r, 1.0)
 
-    reach = jax.lax.fori_loop(0, n_squarings, body, reach)
+    # _closure_steps is shared with the Pallas backend: both paths MUST
+    # square the same number of times or their closures diverge
+    reach = jax.lax.fori_loop(0, _closure_steps(w, max_hops), body, reach)
     return reach > 0.5
 
 
@@ -53,11 +53,57 @@ def _bool_closure(adj: jax.Array, max_hops: int | None = None) -> jax.Array:
 # §Serving).  The classic one-shot entry points below are thin wrappers.
 
 
+def _closure_steps(w: int, max_hops: int | None) -> int:
+    """Number of squarings covering paths of length ``max_hops`` (or any)."""
+    return (max(1, (w - 1).bit_length()) if max_hops is None
+            else max(1, max_hops.bit_length()))
+
+
 @functools.partial(jax.jit, static_argnames=("max_hops",))
-def build_closure(adj_layers: jax.Array,
-                  max_hops: int | None = None) -> jax.Array:
-    """Per-layer boolean closure: counter layers [d, w, w] -> bool [d, w, w]."""
+def _build_closure_jnp(adj_layers: jax.Array,
+                       max_hops: int | None = None) -> jax.Array:
     return jax.vmap(lambda a: _bool_closure(a > 0, max_hops))(adj_layers)
+
+
+@functools.partial(jax.jit, static_argnames=("n_steps", "block"))
+def _build_closure_pallas(adj_layers: jax.Array, n_steps: int,
+                          block: int) -> jax.Array:
+    # imported lazily so the pure-jnp query surface never requires Pallas
+    from repro.kernels.ops import accel_reach_closure
+
+    return accel_reach_closure(adj_layers, block=block, n_steps=n_steps)
+
+
+def closure_backend(backend: str | None = None) -> str:
+    """Resolve the closure backend: explicit arg > $REPRO_CLOSURE_BACKEND >
+    platform default (Pallas kernel on TPU, pure jnp elsewhere — the Pallas
+    path still *runs* off-TPU via ``interpret=True``, it is just slower than
+    XLA's fused matmuls, so it is opt-in there)."""
+    backend = backend or os.environ.get("REPRO_CLOSURE_BACKEND") or (
+        "pallas" if jax.default_backend() == "tpu" else "jnp")
+    if backend not in ("jnp", "pallas"):
+        raise ValueError(f"unknown closure backend {backend!r} "
+                         "(expected 'jnp' or 'pallas')")
+    return backend
+
+
+def build_closure(adj_layers: jax.Array, max_hops: int | None = None, *,
+                  backend: str | None = None) -> jax.Array:
+    """Per-layer boolean closure: counter layers [d, w, w] -> bool [d, w, w].
+
+    Backend dispatch (ROADMAP `kernels/reach_closure.py` item): ``"pallas"``
+    drives the tiled MXU squaring kernel (``kernels.ops.accel_reach_closure``,
+    interpret-mode off TPU), ``"jnp"`` the pure-XLA cascade.  Both compute
+    the identical boolean fixpoint — squarings of a 0/1 float matrix are
+    exact in f32 for w < 2^24 — and are parity-tested in tests/test_kernels.
+    """
+    if closure_backend(backend) == "jnp":
+        return _build_closure_jnp(adj_layers, max_hops)
+    w = adj_layers.shape[-1]
+    # pow-of-two tile <= 128 that covers small widths without overpadding
+    block = min(128, 1 << max(3, (max(w, 2) - 1).bit_length()))
+    return _build_closure_pallas(adj_layers, _closure_steps(w, max_hops),
+                                 block)
 
 
 def reachability_from_closure(closure: jax.Array, hi: jax.Array,

@@ -1,14 +1,25 @@
 """End-to-end online serving driver: ingest + snapshot publishing + queries.
 
-Runs the full serving story in one process: a registry tenant ingests its
-stream batch-by-batch, publishes an epoch-stamped snapshot every
-``--publish-every`` batches, and an open-loop load generator fires a mixed
-query workload (edge frequency, reachability, node aggregates, paths,
-subgraphs, heavy-node sweeps) at the batched query engine the whole time.
+Two ingest modes share the same tenant, engine and load generator:
+
+  cooperative (default)   ingest advances between served query batches in
+      ONE thread — the PR 1 behaviour, kept as the deterministic baseline.
+
+  --background-ingest     ingest runs in a ``repro.runtime`` worker thread
+      behind a bounded queue (``--backpressure``), publishing epochs under
+      ``--publish-policy``, while the load generator fires queries from the
+      main thread the whole time — queries and ingest genuinely overlap.
+      The summary gains runtime metrics (ingest edges/s, queue depth,
+      publish latency) and a conservation report (offered == published +
+      accounted drops); ``--checkpoint-dir`` adds crash-safe checkpoints
+      and ``--restore`` resumes from the latest one.
+
 Prints a JSON summary line (QPS, p50/p99 latency, epochs) on completion.
 
   python -m repro.launch.query_serve --dataset cit-HepPh --sketch kmatrix \
-      --budget-kb 256 --qps 2000 --n-requests 8000 [--scale 0.25]
+      --budget-kb 256 --qps 2000 --n-requests 8000 [--scale 0.25] \
+      [--background-ingest] [--backpressure drop_oldest] \
+      [--publish-policy interval:0.25]
 """
 from __future__ import annotations
 
@@ -22,11 +33,13 @@ from repro.serving import (
     QueryEngine,
     SketchRegistry,
     WorkloadMix,
+    mix_for_sketch,
     synth_requests,
+    warm_bucket_ladder,
 )
 
 
-def main() -> None:
+def parse_args(argv=None) -> argparse.Namespace:
     ap = argparse.ArgumentParser()
     ap.add_argument("--dataset", default="cit-HepPh")
     ap.add_argument("--sketch", default="kmatrix",
@@ -42,58 +55,67 @@ def main() -> None:
     ap.add_argument("--n-requests", type=int, default=8000)
     ap.add_argument("--batch-max", type=int, default=512)
     ap.add_argument("--publish-every", type=int, default=4,
-                    help="ingest batches between snapshot publishes")
+                    help="cooperative mode: ingest batches between publishes")
     ap.add_argument("--warm-batches", type=int, default=4,
                     help="ingest batches before serving starts")
     ap.add_argument("--mix", default="",
                     help="comma list family=weight, e.g. "
                          "'edge_freq=0.7,reach=0.3' (default: built-in mix)")
-    args = ap.parse_args()
+    # ---- background ingest runtime (repro.runtime) ----
+    ap.add_argument("--background-ingest", action="store_true",
+                    help="ingest in a worker thread behind a bounded queue; "
+                         "queries run truly concurrently")
+    ap.add_argument("--queue-capacity", type=int, default=64)
+    ap.add_argument("--backpressure", default="block",
+                    choices=["block", "drop_oldest", "spill"])
+    ap.add_argument("--publish-policy", default="",
+                    help="every:N | interval:S | drain[:W] "
+                         "(default: every:<--publish-every>)")
+    ap.add_argument("--spill-dir", default="",
+                    help="required for --backpressure spill")
+    ap.add_argument("--checkpoint-dir", default="",
+                    help="enable crash-safe checkpoints in background mode")
+    ap.add_argument("--checkpoint-every", type=int, default=16,
+                    help="batches between checkpoints (with --checkpoint-dir)")
+    ap.add_argument("--restore", action="store_true",
+                    help="resume from the latest checkpoint in "
+                         "--checkpoint-dir before serving")
+    args = ap.parse_args(argv)
+    if not args.background_ingest:
+        # these only take effect inside the runtime; silently ignoring them
+        # would serve a different run than the one asked for
+        for flag, is_set in [("--restore", args.restore),
+                             ("--checkpoint-dir", bool(args.checkpoint_dir)),
+                             ("--spill-dir", bool(args.spill_dir)),
+                             ("--backpressure",
+                              args.backpressure != "block"),
+                             ("--publish-policy", bool(args.publish_policy)),
+                             ("--queue-capacity",
+                              args.queue_capacity != 64)]:
+            if is_set:
+                ap.error(f"{flag} requires --background-ingest")
+    if args.restore and not args.checkpoint_dir:
+        ap.error("--restore requires --checkpoint-dir")
+    if args.backpressure == "spill" and not args.spill_dir:
+        # fail at parse time, not after the multi-second jit warm-up
+        ap.error("--backpressure spill requires --spill-dir")
+    return args
 
-    registry = SketchRegistry(depth=args.depth, scale=args.scale,
-                              partitioner=args.partitioner)
-    tenant = registry.open(args.dataset, args.sketch, args.budget_kb,
-                           seed=args.seed)
-    n_nodes = tenant.stream.spec.n_nodes
-    print(f"tenant {tenant.key.tenant_id}: stream "
-          f"{tenant.stream.num_batches} batches, universe {n_nodes}",
-          file=sys.stderr)
 
-    t0 = time.time()
-    tenant.step(min(args.warm_batches,
-                    max(1, tenant.stream.num_batches // 2)))
-    snap = tenant.publish()
-    print(f"warm: epoch {snap.epoch}, {snap.n_edges} edges in "
-          f"{time.time()-t0:.2f}s", file=sys.stderr)
+def build_mix(args) -> WorkloadMix:
+    if not args.mix:
+        return mix_for_sketch(args.sketch)
+    weights = {k: 0.0 for k in WorkloadMix().normalized()}
+    for part in args.mix.split(","):
+        k, v = part.split("=")
+        if k.strip() not in weights:
+            raise SystemExit(f"unknown query family {k.strip()!r} in --mix")
+        weights[k.strip()] = float(v)
+    return WorkloadMix(**weights)
 
-    mix = WorkloadMix()
-    if args.mix:
-        weights = {k: 0.0 for k in WorkloadMix().normalized()}
-        for part in args.mix.split(","):
-            k, v = part.split("=")
-            if k.strip() not in weights:
-                ap.error(f"unknown query family {k.strip()!r} in --mix")
-            weights[k.strip()] = float(v)
-        mix = WorkloadMix(**weights)
-    # countmin/gsketch cannot answer node/reach families; degrade gracefully
-    if args.sketch in ("countmin", "gsketch") and not args.mix:
-        mix = WorkloadMix(edge_freq=0.8, reach=0.0, node_out=0.0,
-                          path_weight=0.1, subgraph_weight=0.1,
-                          heavy_nodes=0.0)
 
-    requests = synth_requests(
-        args.n_requests, mix, n_nodes=n_nodes, seed=args.seed + 7,
-        heavy_universe=min(n_nodes, 1 << 14), heavy_threshold=100.0)
-
-    engine = QueryEngine()
-    size = 16  # compile the bucket ladder before the clock starts
-    warm = synth_requests(args.batch_max, mix, n_nodes=n_nodes, seed=99,
-                          heavy_universe=min(n_nodes, 1 << 14),
-                          heavy_threshold=100.0)
-    while size <= len(warm):
-        engine.execute(tenant.snapshot, warm[:size])
-        size *= 2
-
+def cooperative_serve(args, tenant, engine, requests) -> tuple:
+    """PR 1 behaviour: ingest interleaves with query batches, one thread."""
     ingested = [0]
 
     def live_ingest() -> None:
@@ -108,11 +130,82 @@ def main() -> None:
     loadgen = OpenLoopLoadGen(target_qps=args.qps, batch_max=args.batch_max)
     report = loadgen.run(engine, lambda: tenant.snapshot, requests,
                          between_batches=live_ingest)
-
     # drain whatever stream remains so the run is a full ingest too
     while tenant.step(16):
         pass
     final = tenant.publish()
+    return report, final, {"ingest_mode": "cooperative"}
+
+
+def background_serve(args, tenant, engine, requests) -> tuple:
+    """Queries (main thread) truly concurrent with a runtime ingest worker."""
+    from repro.runtime import Runtime
+
+    runtime = Runtime(
+        queue_capacity=args.queue_capacity,
+        backpressure=args.backpressure,
+        publish_policy=args.publish_policy or f"every:{args.publish_every}",
+        checkpoint_dir=args.checkpoint_dir or None,
+        checkpoint_every=args.checkpoint_every,
+        spill_dir=args.spill_dir or None,
+    )
+    runtime.attach(tenant, restore=args.restore)
+    runtime.start()
+    loadgen = OpenLoopLoadGen(target_qps=args.qps, batch_max=args.batch_max)
+    report = loadgen.run(engine, lambda: tenant.snapshot, requests)
+    mid_metrics = runtime.metrics()[tenant.key.tenant_id]
+    runtime.join_pumps()  # finish offering the stream, then drain
+    final_report = runtime.stop(drain=True)
+    tr = final_report[tenant.key.tenant_id]
+    extras = {
+        "ingest_mode": "background",
+        "backpressure": args.backpressure,
+        "publish_policy": args.publish_policy or f"every:{args.publish_every}",
+        "ingest_edges_per_s": mid_metrics["edges_per_s_ewma"],
+        "publishes": tr["publishes"],
+        "mean_publish_latency_ms": tr["mean_publish_latency_ms"],
+        "max_queue_depth": tr["max_queue_depth"],
+        "dropped_edges": tr["dropped_edges"],
+        "spilled_batches": tr["spilled_batches"],
+        "unaccounted_edges": tr["unaccounted_edges"],
+        "checkpoints": tr["checkpoints"],
+        "worker_state": tr["state"],
+    }
+    return report, tenant.snapshot, extras
+
+
+def main() -> None:
+    args = parse_args()
+    registry = SketchRegistry(depth=args.depth, scale=args.scale,
+                              partitioner=args.partitioner)
+    tenant = registry.open(args.dataset, args.sketch, args.budget_kb,
+                           seed=args.seed)
+    n_nodes = tenant.stream.spec.n_nodes
+    print(f"tenant {tenant.key.tenant_id}: stream "
+          f"{tenant.stream.num_batches} batches, universe {n_nodes}",
+          file=sys.stderr)
+
+    t0 = time.time()
+    if not args.restore:  # a restored tenant is already warm
+        tenant.step(min(args.warm_batches,
+                        max(1, tenant.stream.num_batches // 2)))
+        snap = tenant.publish()
+        print(f"warm: epoch {snap.epoch}, {snap.n_edges} edges in "
+              f"{time.time()-t0:.2f}s", file=sys.stderr)
+
+    mix = build_mix(args)
+    requests = synth_requests(
+        args.n_requests, mix, n_nodes=n_nodes, seed=args.seed + 7,
+        heavy_universe=min(n_nodes, 1 << 14), heavy_threshold=100.0)
+
+    engine = QueryEngine()
+    warm = synth_requests(args.batch_max, mix, n_nodes=n_nodes, seed=99,
+                          heavy_universe=min(n_nodes, 1 << 14),
+                          heavy_threshold=100.0)
+    warm_bucket_ladder(engine, tenant.snapshot, warm)
+
+    serve = background_serve if args.background_ingest else cooperative_serve
+    report, final, extras = serve(args, tenant, engine, requests)
 
     summary = {
         "driver": "query_serve",
@@ -126,9 +219,12 @@ def main() -> None:
         "n_requests": report.n_requests,
         "final_epoch": final.epoch,
         "total_edges": final.n_edges,
+        **extras,
         **{f"engine_{k}": v for k, v in engine.stats.items()},
     }
     print(json.dumps(summary))
+    if extras.get("unaccounted_edges"):
+        sys.exit(1)
 
 
 if __name__ == "__main__":

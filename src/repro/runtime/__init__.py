@@ -1,0 +1,67 @@
+"""repro.runtime — background ingest behind the serving engine.
+
+Turns the PR 1 registry into a genuinely concurrent system (DESIGN.md
+§Runtime): per-tenant ``IngestWorker`` threads pull stream batches from
+bounded queues with explicit backpressure (block / drop-oldest / spill,
+all drops accounted), fold them into the registry's delta sketch, and
+publish epochs under a pluggable ``PublishPolicy``; the ``Runtime``
+supervisor owns worker lifecycle (start, health, graceful drain-and-stop,
+crash-like kill), the per-tenant online reservoir sample, crash-safe
+checkpointing through ``repro.checkpoint.store``, and live metrics (queue
+depth, ingest lag, edges/s, publish latency, epoch age).
+
+Entry points: ``launch/query_serve.py --background-ingest`` and
+``benchmarks/serve_bench.py --concurrent``.
+"""
+from repro.runtime.metrics import RateEWMA, WorkerMetrics
+from repro.runtime.policies import (
+    EveryNBatches,
+    PublishPolicy,
+    QueueDrainWatermark,
+    WallClockInterval,
+    make_policy,
+)
+from repro.runtime.queueing import (
+    BACKPRESSURE_POLICIES,
+    BLOCK,
+    DROP_OLDEST,
+    SPILL,
+    BoundedEdgeQueue,
+    QueueItem,
+)
+from repro.runtime.supervisor import Runtime, StreamPump, TenantRuntime
+from repro.runtime.worker import (
+    CREATED,
+    DRAINING,
+    FAILED,
+    RUNNING,
+    STOPPED,
+    IngestWorker,
+    restore_worker_state,
+)
+
+__all__ = [
+    "RateEWMA",
+    "WorkerMetrics",
+    "EveryNBatches",
+    "PublishPolicy",
+    "QueueDrainWatermark",
+    "WallClockInterval",
+    "make_policy",
+    "BACKPRESSURE_POLICIES",
+    "BLOCK",
+    "DROP_OLDEST",
+    "SPILL",
+    "BoundedEdgeQueue",
+    "QueueItem",
+    "Runtime",
+    "StreamPump",
+    "TenantRuntime",
+    "IngestWorker",
+    "restore_worker_state",
+    "CREATED",
+    "RUNNING",
+    "DRAINING",
+    "STOPPED",
+    "FAILED",
+]

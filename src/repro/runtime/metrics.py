@@ -1,0 +1,103 @@
+"""Live per-worker ingest metrics (DESIGN.md §Runtime).
+
+One ``WorkerMetrics`` per ingest worker, written only by that worker's
+thread (single-writer; plain attribute stores are atomic under the GIL) and
+read by anyone via ``snapshot()``.  The rates use an exponentially-weighted
+moving average so a dashboard polling ``Runtime.metrics()`` sees the *recent*
+ingest rate, not a lifetime mean diluted by warmup.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+
+class RateEWMA:
+    """Exponentially-weighted event rate (events/s) with a time half-life."""
+
+    def __init__(self, halflife_s: float = 5.0) -> None:
+        self.halflife_s = halflife_s
+        self._rate = 0.0
+        self._last: float | None = None
+
+    def update(self, n: float, now: float | None = None) -> None:
+        now = time.monotonic() if now is None else now
+        if self._last is None:
+            self._last = now
+            return
+        dt = max(now - self._last, 1e-9)
+        inst = n / dt
+        alpha = 1.0 - 0.5 ** (dt / self.halflife_s)
+        self._rate += alpha * (inst - self._rate)
+        self._last = now
+
+    @property
+    def rate(self) -> float:
+        return self._rate
+
+
+@dataclasses.dataclass
+class WorkerMetrics:
+    """Single-writer counters for one ingest worker."""
+
+    started_at: float = 0.0
+    ingested_batches: int = 0
+    ingested_edges: int = 0
+    batches_since_publish: int = 0
+    publishes: int = 0
+    last_publish_at: float = 0.0
+    last_publish_latency_s: float = 0.0
+    publish_latency_sum_s: float = 0.0
+    checkpoints: int = 0
+    last_checkpoint_at: float = 0.0
+
+    def __post_init__(self) -> None:
+        self.edge_rate = RateEWMA()
+
+    def note_ingest(self, n_edges: int, now: float) -> None:
+        self.ingested_batches += 1
+        self.ingested_edges += n_edges
+        self.batches_since_publish += 1
+        self.edge_rate.update(n_edges, now)
+
+    def note_publish(self, latency_s: float, now: float) -> None:
+        self.publishes += 1
+        self.batches_since_publish = 0
+        self.last_publish_at = now
+        self.last_publish_latency_s = latency_s
+        self.publish_latency_sum_s += latency_s
+
+    def note_checkpoint(self, now: float) -> None:
+        self.checkpoints += 1
+        self.last_checkpoint_at = now
+
+    def snapshot(self, *, queue_stats: dict, state: str, epoch: int,
+                 now: float | None = None) -> dict:
+        """One JSON-able metrics view; ``queue_stats`` from the worker's queue."""
+        now = time.monotonic() if now is None else now
+        elapsed = max(now - self.started_at, 1e-9) if self.started_at else 0.0
+        return {
+            "state": state,
+            "epoch": epoch,
+            "epoch_age_s": round(now - self.last_publish_at, 4)
+            if self.last_publish_at else None,
+            "ingested_batches": self.ingested_batches,
+            "ingested_edges": self.ingested_edges,
+            "batches_since_publish": self.batches_since_publish,
+            "edges_per_s_ewma": round(self.edge_rate.rate, 1),
+            "edges_per_s_lifetime": round(self.ingested_edges / elapsed, 1)
+            if elapsed else 0.0,
+            "publishes": self.publishes,
+            "last_publish_latency_ms": round(
+                self.last_publish_latency_s * 1e3, 3),
+            "mean_publish_latency_ms": round(
+                self.publish_latency_sum_s / self.publishes * 1e3, 3)
+            if self.publishes else 0.0,
+            "checkpoints": self.checkpoints,
+            "queue_depth": queue_stats["depth"],
+            "ingest_lag_batches": queue_stats["depth"],
+            "dropped_batches": queue_stats["dropped_batches"],
+            "dropped_edges": queue_stats["dropped_edges"],
+            "spilled_batches": queue_stats["spilled_batches"],
+            "max_queue_depth": queue_stats["max_depth_seen"],
+        }

@@ -1,0 +1,257 @@
+"""Per-tenant background ingest worker (DESIGN.md §Runtime).
+
+One ``IngestWorker`` thread owns one tenant's write path end to end: it
+pulls ``QueueItem``s from the tenant's bounded queue, folds them into the
+registry's delta sketch (``SnapshotBuffer.ingest``), feeds the tenant's
+online reservoir sample, publishes epochs when its ``PublishPolicy`` says
+so, and writes crash-safe checkpoints through ``repro.checkpoint.store``.
+
+Single-writer discipline: everything the worker mutates (delta buffer,
+stream offset, reservoir, metrics) is touched by this thread only, EXCEPT
+checkpoint capture, which any thread may request — ``_state_lock`` makes
+the (buffer state, ingested offset, reservoir) triple mutually consistent
+for that one reader.  Queries never take any of these locks: they read the
+published snapshot reference, which is immutable.
+
+Worker lifecycle::
+
+    CREATED --start()--> RUNNING --request_stop(drain=True)--> DRAINING
+        RUNNING/DRAINING --queue empty--> STOPPED   (final publish + ckpt)
+        RUNNING --request_stop(drain=False)--> STOPPED  (crash-like: no
+                final publish, no final checkpoint — restore must replay)
+        any ----unhandled exception----> FAILED     (error kept for health())
+"""
+from __future__ import annotations
+
+import threading
+import time
+
+from repro.checkpoint import store
+from repro.core.types import EdgeBatch
+from repro.runtime.metrics import WorkerMetrics
+from repro.runtime.policies import PublishPolicy
+from repro.runtime.queueing import BoundedEdgeQueue, QueueItem
+from repro.streams.reservoir import Reservoir
+
+CREATED = "created"
+RUNNING = "running"
+DRAINING = "draining"
+STOPPED = "stopped"
+FAILED = "failed"
+
+
+class IngestWorker(threading.Thread):
+    def __init__(self, tenant, queue: BoundedEdgeQueue,
+                 policy: PublishPolicy, *,
+                 reservoir: Reservoir | None = None,
+                 checkpoint_dir: str | None = None,
+                 checkpoint_every: int = 0,
+                 on_publish=None,
+                 poll_s: float = 0.05) -> None:
+        super().__init__(name=f"ingest-{tenant.key.tenant_id}", daemon=True)
+        self.tenant = tenant
+        self.queue = queue
+        self.policy = policy
+        self.reservoir = reservoir
+        self.checkpoint_dir = checkpoint_dir
+        self.checkpoint_every = checkpoint_every
+        self.on_publish = on_publish
+        self.poll_s = poll_s
+        self.metrics = WorkerMetrics()
+        self.state = CREATED
+        self.error: BaseException | None = None
+        self._stop_event = threading.Event()
+        self._drain = True
+        self._state_lock = threading.Lock()
+        self._ingested_offset = tenant.offset - 1  # last batch folded in
+        self._batches_since_checkpoint = 0
+        # conservation baseline: edges already in the tenant (published +
+        # pending delta) before this worker touched it
+        self.base_edges = (tenant.snapshot.n_edges
+                          + tenant.buffer.pending_edges)
+
+    # -------------------------------------------------------------- lifecycle
+    def request_stop(self, drain: bool = True) -> None:
+        """Ask the worker to exit.  ``drain=True`` consumes the queue, takes
+        a final publish (and checkpoint, if configured), then stops.
+        ``drain=False`` is a crash-like hard stop: in-queue and in-delta
+        work is abandoned exactly as a SIGKILL would abandon it."""
+        self._drain = drain
+        self._stop_event.set()
+        if not drain:
+            self.queue.close()
+
+    def run(self) -> None:  # thread body
+        self.state = RUNNING
+        self.metrics.started_at = time.monotonic()
+        try:
+            while True:
+                item = self.queue.get(timeout=self.poll_s)
+                now = time.monotonic()
+                if item is None:
+                    if self._stop_event.is_set():
+                        if not self._drain or self.queue.depth() == 0:
+                            break
+                        self.state = DRAINING
+                        continue
+                    # idle tick: wall-clock policies may still want to
+                    # surface a lingering delta as a fresh epoch
+                    if self._should_publish(now):
+                        self._publish()
+                    continue
+                if self._stop_event.is_set() and not self._drain:
+                    break  # hard stop: abandon the item, like a crash would
+                if self._stop_event.is_set():
+                    self.state = DRAINING
+                self._ingest(item, now)
+                if self._should_publish(time.monotonic()):
+                    self._publish()
+                if (self.checkpoint_dir and self.checkpoint_every
+                        and self._batches_since_checkpoint
+                        >= self.checkpoint_every):
+                    self.checkpoint()
+            if self._drain:
+                # graceful exit: surface everything ingested, then persist.
+                # Gate on the buffer's actual pending count, not just this
+                # run's batch counter: a restored checkpoint can carry a
+                # non-empty delta even when no new batch arrived (stream
+                # already exhausted), and it must still reach an epoch.
+                if (self.metrics.batches_since_publish
+                        or self.tenant.buffer.pending_edges):
+                    self._publish()
+                if self.checkpoint_dir:
+                    self.checkpoint()
+            self.state = STOPPED
+        except BaseException as exc:
+            # don't re-raise: a dying thread would only reach
+            # threading.excepthook; the supervisor reads state/error instead
+            self.error = exc
+            self.state = FAILED
+
+    # ----------------------------------------------------------------- ingest
+    def _ingest(self, item: QueueItem, now: float) -> None:
+        batch = EdgeBatch.from_numpy(item.src, item.dst, item.weight)
+        with self._state_lock:
+            self.tenant.buffer.ingest(batch)
+            if self.reservoir is not None:
+                self.reservoir.offer_batch(item.src, item.dst, item.weight)
+            if item.offset >= 0:
+                # externally submitted batches carry offset -1: they are not
+                # part of the seekable stream, so they must not move the
+                # stream cursor (checkpoint replay would double-count)
+                self._ingested_offset = item.offset
+                self.tenant.offset = item.offset + 1
+        self.metrics.note_ingest(item.n_edges, now)
+        self._batches_since_checkpoint += 1
+
+    def _should_publish(self, now: float) -> bool:
+        return self.policy.should_publish(
+            batches_since_publish=self.metrics.batches_since_publish,
+            now=now, queue_depth=self.queue.depth())
+
+    def _publish(self):
+        t0 = time.monotonic()
+        snap = self.tenant.publish()
+        now = time.monotonic()
+        self.metrics.note_publish(now - t0, now)
+        self.policy.note_published(now)
+        if self.on_publish is not None:
+            self.on_publish(snap)
+        return snap
+
+    # ------------------------------------------------------------- checkpoint
+    def checkpoint(self) -> str:
+        """Write a crash-safe checkpoint of the tenant's full ingest state.
+
+        Callable from any thread.  Captures (front, delta, pending,
+        reservoir, next stream offset) as ONE consistent cut under
+        ``_state_lock`` — JAX arrays are immutable, so serialization happens
+        outside the lock; the reservoir is copied out inside it.
+        """
+        if not self.checkpoint_dir:
+            raise ValueError("worker has no checkpoint_dir configured")
+        with self._state_lock:
+            buf = self.tenant.buffer.state()
+            next_offset = self._ingested_offset + 1
+            res = (self.reservoir.state_dict()
+                   if self.reservoir is not None else None)
+        state = {"front": buf["front"], "delta": buf["delta"],
+                 "pending": buf["pending"]}
+        extra = {
+            "tenant_id": self.tenant.key.tenant_id,
+            "epoch": buf["epoch"],
+            "n_edges": buf["n_edges"],
+            "next_offset": next_offset,
+        }
+        if res is not None:
+            state["reservoir"] = {"src": res["src"], "dst": res["dst"],
+                                  "w": res["w"]}
+            extra["reservoir"] = {"k": res["k"], "seen": res["seen"],
+                                  "rng_state": res["rng_state"]}
+        path = store.save(self.checkpoint_dir, next_offset, state, extra=extra)
+        self._batches_since_checkpoint = 0
+        self.metrics.note_checkpoint(time.monotonic())
+        return path
+
+    # ---------------------------------------------------------------- reports
+    def health(self) -> dict:
+        return {
+            "state": self.state,
+            "alive": self.is_alive(),
+            "error": repr(self.error) if self.error else None,
+            "epoch": self.tenant.epoch,
+            "ingested_offset": self._ingested_offset,
+            "queue_depth": self.queue.depth(),
+        }
+
+    def metrics_snapshot(self) -> dict:
+        return self.metrics.snapshot(queue_stats=self.queue.stats(),
+                                     state=self.state,
+                                     epoch=self.tenant.epoch)
+
+
+def restore_worker_state(tenant, checkpoint_dir: str,
+                         reservoir: Reservoir | None = None,
+                         step: int | None = None) -> dict:
+    """Load the latest (or ``step``) checkpoint back into a *fresh* tenant.
+
+    The tenant must come from an identically-configured registry (same key,
+    depth, batch size, scale): the checkpoint stores counter state, not
+    layout, and ``store.restore`` asserts shape agreement leaf by leaf.
+    Returns the checkpoint metadata; after this call a worker/pump pair
+    resumes from ``tenant.offset`` and reproduces a never-crashed run
+    bit-exactly (streams are seekable, counters additive).
+    """
+    # identity check BEFORE touching arrays: a foreign tenant's checkpoint
+    # must fail loudly on identity, not incidentally on layout shapes
+    probe = store.read_meta(checkpoint_dir, step=step)["extra"]
+    if probe.get("tenant_id") != tenant.key.tenant_id:
+        raise ValueError(
+            f"checkpoint belongs to tenant {probe.get('tenant_id')!r}, "
+            f"not {tenant.key.tenant_id!r}")
+    buf = tenant.buffer.state()
+    template = {"front": buf["front"], "delta": buf["delta"],
+                "pending": buf["pending"]}
+    if reservoir is not None:
+        template["reservoir"] = {"src": reservoir._src, "dst": reservoir._dst,
+                                 "w": reservoir._w}
+    state, meta = store.restore(checkpoint_dir, template, step=step)
+    extra = meta["extra"]
+    tenant.buffer.load_state({
+        "front": state["front"], "delta": state["delta"],
+        "pending": state["pending"], "epoch": extra["epoch"],
+        "n_edges": extra["n_edges"],
+    })
+    tenant.offset = int(extra["next_offset"])
+    if reservoir is not None:
+        if "reservoir" not in state:
+            raise ValueError("checkpoint has no reservoir state")
+        res_extra = extra["reservoir"]
+        reservoir.load_state_dict({
+            "k": res_extra["k"], "seen": res_extra["seen"],
+            "rng_state": res_extra["rng_state"],
+            "src": state["reservoir"]["src"],
+            "dst": state["reservoir"]["dst"],
+            "w": state["reservoir"]["w"],
+        })
+    return meta

@@ -29,7 +29,9 @@ from repro.serving.loadgen import (
     LoadReport,
     OpenLoopLoadGen,
     WorkloadMix,
+    mix_for_sketch,
     synth_requests,
+    warm_bucket_ladder,
 )
 from repro.serving.registry import SketchRegistry, Tenant, TenantKey
 from repro.serving.snapshot import Snapshot, SnapshotBuffer
@@ -49,7 +51,9 @@ __all__ = [
     "LoadReport",
     "OpenLoopLoadGen",
     "WorkloadMix",
+    "mix_for_sketch",
     "synth_requests",
+    "warm_bucket_ladder",
     "SketchRegistry",
     "Tenant",
     "TenantKey",

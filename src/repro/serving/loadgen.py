@@ -42,6 +42,30 @@ class WorkloadMix:
         return {k: v / total for k, v in pairs.items()}
 
 
+def mix_for_sketch(kind: str) -> WorkloadMix:
+    """Default workload for a sketch kind: Type I sketches (countmin,
+    gsketch) cannot answer node/reach families, so their mix degrades to
+    edge-level queries instead of erroring mid-benchmark."""
+    if kind in ("countmin", "gsketch"):
+        return WorkloadMix(edge_freq=0.8, reach=0.0, node_out=0.0,
+                           path_weight=0.1, subgraph_weight=0.1,
+                           heavy_nodes=0.0)
+    return WorkloadMix()
+
+
+def warm_bucket_ladder(engine, snapshot, requests, start: int = 16) -> None:
+    """Compile the engine's power-of-two bucket ladder off the clock.
+
+    Arrival batching produces batches of many sizes; walking doubling
+    prefixes (plus one full-size batch) makes the measured run hit compiled
+    buckets for every family."""
+    size = start
+    while size < len(requests):
+        engine.execute(snapshot, requests[:size])
+        size *= 2
+    engine.execute(snapshot, requests)
+
+
 def synth_requests(n: int, mix: WorkloadMix, *, n_nodes: int, seed: int = 0,
                    zipf_a: float = 1.2, path_len: int = 4,
                    subgraph_edges: int = 3, heavy_universe: int | None = None,

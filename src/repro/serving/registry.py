@@ -16,6 +16,7 @@ epoch-consistent while ingest runs.
 from __future__ import annotations
 
 import dataclasses
+import threading
 from typing import Iterator
 
 from repro.core import (
@@ -67,7 +68,13 @@ class TenantKey:
 
 
 class Tenant:
-    """One registered sketch + its stream position + snapshot buffer."""
+    """One registered sketch + its stream position + snapshot buffer.
+
+    ``offset``/``step`` are owned by exactly one ingest driver at a time:
+    either the cooperative caller of ``step()`` or (exclusively) a
+    ``repro.runtime`` worker thread.  ``snapshot`` is safe to read from any
+    thread at any time (immutable reference swap).
+    """
 
     def __init__(self, key: TenantKey, stream, buffer: SnapshotBuffer,
                  mod) -> None:
@@ -117,13 +124,17 @@ class SketchRegistry:
         self.scale = scale
         self.partitioner = partitioner
         self._tenants: dict[TenantKey, Tenant] = {}
+        # get-or-create must be atomic once background workers can race
+        # opens: two tenants for one key would double-ingest the stream
+        self._lock = threading.Lock()
 
     def open(self, dataset: str, kind: str, budget_kb: int,
              seed: int = 0) -> Tenant:
-        """Get-or-create the tenant for a key (idempotent)."""
+        """Get-or-create the tenant for a key (idempotent, thread-safe)."""
         key = TenantKey(dataset, kind, budget_kb, seed)
-        if key in self._tenants:
-            return self._tenants[key]
+        with self._lock:
+            if key in self._tenants:
+                return self._tenants[key]
         stream = make_stream(dataset, batch_size=self.batch_size, seed=seed,
                              scale=self.scale)
         # Paper §V-A: a reservoir sample of the stream bootstraps the
@@ -133,11 +144,14 @@ class SketchRegistry:
         stats = vertex_stats_from_sample(ssrc, sdst, sw)
         sketch, mod = build_sketch(kind, budget_kb * 1024, stats, self.depth,
                                    seed, self.partitioner)
-        buffer = SnapshotBuffer(sketch, mod, tenant_id=key.tenant_id,
-                                kind=kind)
-        tenant = Tenant(key, stream, buffer, mod)
-        self._tenants[key] = tenant
-        return tenant
+        with self._lock:
+            if key in self._tenants:  # lost the build race; first one wins
+                return self._tenants[key]
+            buffer = SnapshotBuffer(sketch, mod, tenant_id=key.tenant_id,
+                                    kind=kind)
+            tenant = Tenant(key, stream, buffer, mod)
+            self._tenants[key] = tenant
+            return tenant
 
     def get(self, key: TenantKey) -> Tenant:
         return self._tenants[key]

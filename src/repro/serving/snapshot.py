@@ -21,6 +21,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+import threading
 from typing import Any
 
 import jax
@@ -82,6 +83,11 @@ class SnapshotBuffer:
         self._jit_publish = jax.jit(
             lambda front, delta: (mod.merge(front, delta),
                                   mod.empty_like(delta)))
+        # Guards the back buffer (_delta/_pending) and the front swap against
+        # a checkpointing thread reading ``state()`` mid-operation.  Readers
+        # of ``snapshot`` need no lock: the property is one atomic reference
+        # read and the pytree behind it is immutable.
+        self._lock = threading.Lock()
 
     @property
     def snapshot(self) -> Snapshot:
@@ -91,10 +97,19 @@ class SnapshotBuffer:
     def epoch(self) -> int:
         return self._front.epoch
 
+    @property
+    def pending_edges(self) -> int:
+        """Non-padding updates sitting in the delta (host sync; diagnostics
+        and conservation accounting only — not the ingest hot path)."""
+        with self._lock:
+            pending = self._pending
+        return int(jax.device_get(pending))
+
     def ingest(self, batch: EdgeBatch) -> None:
         """Absorb a batch into the back buffer; published readers unaffected."""
-        self._delta, self._pending = self._jit_ingest(
-            self._delta, batch, self._pending)
+        with self._lock:
+            self._delta, self._pending = self._jit_ingest(
+                self._delta, batch, self._pending)
 
     def publish(self) -> Snapshot:
         """Fold the delta into the front buffer and stamp a new epoch.
@@ -102,15 +117,48 @@ class SnapshotBuffer:
         This is the only host sync point in the ingest path (the pending
         edge count is fetched to stamp the snapshot).
         """
-        pending = int(jax.device_get(self._pending))
-        merged, delta = self._jit_publish(self._front.sketch, self._delta)
-        self._front = Snapshot(
-            self._tenant_id,
-            self._front.epoch + 1,
-            merged,
-            self._kind,
-            self._front.n_edges + pending,
-        )
-        self._delta = delta
-        self._pending = jnp.zeros_like(self._pending)
-        return self._front
+        with self._lock:
+            pending = int(jax.device_get(self._pending))
+            merged, delta = self._jit_publish(self._front.sketch, self._delta)
+            self._front = Snapshot(
+                self._tenant_id,
+                self._front.epoch + 1,
+                merged,
+                self._kind,
+                self._front.n_edges + pending,
+            )
+            self._delta = delta
+            self._pending = jnp.zeros_like(self._pending)
+            return self._front
+
+    # ------------------------------------------------------------ checkpoint
+    def state(self) -> dict:
+        """Mutually-consistent (front, delta, pending, epoch, n_edges) view.
+
+        The returned pytrees are immutable JAX arrays, so the caller can
+        serialize them outside the lock (crash-safe checkpointing in
+        ``repro.runtime``).
+        """
+        with self._lock:
+            return {
+                "front": self._front.sketch,
+                "delta": self._delta,
+                "pending": self._pending,
+                "epoch": self._front.epoch,
+                "n_edges": self._front.n_edges,
+            }
+
+    def load_state(self, state: dict) -> Snapshot:
+        """Restore a checkpointed ``state()`` (same sketch layout required)."""
+        with self._lock:
+            self._front = Snapshot(
+                self._tenant_id,
+                int(state["epoch"]),
+                jax.tree_util.tree_map(jnp.asarray, state["front"]),
+                self._kind,
+                int(state["n_edges"]),
+            )
+            self._delta = jax.tree_util.tree_map(jnp.asarray, state["delta"])
+            self._pending = jnp.asarray(state["pending"],
+                                        dtype=self._pending.dtype)
+            return self._front

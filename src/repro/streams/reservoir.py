@@ -2,8 +2,11 @@
 
 Vectorized Algorithm R: a whole batch is processed with one RNG draw per
 element; deterministic given (seed, stream order).  Used to (a) bootstrap
-the kMatrix/gSketch partitioners and (b) draw query workloads for the
-benchmark suite, both exactly as in the paper.
+the kMatrix/gSketch partitioners, (b) draw query workloads for the
+benchmark suite, and (c) maintain the per-tenant *online* sample inside
+``repro.runtime`` ingest workers — which is why the sampler exposes
+``state_dict``/``load_state_dict`` (checkpoint/restore must reproduce the
+exact sample a single uninterrupted pass would have produced).
 """
 from __future__ import annotations
 
@@ -38,18 +41,80 @@ class Reservoir:
             if n == 0:
                 return
         # Replacement phase: item t (1-based) replaces a random slot w.p. k/t.
+        # Vectorized with the same draws (and therefore the same final state)
+        # as the sequential loop: accepted items land in slot order, so the
+        # LAST accepted item targeting a slot wins.  np.unique on the
+        # reversed slot array yields each slot's last occurrence; duplicate
+        # fancy-index assignment order is unspecified in numpy, so we must
+        # not rely on it.
         t = self._seen + np.arange(1, n + 1, dtype=np.float64)
         accept = self._rng.random(n) < (self.k / t)
         slots = self._rng.integers(0, self.k, size=n)
-        for i in np.nonzero(accept)[0]:
-            s = slots[i]
-            self._src[s], self._dst[s], self._w[s] = src[i], dst[i], w[i]
+        idx = np.nonzero(accept)[0]
+        if idx.size:
+            accepted_slots = slots[idx]
+            uniq, last_rev = np.unique(accepted_slots[::-1], return_index=True)
+            winners = idx[idx.size - 1 - last_rev]
+            self._src[uniq] = src[winners]
+            self._dst[uniq] = dst[winners]
+            self._w[uniq] = w[winners]
         self._seen += n
+
+    @property
+    def seen(self) -> int:
+        """Total non-padding edges offered so far."""
+        return self._seen
 
     @property
     def sample(self) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
         n = min(self._seen, self.k)
         return self._src[:n].copy(), self._dst[:n].copy(), self._w[:n].copy()
+
+    # ---------------------------------------------------------- checkpointing
+    def state_dict(self) -> dict:
+        """Copy-out of the full sampler state (arrays + RNG bit-generator).
+
+        ``arrays`` are plain numpy (checkpointable as pytree leaves);
+        ``rng_state`` is JSON-able (uint64 arrays flattened to int lists).
+        """
+        return {
+            "k": self.k,
+            "seen": int(self._seen),
+            "src": self._src.copy(),
+            "dst": self._dst.copy(),
+            "w": self._w.copy(),
+            "rng_state": _rng_state_to_jsonable(self._rng.bit_generator.state),
+        }
+
+    def load_state_dict(self, state: dict) -> None:
+        if int(state["k"]) != self.k:
+            raise ValueError(
+                f"reservoir size mismatch: checkpoint k={state['k']}, "
+                f"this sampler k={self.k}")
+        self._seen = int(state["seen"])
+        self._src[:] = np.asarray(state["src"], np.int32)
+        self._dst[:] = np.asarray(state["dst"], np.int32)
+        self._w[:] = np.asarray(state["w"], np.int32)
+        self._rng.bit_generator.state = _rng_state_from_jsonable(
+            state["rng_state"])
+
+
+def _rng_state_to_jsonable(state):
+    if isinstance(state, dict):
+        return {k: _rng_state_to_jsonable(v) for k, v in state.items()}
+    if isinstance(state, np.ndarray):
+        return {"__ndarray__": state.tolist(), "dtype": str(state.dtype)}
+    if isinstance(state, np.integer):
+        return int(state)
+    return state
+
+
+def _rng_state_from_jsonable(state):
+    if isinstance(state, dict):
+        if "__ndarray__" in state:
+            return np.asarray(state["__ndarray__"], dtype=state["dtype"])
+        return {k: _rng_state_from_jsonable(v) for k, v in state.items()}
+    return state
 
 
 def sample_stream(stream, k: int, seed: int = 0,

@@ -8,6 +8,10 @@ import sys
 
 import pytest
 
+# ~5-10 min of emulated-device shard_map on CPU: by far the slowest tier-1
+# module.  CI runs it in its own job; fast local loops use -m "not slow".
+pytestmark = pytest.mark.slow
+
 _SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"

@@ -111,6 +111,61 @@ def test_accel_closure_matches_queries_closure():
     np.testing.assert_array_equal(np.asarray(closed[0]), np.asarray(expect) > 0.5)
 
 
+# ------------------------------------------- closure backend dispatch ----
+@pytest.mark.parametrize("max_hops", [None, 1, 2, 7])
+def test_build_closure_pallas_backend_parity(max_hops):
+    """queries.build_closure must answer identically through the Pallas
+    kernel (interpret mode off-TPU) and the pure-jnp cascade — the dispatch
+    that closes the ROADMAP `kernels/reach_closure.py` item."""
+    from repro.core import queries
+
+    rng = np.random.default_rng(7)
+    # deliberately non-power-of-two width: exercises the kernel's padding
+    table = jnp.asarray(rng.integers(0, 3, (3, 37, 37)) *
+                        (rng.random((3, 37, 37)) < 0.05), jnp.int32)
+    jnp_closure = queries.build_closure(table, max_hops, backend="jnp")
+    pallas_closure = queries.build_closure(table, max_hops, backend="pallas")
+    assert pallas_closure.shape == jnp_closure.shape
+    assert pallas_closure.dtype == jnp_closure.dtype == jnp.bool_
+    np.testing.assert_array_equal(np.asarray(pallas_closure),
+                                  np.asarray(jnp_closure))
+
+
+def test_build_closure_backend_resolution(monkeypatch):
+    from repro.core import queries
+
+    monkeypatch.delenv("REPRO_CLOSURE_BACKEND", raising=False)
+    assert queries.closure_backend("pallas") == "pallas"
+    assert queries.closure_backend(None) in ("jnp", "pallas")  # platform pick
+    monkeypatch.setenv("REPRO_CLOSURE_BACKEND", "pallas")
+    assert queries.closure_backend(None) == "pallas"
+    with pytest.raises(ValueError, match="closure backend"):
+        queries.closure_backend("cuda")
+
+
+def test_reachability_end_to_end_on_pallas_backend():
+    """Full query path (closure_layers -> build_closure -> pair lookup) on
+    the Pallas backend agrees with the jnp backend for a real sketch."""
+    from repro.core import EdgeBatch, MatrixSketch, queries
+    from repro.core import matrix_sketch
+
+    rng = np.random.default_rng(3)
+    src = rng.integers(0, 50, 120).astype(np.int32)
+    dst = rng.integers(0, 50, 120).astype(np.int32)
+    sk = MatrixSketch.create(bytes_budget=1 << 14, depth=3, seed=2)
+    sk = matrix_sketch.ingest(sk, EdgeBatch.from_numpy(src, dst))
+    qs = jnp.asarray(src[:32], jnp.int32)
+    qd = jnp.asarray(dst[::-1][:32], jnp.int32)
+    hi, hj = queries.reach_cells(sk, qs), queries.reach_cells(sk, qd)
+    layers = queries.closure_layers(sk)
+    for max_hops in (None, 2):
+        a = queries.reachability_from_closure(
+            queries.build_closure(layers, max_hops, backend="jnp"), hi, hj)
+        b = queries.reachability_from_closure(
+            queries.build_closure(layers, max_hops, backend="pallas"), hi, hj)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
 # ----------------------------------------------------------- embedding ----
 @pytest.mark.parametrize("v,d_,b,f", [(64, 128, 8, 4), (1000, 128, 16, 39), (32, 256, 4, 2)])
 def test_embedding_bag_matches_ref(v, d_, b, f):

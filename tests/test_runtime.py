@@ -1,0 +1,473 @@
+"""Background ingest runtime: queues/backpressure, publish policies, worker
+lifecycle, conservation under graceful drain, and crash-safe resume
+(DESIGN.md §Runtime)."""
+import threading
+import time
+
+import numpy as np
+import jax
+import pytest
+
+from repro.core import kmatrix
+from repro.runtime import (
+    BoundedEdgeQueue,
+    EveryNBatches,
+    QueueDrainWatermark,
+    QueueItem,
+    Runtime,
+    WallClockInterval,
+    make_policy,
+)
+from repro.serving import QueryEngine, SketchRegistry
+from repro.serving import engine as eng
+from repro.streams.reservoir import Reservoir
+
+
+def _item(offset, n=8, n_pad=0, seed=0):
+    rng = np.random.default_rng(seed + offset)
+    src = rng.integers(0, 100, n + n_pad).astype(np.int32)
+    dst = rng.integers(0, 100, n + n_pad).astype(np.int32)
+    w = np.concatenate([np.ones(n, np.int32), np.zeros(n_pad, np.int32)])
+    return QueueItem.from_arrays(offset, src, dst, w)
+
+
+def _wait(cond, timeout_s=60.0, poll_s=0.005):
+    deadline = time.monotonic() + timeout_s
+    while not cond():
+        if time.monotonic() >= deadline:
+            raise TimeoutError("condition not met in time")
+        time.sleep(poll_s)
+
+
+def _registry(**kw):
+    kw.setdefault("depth", 3)
+    kw.setdefault("batch_size", 1024)
+    kw.setdefault("scale", 0.02)
+    return SketchRegistry(**kw)
+
+
+def _single_shot(registry_kwargs=None, dataset="cit-HepPh", kind="kmatrix",
+                 budget_kb=64, seed=0):
+    """Oracle: the whole stream ingested once into one sketch, no runtime."""
+    reg = _registry(**(registry_kwargs or {}))
+    t = reg.open(dataset, kind, budget_kb, seed=seed)
+    sk = t.snapshot.sketch
+    ing = jax.jit(kmatrix.ingest)
+    for b in t.stream:
+        sk = ing(sk, b)
+    return t.stream, sk
+
+
+# ------------------------------------------------------------------ queueing
+def test_queue_item_counts_only_nonpadding_edges():
+    assert _item(0, n=5, n_pad=3).n_edges == 5
+
+
+def test_queue_block_policy_blocks_until_consumed():
+    q = BoundedEdgeQueue(2, "block")
+    assert q.put(_item(0)) and q.put(_item(1))
+    assert not q.put(_item(2), timeout=0.05), "full queue must block/timeout"
+    got = []
+    consumer = threading.Thread(target=lambda: got.append(q.get(timeout=5)))
+    consumer.start()
+    assert q.put(_item(2), timeout=5), "put must unblock once space frees"
+    consumer.join()
+    assert got[0].offset == 0, "FIFO"
+    assert q.dropped_batches == 0
+
+
+def test_queue_drop_oldest_accounts_every_drop():
+    q = BoundedEdgeQueue(2, "drop_oldest")
+    for i in range(5):
+        assert q.put(_item(i, n=8))
+    assert q.depth() == 2
+    assert q.dropped_batches == 3
+    assert q.dropped_edges == 3 * 8
+    # survivors are the newest, in order
+    assert [q.get().offset for _ in range(2)] == [3, 4]
+    # conservation at queue level: accepted == consumed + dropped
+    assert q.accepted_edges == 5 * 8
+    assert q.accepted_edges - q.dropped_edges == 2 * 8
+
+
+def test_queue_spill_preserves_fifo_and_loses_nothing(tmp_path):
+    q = BoundedEdgeQueue(2, "spill", spill_dir=str(tmp_path / "spill"))
+    items = [_item(i, n=4) for i in range(7)]
+    for it in items:
+        assert q.put(it)
+    assert q.spilled_batches == 5
+    assert q.dropped_batches == 0
+    assert q.depth() == 7
+    out = [q.get(timeout=1) for _ in range(7)]
+    assert [o.offset for o in out] == list(range(7)), "spill must stay FIFO"
+    for want, got in zip(items, out):
+        np.testing.assert_array_equal(want.src, got.src)
+        np.testing.assert_array_equal(want.weight, got.weight)
+    assert q.get(timeout=0.01) is None
+
+
+def test_queue_spill_interleaved_put_get_keeps_order(tmp_path):
+    q = BoundedEdgeQueue(1, "spill", spill_dir=str(tmp_path / "spill"))
+    seen = []
+    for i in range(10):
+        q.put(_item(i))
+        if i % 2:
+            seen.append(q.get(timeout=1).offset)
+    while (it := q.get(timeout=0.01)) is not None:
+        seen.append(it.offset)
+    assert seen == list(range(10))
+
+
+def test_queue_spill_concurrent_producer_consumer(tmp_path):
+    """Producer spilling while a consumer drains concurrently: no lost
+    batches, FIFO preserved, no race between slot claim and file write."""
+    q = BoundedEdgeQueue(1, "spill", spill_dir=str(tmp_path / "spill"))
+    n = 40
+
+    def produce():
+        for i in range(n):
+            assert q.put(_item(i, n=4))
+
+    thread = threading.Thread(target=produce)
+    thread.start()
+    got = []
+    while len(got) < n:
+        it = q.get(timeout=10)
+        assert it is not None
+        got.append(it.offset)
+    thread.join(timeout=10)
+    assert got == list(range(n))
+    assert q.dropped_batches == 0
+
+
+def test_queue_close_unblocks_producer_and_consumer():
+    q = BoundedEdgeQueue(1, "block")
+    q.put(_item(0))
+    results = {}
+
+    def producer():
+        results["put"] = q.put(_item(1), timeout=10)
+
+    thread = threading.Thread(target=producer)
+    thread.start()
+    time.sleep(0.05)
+    q.close()
+    thread.join(timeout=5)
+    assert results["put"] is False
+    # closed-but-nonempty still drains, then returns None
+    assert q.get(timeout=0.5).offset == 0
+    assert q.get(timeout=0.5) is None
+
+
+def test_queue_rejects_bad_config(tmp_path):
+    with pytest.raises(ValueError, match="policy"):
+        BoundedEdgeQueue(4, "yolo")
+    with pytest.raises(ValueError, match="spill_dir"):
+        BoundedEdgeQueue(4, "spill")
+    with pytest.raises(ValueError, match="capacity"):
+        BoundedEdgeQueue(0, "block")
+
+
+# ------------------------------------------------------------------ policies
+def test_policy_every_n_batches():
+    p = EveryNBatches(3)
+    assert not p.should_publish(batches_since_publish=2, now=0.0,
+                                queue_depth=5)
+    assert p.should_publish(batches_since_publish=3, now=0.0, queue_depth=5)
+
+
+def test_policy_wall_clock_interval_uses_clock_not_batches():
+    p = WallClockInterval(10.0)
+    # arms on first observation, never publishes with nothing pending
+    assert not p.should_publish(batches_since_publish=0, now=0.0,
+                                queue_depth=0)
+    assert not p.should_publish(batches_since_publish=5, now=0.0,
+                                queue_depth=0)
+    assert not p.should_publish(batches_since_publish=5, now=9.0,
+                                queue_depth=0)
+    assert p.should_publish(batches_since_publish=1, now=10.5, queue_depth=0)
+    p.note_published(10.5)
+    assert not p.should_publish(batches_since_publish=1, now=11.0,
+                                queue_depth=0)
+
+
+def test_policy_drain_watermark_with_overload_backstop():
+    p = QueueDrainWatermark(watermark=0, max_batches=4)
+    assert not p.should_publish(batches_since_publish=0, now=0.0,
+                                queue_depth=0)
+    assert not p.should_publish(batches_since_publish=2, now=0.0,
+                                queue_depth=3)
+    assert p.should_publish(batches_since_publish=2, now=0.0, queue_depth=0)
+    # queue never drains under sustained overload: backstop fires
+    assert p.should_publish(batches_since_publish=4, now=0.0, queue_depth=9)
+
+
+def test_make_policy_parses_specs():
+    assert isinstance(make_policy("every:7"), EveryNBatches)
+    assert make_policy("every:7").n == 7
+    assert isinstance(make_policy("interval:0.5"), WallClockInterval)
+    assert isinstance(make_policy("drain"), QueueDrainWatermark)
+    assert make_policy("drain:2").watermark == 2
+    inst = EveryNBatches(2)
+    assert make_policy(inst) is inst
+    assert isinstance(make_policy(lambda: EveryNBatches(1)), EveryNBatches)
+    with pytest.raises(ValueError, match="publish policy"):
+        make_policy("sometimes")
+
+
+# ------------------------------------------------- runtime: conservation
+def test_runtime_graceful_stop_conserves_every_edge():
+    """Acceptance gate: drain-and-stop leaves zero unaccounted edges and the
+    published sketch is bit-identical to a single-shot ingest."""
+    reg = _registry()
+    t = reg.open("cit-HepPh", "kmatrix", 64, seed=0)
+    rt = Runtime(queue_capacity=4, publish_policy="every:2", reservoir_k=256,
+                 poll_s=0.01)
+    rt.attach(t)
+    rt.start()
+    assert rt.join_pumps(120)
+    rep = rt.stop(drain=True)[t.key.tenant_id]
+
+    assert rep["state"] == "stopped"
+    assert rep["unaccounted_edges"] == 0
+    assert rep["dropped_edges"] == 0
+    assert rep["offered_edges"] == rep["ingested_edges"]
+    stream, oracle = _single_shot()
+    assert rep["published_edges"] == stream.spec.n_edges
+    np.testing.assert_array_equal(np.asarray(t.snapshot.sketch.pool),
+                                  np.asarray(oracle.pool))
+    np.testing.assert_array_equal(np.asarray(t.snapshot.sketch.conn),
+                                  np.asarray(oracle.conn))
+
+
+def test_runtime_drop_oldest_conservation_includes_drops():
+    """Under drop_oldest, offered == published + dropped — drops are
+    accounted, never silent (tiny queue + throttled worker forces drops)."""
+    reg = _registry()
+    t = reg.open("cit-HepPh", "kmatrix", 64, seed=1)
+    rt = Runtime(queue_capacity=1, backpressure="drop_oldest",
+                 publish_policy="every:1", reservoir_k=0, poll_s=0.01)
+    handle = rt.attach(t)
+    # slow the worker artificially so the pump overruns the queue
+    orig_ingest = handle.worker._ingest
+
+    def slow_ingest(item, now):
+        time.sleep(0.03)
+        orig_ingest(item, now)
+
+    handle.worker._ingest = slow_ingest
+    rt.start()
+    assert rt.join_pumps(120)
+    rep = rt.stop(drain=True)[t.key.tenant_id]
+    assert rep["unaccounted_edges"] == 0
+    assert rep["offered_edges"] == (rep["ingested_edges"]
+                                    + rep["dropped_edges"])
+    assert rep["published_edges"] - rep["base_edges"] == rep["ingested_edges"]
+
+
+def test_runtime_spill_backpressure_loses_nothing(tmp_path):
+    reg = _registry()
+    t = reg.open("cit-HepPh", "kmatrix", 64, seed=2)
+    rt = Runtime(queue_capacity=1, backpressure="spill",
+                 spill_dir=str(tmp_path / "spill"), publish_policy="drain",
+                 reservoir_k=0, poll_s=0.01)
+    rt.attach(t)
+    rt.start()
+    assert rt.join_pumps(120)
+    rep = rt.stop(drain=True)[t.key.tenant_id]
+    assert rep["dropped_edges"] == 0
+    assert rep["unaccounted_edges"] == 0
+    assert rep["published_edges"] == t.stream.spec.n_edges
+
+
+# ------------------------------------------------- runtime: concurrency
+def test_queries_run_against_consistent_epochs_during_ingest():
+    """Main-thread engine queries overlap a live worker: epochs observed by
+    queries are monotone and every result batch is stamped with ONE epoch."""
+    reg = _registry()
+    t = reg.open("cit-HepPh", "kmatrix", 64, seed=3)
+    engine = QueryEngine(min_bucket=8)
+    reqs = [eng.edge_freq(1, 2), eng.node_out(3), eng.reach(4, 9)]
+    engine.execute(t.snapshot, reqs)  # compile off the clock
+    rt = Runtime(queue_capacity=2, publish_policy="every:1", reservoir_k=0,
+                 poll_s=0.01)
+    rt.attach(t, throttle_s=0.01)
+    rt.start()
+    epochs = []
+    while not rt.join_pumps(timeout=0.001):
+        res = engine.execute(t.snapshot, reqs)
+        assert len({r.epoch for r in res}) == 1, "one batch, one epoch"
+        epochs.append(res[0].epoch)
+    rt.stop(drain=True)
+    assert epochs == sorted(epochs), "epochs must never regress"
+    assert len(epochs) > 0
+
+
+def test_runtime_health_and_metrics_surface_lifecycle():
+    reg = _registry()
+    t = reg.open("cit-HepPh", "kmatrix", 64, seed=4)
+    rt = Runtime(queue_capacity=4, publish_policy="every:2", reservoir_k=64,
+                 poll_s=0.01)
+    rt.attach(t)
+    h = rt.health()[t.key.tenant_id]
+    assert h["state"] == "created" and not h["alive"]
+    rt.start()
+    _wait(lambda: rt.health()[t.key.tenant_id]["state"] in
+          ("running", "draining", "stopped"))
+    rt.join_pumps(120)
+    rt.stop(drain=True)
+    h = rt.health()[t.key.tenant_id]
+    assert h["state"] == "stopped" and h["error"] is None
+    m = rt.metrics()[t.key.tenant_id]
+    assert m["ingested_batches"] == t.stream.num_batches
+    assert m["publishes"] >= 1
+    assert m["queue_depth"] == 0
+    assert m["edges_per_s_lifetime"] > 0
+
+
+def test_worker_failure_is_reported_not_swallowed():
+    reg = _registry()
+    t = reg.open("cit-HepPh", "kmatrix", 64, seed=5)
+    rt = Runtime(queue_capacity=4, publish_policy="every:2", reservoir_k=0,
+                 poll_s=0.01)
+    handle = rt.attach(t, max_batches=3)
+
+    def explode(item, now):
+        raise RuntimeError("boom")
+
+    handle.worker._ingest = explode
+    rt.start()
+    _wait(lambda: not handle.worker.is_alive())
+    h = rt.health()[t.key.tenant_id]
+    assert h["state"] == "failed"
+    assert "boom" in h["error"]
+    rt.kill()
+
+
+def test_runtime_online_reservoir_matches_single_pass():
+    """The worker-maintained reservoir equals a sequential pass (the queue
+    is FIFO and ingest is single-threaded per tenant)."""
+    reg = _registry()
+    t = reg.open("cit-HepPh", "kmatrix", 64, seed=6)
+    rt = Runtime(queue_capacity=4, publish_policy="every:4", reservoir_k=128,
+                 poll_s=0.01)
+    handle = rt.attach(t)
+    rt.start()
+    assert rt.join_pumps(120)
+    rt.stop(drain=True)
+    ref = Reservoir(128, seed=t.key.seed ^ 0xC0FFEE)
+    for i in range(t.stream.num_batches):
+        ref.offer_batch(*t.stream.batch_numpy(i))
+    for got, want in zip(handle.worker.reservoir.sample, ref.sample):
+        np.testing.assert_array_equal(got, want)
+
+
+# ------------------------------------------------- runtime: crash resume
+def test_crash_restore_resume_conserves_counter_mass(tmp_path):
+    """Satellite acceptance: kill a runtime mid-stream, restore from its
+    checkpoint into a fresh registry, resume — total ingested counter mass
+    equals a single-shot ingest (no lost or double-counted edges)."""
+    ckpt = str(tmp_path / "ckpt")
+    reg_a = _registry()
+    t_a = reg_a.open("cit-HepPh", "kmatrix", 64, seed=0)
+    rt_a = Runtime(queue_capacity=2, publish_policy="every:2",
+                   reservoir_k=128, checkpoint_dir=ckpt, checkpoint_every=1,
+                   poll_s=0.01)
+    handle = rt_a.attach(t_a, throttle_s=0.03)
+    rt_a.start()
+    # kill strictly mid-stream: some batches ingested, some still to come
+    _wait(lambda: handle.worker.metrics.ingested_batches >= 3)
+    rt_a.kill()
+    assert t_a.offset < t_a.stream.num_batches, "kill was not mid-stream"
+
+    reg_b = _registry()
+    t_b = reg_b.open("cit-HepPh", "kmatrix", 64, seed=0)
+    rt_b = Runtime(queue_capacity=4, publish_policy="every:2",
+                   reservoir_k=128, checkpoint_dir=ckpt, poll_s=0.01)
+    handle_b = rt_b.attach(t_b, restore=True)
+    assert t_b.offset > 0, "restore must resume mid-stream, not replay all"
+    rt_b.start()
+    assert rt_b.join_pumps(120)
+    rep = rt_b.stop(drain=True)[t_b.key.tenant_id]
+    assert rep["unaccounted_edges"] == 0
+
+    stream, oracle = _single_shot()
+    # counter-mass equality, cell by cell (stronger than summed mass)
+    np.testing.assert_array_equal(np.asarray(t_b.snapshot.sketch.pool),
+                                  np.asarray(oracle.pool))
+    np.testing.assert_array_equal(np.asarray(t_b.snapshot.sketch.conn),
+                                  np.asarray(oracle.conn))
+    assert t_b.snapshot.n_edges == stream.spec.n_edges
+
+    # the online reservoir also resumes exactly (rng state checkpointed)
+    ref = Reservoir(128, seed=t_b.key.seed ^ 0xC0FFEE)
+    for i in range(stream.num_batches):
+        ref.offer_batch(*stream.batch_numpy(i))
+    for got, want in zip(handle_b.worker.reservoir.sample, ref.sample):
+        np.testing.assert_array_equal(got, want)
+
+
+def test_restored_pending_delta_publishes_on_drain(tmp_path):
+    """A checkpoint can hold edges in the (unpublished) delta.  After a
+    restore with the stream already exhausted, no new batch ever arrives —
+    the drain-time publish must still surface the restored delta."""
+    ckpt = str(tmp_path / "ckpt")
+    reg_a = _registry()
+    t_a = reg_a.open("cit-HepPh", "kmatrix", 64, seed=0)
+    rt_a = Runtime(queue_capacity=4, publish_policy="every:100000",
+                   reservoir_k=0, checkpoint_dir=ckpt, checkpoint_every=1,
+                   poll_s=0.01)
+    handle = rt_a.attach(t_a)
+    rt_a.start()
+    # wait until the LAST batch is both ingested and checkpointed, so the
+    # final checkpoint's delta holds the whole stream, published nothing
+    _wait(lambda: handle.worker.metrics.checkpoints
+          >= t_a.stream.num_batches)
+    rt_a.kill()
+    assert t_a.snapshot.n_edges == 0, "nothing should be published yet"
+
+    reg_b = _registry()
+    t_b = reg_b.open("cit-HepPh", "kmatrix", 64, seed=0)
+    rt_b = Runtime(queue_capacity=4, publish_policy="every:100000",
+                   reservoir_k=0, checkpoint_dir=ckpt, poll_s=0.01)
+    rt_b.attach(t_b, restore=True)
+    assert t_b.offset == t_b.stream.num_batches, "stream must be exhausted"
+    rt_b.start()
+    assert rt_b.join_pumps(60)
+    rep = rt_b.stop(drain=True)[t_b.key.tenant_id]
+    assert t_b.snapshot.n_edges == t_b.stream.spec.n_edges, \
+        "restored delta was dropped instead of published"
+    assert rep["unaccounted_edges"] == 0
+
+
+def test_restore_refuses_foreign_tenant_checkpoint(tmp_path):
+    ckpt = str(tmp_path / "ckpt")
+    reg = _registry()
+    t = reg.open("cit-HepPh", "kmatrix", 64, seed=0)
+    rt = Runtime(queue_capacity=4, publish_policy="every:2", reservoir_k=64,
+                 checkpoint_dir=ckpt, checkpoint_every=1, poll_s=0.01)
+    rt.attach(t, max_batches=2)
+    rt.start()
+    rt.join_pumps(120)
+    rt.stop(drain=True)
+
+    from repro.runtime import restore_worker_state
+    other = _registry().open("cit-HepPh", "kmatrix", 64, seed=9)
+    with pytest.raises(ValueError, match="belongs to tenant"):
+        restore_worker_state(
+            other, rt._tenant_dir(ckpt, t),
+            Reservoir(64, seed=9 ^ 0xC0FFEE))
+
+
+def test_runtime_attach_is_idempotent_and_post_start_attach_fails():
+    reg = _registry()
+    t = reg.open("cit-HepPh", "kmatrix", 64, seed=8)
+    rt = Runtime(queue_capacity=4, reservoir_k=0, poll_s=0.01)
+    h1 = rt.attach(t, max_batches=1)
+    assert rt.attach(t) is h1
+    rt.start()
+    other = reg.open("cit-HepPh", "gmatrix", 64, seed=8)
+    with pytest.raises(RuntimeError, match="before start"):
+        rt.attach(other)
+    rt.join_pumps(120)
+    rt.stop(drain=True)

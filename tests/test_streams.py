@@ -78,6 +78,79 @@ def test_reservoir_size_property(k, n):
     assert len(smp) == min(k, n)
 
 
+class _LoopReservoir(Reservoir):
+    """Reference implementation: the pre-vectorization sequential
+    replacement loop.  Must produce the exact same final state from the
+    same RNG draws (last accepted write per slot wins)."""
+
+    def offer_batch(self, src, dst, w):
+        valid = w > 0
+        src, dst, w = src[valid], dst[valid], w[valid]
+        n = len(src)
+        if n == 0:
+            return
+        pos = self._seen
+        if pos < self.k:
+            take = min(self.k - pos, n)
+            self._src[pos:pos + take] = src[:take]
+            self._dst[pos:pos + take] = dst[:take]
+            self._w[pos:pos + take] = w[:take]
+            self._seen += take
+            src, dst, w = src[take:], dst[take:], w[take:]
+            n = len(src)
+            if n == 0:
+                return
+        t = self._seen + np.arange(1, n + 1, dtype=np.float64)
+        accept = self._rng.random(n) < (self.k / t)
+        slots = self._rng.integers(0, self.k, size=n)
+        for i in np.nonzero(accept)[0]:
+            s = slots[i]
+            self._src[s], self._dst[s], self._w[s] = src[i], dst[i], w[i]
+        self._seen += n
+
+
+@pytest.mark.parametrize("k,batch,seed", [(64, 200, 5), (16, 1000, 0),
+                                          (256, 97, 3)])
+def test_reservoir_vectorized_matches_sequential_loop(k, batch, seed):
+    """The vectorized replacement phase is a pure speedup: bit-identical
+    final state to the sequential loop under the same seed (small k forces
+    many duplicate-slot collisions, the case where write order matters)."""
+    fast, slow = Reservoir(k, seed=seed), _LoopReservoir(k, seed=seed)
+    for i in range(25):
+        rng = np.random.default_rng(1000 * seed + i)
+        src = rng.integers(0, 5000, batch).astype(np.int32)
+        dst = rng.integers(0, 5000, batch).astype(np.int32)
+        w = (rng.random(batch) > 0.1).astype(np.int32)  # padding mixed in
+        fast.offer_batch(src, dst, w)
+        slow.offer_batch(src, dst, w)
+        assert fast.seen == slow.seen
+    for a, b in zip(fast.sample, slow.sample):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_reservoir_state_dict_roundtrip_is_exact():
+    """Checkpoint/restore of the sampler (arrays + RNG) must continue the
+    exact stream a never-checkpointed sampler would produce — including a
+    JSON round trip of the RNG state, as the runtime checkpoint stores it."""
+    import json
+
+    a = Reservoir(32, seed=11)
+    feed = np.random.default_rng(0).integers(0, 999, (6, 300)).astype(np.int32)
+    for row in feed[:3]:
+        a.offer_batch(row, row, np.ones_like(row))
+    state = a.state_dict()
+    state["rng_state"] = json.loads(json.dumps(state["rng_state"]))
+    b = Reservoir(32, seed=0)  # wrong seed on purpose: state must win
+    b.load_state_dict(state)
+    for row in feed[3:]:
+        a.offer_batch(row, row, np.ones_like(row))
+        b.offer_batch(row, row, np.ones_like(row))
+    for x, y in zip(a.sample, b.sample):
+        np.testing.assert_array_equal(x, y)
+    with pytest.raises(ValueError, match="size mismatch"):
+        Reservoir(64, seed=0).load_state_dict(state)
+
+
 @pytest.mark.parametrize("partitioner", [plan_partitions, plan_partitions_banded])
 def test_partition_plan_invariants(partitioner):
     rng = np.random.default_rng(0)

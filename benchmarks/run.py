@@ -7,6 +7,8 @@ Prints ``name,us_per_call,derived`` CSV rows (plus figure tables to stderr).
   fig8_neq          paper Fig. 8  — number/percent of effective queries
   partitioner_ablation — beyond-paper: greedy (Eq.8) vs banded sqrt-G
   kernel_micro      — Pallas kernels (interpret) vs pure-jnp reference ops
+  ingest            — flat-scatter vs width-class accel sketch backend
+                      edges/s (emits BENCH_ingest.json, bit-exactness gated)
 
 Usage: PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig7_are]
 """
@@ -24,10 +26,11 @@ from repro.core import (
     CountMin,
     GSketch,
     KMatrix,
+    KMatrixAccel,
     MatrixSketch,
     vertex_stats_from_sample,
 )
-from repro.core import countmin, gsketch, kmatrix, matrix_sketch
+from repro.core import countmin, gsketch, kmatrix, kmatrix_accel, matrix_sketch
 from repro.core.metrics import (
     average_relative_error,
     effective_queries,
@@ -61,6 +64,12 @@ def _build_all(budget: int, depth: int, stats, seed=3):
                     matrix_sketch),
         "kmatrix": (KMatrix.create(bytes_budget=budget, stats=stats, depth=depth,
                                    seed=seed), kmatrix),
+        # same sketch, width-class layout: ingest goes through the Pallas MXU
+        # kernel (interpret mode off-TPU, so its fig6 column measures the
+        # correctness path there, not kernel speed)
+        "kmatrix_accel": (KMatrixAccel.create(bytes_budget=budget, stats=stats,
+                                              depth=depth, seed=seed),
+                          kmatrix_accel),
     }
 
 
@@ -76,7 +85,7 @@ def _ingest_all(stream, sk, mod):
 def fig6_build_time(scale: float) -> None:
     """Paper Fig. 6: time to add the entire dataset (1 MB sketches, d=7)."""
     _log("\n== fig6_build_time (1MB, d=7) ==")
-    _log(f"{'dataset':14s} {'sketch':9s} {'edges/s':>12s} {'us/edge':>9s}")
+    _log(f"{'dataset':14s} {'sketch':13s} {'edges/s':>12s} {'us/edge':>9s}")
     for ds in DATASETS:
         stream = make_stream(ds, batch_size=8192, seed=1, scale=scale)
         ssrc, sdst, sw = sample_stream(stream, int(30_000 * scale) or 1000, seed=7)
@@ -84,7 +93,7 @@ def fig6_build_time(scale: float) -> None:
         for name, (sk, mod) in _build_all(1 << 20, 7, stats).items():
             sk, dt = _ingest_all(stream, sk, mod)
             n = stream.spec.n_edges
-            _log(f"{ds:14s} {name:9s} {n/dt:12,.0f} {dt/n*1e6:9.3f}")
+            _log(f"{ds:14s} {name:13s} {n/dt:12,.0f} {dt/n*1e6:9.3f}")
             _emit(f"fig6/{ds}/{name}", dt / n * 1e6, f"edges_per_s={n/dt:.0f}")
 
 
@@ -186,6 +195,81 @@ def kernel_micro(quick: bool) -> None:
         _emit(f"kernel/{name}", us, f"edges={c}")
 
 
+def ingest_backends(scale: float, quick: bool,
+                    out_path: str = "BENCH_ingest.json") -> None:
+    """flat-scatter vs width-class accel ingest throughput -> BENCH_ingest.json.
+
+    Both backends are interpret-safe (the accel path runs the Pallas kernel
+    with interpret=True off-TPU), ingest the SAME stream prefix into the
+    SAME quantized layout, and must land bit-identical counters — the bench
+    hard-fails otherwise, so the perf trajectory can never quietly trade
+    exactness for speed.  The JSON gives fast CI a per-commit edges/s data
+    point per backend.
+    """
+    import json as _json
+
+    from repro.core import kmatrix_accel as kma
+
+    dataset = "cit-HepPh"
+    stream = make_stream(dataset, batch_size=4096, seed=1, scale=scale)
+    ssrc, sdst, sw = sample_stream(stream, int(30_000 * scale) or 1000, seed=7)
+    stats = vertex_stats_from_sample(ssrc, sdst, sw)
+    n_batches = min(stream.num_batches, 3 if quick else 16)
+    edges = sum(int((np.asarray(stream.batch(i).weight) > 0).sum())
+                for i in range(n_batches))
+    accel = KMatrixAccel.create(bytes_budget=256 * 1024, stats=stats,
+                                depth=5, seed=3)
+    flat = kma.to_flat_layout(kma.empty_like(accel))  # bit-exact twin layout
+    _log(f"\n== ingest ({dataset}, {n_batches} batches, {edges} edges, "
+         f"256KB d=5, interpret={jax.default_backend() != 'tpu'}) ==")
+
+    states, backends = {}, {}
+    for name, sk, mod in [("flat", flat, kmatrix), ("pallas", accel, kma)]:
+        ing = jax.jit(mod.ingest)
+        warm = ing(sk, stream.batch(0))  # compile off the clock
+        jax.block_until_ready(jax.tree_util.tree_leaves(warm)[0])
+        t0 = time.time()
+        st = sk
+        for i in range(n_batches):
+            st = ing(st, stream.batch(i))
+        jax.block_until_ready(jax.tree_util.tree_leaves(st)[0])
+        dt = time.time() - t0
+        states[name] = st
+        backends[name] = {"wall_s": round(dt, 4),
+                          "edges_per_s": round(edges / max(dt, 1e-9), 1)}
+        _log(f"{name:8s} {edges / max(dt, 1e-9):12,.0f} edges/s "
+             f"({dt:.3f}s)")
+        _emit(f"ingest/{name}", dt / max(edges, 1) * 1e6,
+              f"edges_per_s={edges / max(dt, 1e-9):.0f}")
+
+    relayout = kma.to_flat_layout(states["pallas"])
+    bit_exact = bool(
+        np.array_equal(np.asarray(relayout.pool),
+                       np.asarray(states["flat"].pool))
+        and np.array_equal(np.asarray(relayout.conn),
+                           np.asarray(states["flat"].conn)))
+    record = {
+        "bench": "ingest",
+        "dataset": dataset,
+        "scale": scale,
+        "n_batches": n_batches,
+        "edges": edges,
+        "depth": 5,
+        "budget_kb": 256,
+        "interpret": jax.default_backend() != "tpu",
+        "overflow_edges": int(states["pallas"].overflow),
+        "backends": backends,
+        "bit_exact": bit_exact,
+    }
+    with open(out_path, "w") as f:
+        _json.dump(record, f, indent=2)
+    _log(f"wrote {out_path}")
+    if not bit_exact:
+        raise RuntimeError(
+            "ingest: accel backend counters diverged from the flat backend "
+            "on the same stream — edges/s for wrong counters is meaningless")
+
+
 def serve_mixed(scale: float, quick: bool) -> None:
     """Beyond-paper: online serving QPS/latency (benchmarks/serve_bench.py)."""
     from benchmarks.serve_bench import run_serve_bench
@@ -197,6 +281,10 @@ def serve_mixed(scale: float, quick: bool) -> None:
         raise RuntimeError(
             "serve_mixed: engine answers diverged from direct queries — "
             "QPS numbers for wrong answers are meaningless")
+    if not rec.get("backend_parity_ok", True):
+        raise RuntimeError(
+            "serve_mixed: accel sketch backend diverged from the flat "
+            "backend on the same stream prefix")
     _emit("serve/qps", 1e6 / max(rec["achieved_qps"], 1e-9),
           f"qps={rec['achieved_qps']};p50_ms={rec['p50_ms']};"
           f"p99_ms={rec['p99_ms']}")
@@ -238,6 +326,7 @@ BENCHES = {
     "fig7_are": lambda a: fig7_fig8_accuracy(a.scale, a.quick),
     "partitioner_ablation": lambda a: partitioner_ablation(a.scale),
     "kernel_micro": lambda a: kernel_micro(a.quick),
+    "ingest": lambda a: ingest_backends(a.scale, a.quick),
     "serve_mixed": lambda a: serve_mixed(a.scale, a.quick),
     "serve_concurrent": lambda a: serve_concurrent(a.scale, a.quick),
 }

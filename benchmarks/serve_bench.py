@@ -10,7 +10,11 @@ The BENCH trajectory's serving row.  Measures, in one process:
     rebuild the O(log w) boolean closure (cold) vs one that hits the
     per-(tenant, epoch) cache;
   * exactness: engine answers vs direct ``repro.core.queries`` answers for
-    the same snapshot (hard-fails the bench on any mismatch).
+    the same snapshot (hard-fails the bench on any mismatch);
+  * backend parity (``--sketch-backend pallas`` / REPRO_SKETCH_BACKEND):
+    when the tenant runs the width-class accel layout, the warm prefix is
+    replayed through the flat-pool backend and both the relayout counters
+    and every direct estimate must be bit-identical (hard-fails otherwise).
 
 ``--concurrent`` switches ingest to a ``repro.runtime`` background worker:
 queries and ingest genuinely overlap, the JSON reports ingest edges/s and
@@ -60,12 +64,58 @@ def _time_execute(engine: QueryEngine, snapshot, requests) -> float:
     return time.perf_counter() - t0
 
 
+def _backend_parity_gate(tenant, requests, accel_answers=None) -> dict | None:
+    """Hard gate for the width-class (pallas) sketch backend.
+
+    Call only when the tenant's delta is freshly published (so the front
+    snapshot holds exactly stream batches ``[0, tenant.offset)``).  Replays
+    that prefix through the flat-pool backend and requires (a) the accel
+    sketch to be a bit-exact relayout of the flat one, and (b) every direct
+    estimate to be bit-identical between the two layouts.  Returns None for
+    non-accel tenants.  ``accel_answers`` lets the caller reuse direct
+    answers it already computed for ``requests`` on the accel snapshot (the
+    per-request oracle rebuilds closures and is the slow half of the gate).
+    """
+    from repro.core import KMatrixAccel, kmatrix
+    from repro.core import kmatrix_accel as kma
+    from repro.serving.snapshot import Snapshot
+
+    snap = tenant.snapshot
+    if not isinstance(snap.sketch, KMatrixAccel):
+        return None
+    flat = kma.to_flat_layout(kma.empty_like(snap.sketch))
+    ing = jax.jit(kmatrix.ingest)
+    for i in range(tenant.offset):
+        flat = ing(flat, tenant.stream.batch(i))
+    relayout = kma.to_flat_layout(snap.sketch)
+    counters_equal = bool(
+        np.array_equal(np.asarray(relayout.pool), np.asarray(flat.pool))
+        and np.array_equal(np.asarray(relayout.conn), np.asarray(flat.conn)))
+    flat_snap = Snapshot(snap.tenant_id + "/flat-twin", snap.epoch, flat,
+                         snap.kind, snap.n_edges)
+    if accel_answers is None:
+        accel_answers = eng.direct_answers(snap, requests)
+    flat_answers = eng.direct_answers(flat_snap, requests)
+    estimates_equal = all(_values_match(a, f)
+                          for a, f in zip(accel_answers, flat_answers))
+    if not (counters_equal and estimates_equal):
+        _log(f"BACKEND PARITY FAILURE: counters_equal={counters_equal} "
+             f"estimates_equal={estimates_equal}")
+    return {
+        "backend_parity_counters": counters_equal,
+        "backend_parity_estimates": bool(estimates_equal),
+        "backend_parity_ok": bool(counters_equal and estimates_equal),
+    }
+
+
 def run_serve_bench(*, dataset: str = "cit-HepPh", sketch: str = "kmatrix",
                     budget_kb: int = 256, depth: int = 5, seed: int = 0,
                     scale: float = 1.0, target_qps: float = 2000.0,
                     n_requests: int = 4000, batch_max: int = 512,
-                    publish_every: int = 2, warm_batches: int = 8) -> dict:
-    registry = SketchRegistry(depth=depth, scale=scale)
+                    publish_every: int = 2, warm_batches: int = 8,
+                    sketch_backend: str | None = None) -> dict:
+    registry = SketchRegistry(depth=depth, scale=scale,
+                              sketch_backend=sketch_backend)
     tenant = registry.open(dataset, sketch, budget_kb, seed=seed)
     engine = QueryEngine()
 
@@ -134,6 +184,9 @@ def run_serve_bench(*, dataset: str = "cit-HepPh", sketch: str = "kmatrix",
                if not _values_match(g, w)]
         _log(f"MISMATCH engine vs direct at request indices {bad[:10]}")
 
+    # ---- accel backend: bit-exact vs the flat layout on the same prefix ---
+    parity = _backend_parity_gate(tenant, check[:64], accel_answers=want[:64])
+
     # ---- open-loop mixed workload against the LIVE tenant -----------------
     epoch0 = tenant.epoch
     batches_between = [0]
@@ -156,6 +209,7 @@ def run_serve_bench(*, dataset: str = "cit-HepPh", sketch: str = "kmatrix",
         "bench": "serve_mixed",
         "dataset": dataset,
         "sketch": sketch,
+        "sketch_backend": registry.sketch_backend,
         "budget_kb": budget_kb,
         "depth": depth,
         "offered_qps": report.offered_qps,
@@ -172,6 +226,8 @@ def run_serve_bench(*, dataset: str = "cit-HepPh", sketch: str = "kmatrix",
         "reach_batch_cold_ms": round(t_cold * 1e3, 3),
         "reach_batch_warm_ms": round(t_hit * 1e3, 3),
         "engine_matches_direct": bool(matches),
+        "overflow_edges": tenant.buffer.overflow_edges,
+        **(parity or {}),
         **{f"engine_{k}": v for k, v in engine.stats.items()},
     }
     return record
@@ -187,14 +243,16 @@ def run_serve_bench_concurrent(*, dataset: str = "cit-HepPh",
                                queue_capacity: int = 64,
                                backpressure: str = "block",
                                publish_policy: str = "",
-                               epoch_check_requests: int = 32) -> dict:
+                               epoch_check_requests: int = 32,
+                               sketch_backend: str | None = None) -> dict:
     """Concurrent regime: loadgen in the main thread, ingest in a
     ``repro.runtime`` worker.  Gates (both hard-fail): engine == direct on
     every published epoch; conservation (published + drops == stream total)
     after a graceful drain."""
     from repro.runtime import Runtime
 
-    registry = SketchRegistry(depth=depth, scale=scale)
+    registry = SketchRegistry(depth=depth, scale=scale,
+                              sketch_backend=sketch_backend)
     tenant = registry.open(dataset, sketch, budget_kb, seed=seed)
     engine = QueryEngine()
 
@@ -259,6 +317,7 @@ def run_serve_bench_concurrent(*, dataset: str = "cit-HepPh",
         "bench": "serve_concurrent",
         "dataset": dataset,
         "sketch": sketch,
+        "sketch_backend": registry.sketch_backend,
         "budget_kb": budget_kb,
         "depth": depth,
         "backpressure": backpressure,
@@ -279,6 +338,9 @@ def run_serve_bench_concurrent(*, dataset: str = "cit-HepPh",
         "mean_publish_latency_ms": final["mean_publish_latency_ms"],
         "max_queue_depth": final["max_queue_depth"],
         "dropped_edges": final["dropped_edges"],
+        # accel-backend scatter-fallback volume (0 under the flat backend):
+        # capacity regressions surface here instead of as silent slow ingest
+        "overflow_edges": final["overflow_edges"],
         "published_edges": final["published_edges"],
         "stream_total_edges": stream_total,
         "unaccounted_edges": final["unaccounted_edges"],
@@ -300,6 +362,10 @@ def main() -> None:
     ap.add_argument("--n-requests", type=int, default=4000)
     ap.add_argument("--batch-max", type=int, default=512)
     ap.add_argument("--publish-every", type=int, default=2)
+    ap.add_argument("--sketch-backend", default="",
+                    choices=["", "flat", "pallas"],
+                    help="kmatrix layout (default: $REPRO_SKETCH_BACKEND, "
+                         "else platform pick)")
     ap.add_argument("--concurrent", action="store_true",
                     help="background runtime ingest concurrent with queries")
     ap.add_argument("--backpressure", default="block",
@@ -324,7 +390,8 @@ def main() -> None:
             publish_every=args.publish_every,
             queue_capacity=args.queue_capacity,
             backpressure=args.backpressure,
-            publish_policy=args.publish_policy)
+            publish_policy=args.publish_policy,
+            sketch_backend=args.sketch_backend or None)
         print(json.dumps(record))
         if not (record["engine_matches_direct"]
                 and record["conservation_ok"]):
@@ -335,9 +402,11 @@ def main() -> None:
         dataset=args.dataset, sketch=args.sketch, budget_kb=args.budget_kb,
         depth=args.depth, seed=args.seed, scale=args.scale,
         target_qps=args.qps, n_requests=args.n_requests,
-        batch_max=args.batch_max, publish_every=args.publish_every)
+        batch_max=args.batch_max, publish_every=args.publish_every,
+        sketch_backend=args.sketch_backend or None)
     print(json.dumps(record))
-    if not record["engine_matches_direct"]:
+    if not (record["engine_matches_direct"]
+            and record.get("backend_parity_ok", True)):
         sys.exit(1)
 
 

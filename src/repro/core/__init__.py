@@ -6,6 +6,8 @@ Sketch zoo (paper §III + §IV):
   TCM       (Type II, global)      repro.core.matrix_sketch (kind="tcm")
   gMatrix   (Type II, global)      repro.core.matrix_sketch (kind="gmatrix")
   kMatrix   (Type II, partitioned) repro.core.kmatrix        <- contribution
+            width-class backend    repro.core.kmatrix_accel  (same cells,
+            TPU-native layout; selected via sketch_backend())
 
 All sketches share: batched EdgeBatch ingest (fused hash + scatter-add),
 additive merge (enables data-parallel / fault-tolerant operation), and a
@@ -16,6 +18,7 @@ from repro.core.countmin import CountMin
 from repro.core.gsketch import GSketch
 from repro.core.matrix_sketch import MatrixSketch
 from repro.core.kmatrix import KMatrix
+from repro.core.kmatrix_accel import KMatrixAccel, sketch_backend
 from repro.core.partitioning import PartitionPlan, plan_partitions, total_expected_error
 
 __all__ = [
@@ -26,6 +29,8 @@ __all__ = [
     "GSketch",
     "MatrixSketch",
     "KMatrix",
+    "KMatrixAccel",
+    "sketch_backend",
     "PartitionPlan",
     "plan_partitions",
     "total_expected_error",

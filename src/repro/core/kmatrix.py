@@ -14,6 +14,11 @@ Layout (per layer r):
         cell = offset_p + h_r(i) % w_p * w_p + h_r(j) % w_p
     (actually fastrange, not mod — see repro.common.hashing)
 
+This is the *flat* backend of the kMatrix sketch.  The same cells also
+exist in a TPU-native width-class arrangement (``repro.core.kmatrix_accel``,
+selected via ``sketch_backend()``); the two layouts are bit-exact
+permutations of each other (DESIGN.md §Width-class-backend).
+
 Design note (documented in DESIGN.md): the paper asserts kMatrix answers
 every gMatrix query but does not specify how *connectivity* queries work
 once the node hash space is partitioned (a path can hop between partitions,
@@ -31,7 +36,7 @@ import numpy as np
 
 from repro.common.hashing import HashFamily, families_match, fastrange
 from repro.common.struct import pytree_dataclass, static_field
-from repro.core.partitioning import PartitionPlan, plan_partitions
+from repro.core.partitioning import PartitionPlan, plan_for
 from repro.core.routing import RouteTable, route_table_from_plan, routes_match
 from repro.core.types import EdgeBatch, VertexStats
 
@@ -72,38 +77,16 @@ class KMatrix:
         conn_w = int(np.sqrt(per_layer * conn_frac)) if conn_frac > 0 else 0
         freq_budget = per_layer - conn_w * conn_w
         total_width = max(int(np.sqrt(freq_budget)), 2)
-        if partitioner == "greedy":
-            plan = plan_partitions(
-                stats,
-                total_width,
-                square=True,
-                max_partitions=max_partitions,
-                min_width=max(min_width, 16),
-                outlier_frac=outlier_frac,
-            )
-        elif partitioner == "banded":
-            from repro.core.partitioning import plan_partitions_banded
-
-            plan = plan_partitions_banded(
-                stats,
-                total_width,
-                square=True,
-                n_bands=n_bands,
-                min_width=min_width,
-                outlier_frac=outlier_frac,
-            )
-        elif partitioner == "auto":
-            from repro.core.partitioning import plan_partitions_auto
-
-            plan = plan_partitions_auto(
-                stats,
-                total_width,
-                square=True,
-                min_width=min_width,
-                outlier_frac=outlier_frac,
-            )
-        else:
-            raise ValueError(f"unknown partitioner {partitioner!r}")
+        plan = plan_for(
+            partitioner,
+            stats,
+            total_width,
+            square=True,
+            min_width=min_width,
+            outlier_frac=outlier_frac,
+            max_partitions=max_partitions,
+            n_bands=n_bands,
+        )
         route, pool_size = route_table_from_plan(plan, square=True)
         return KMatrix(
             pool=jnp.zeros((depth, pool_size), dtype=jnp.int32),

@@ -402,3 +402,37 @@ PARTITIONERS = {
     "banded": plan_partitions_banded,  # beyond-paper sqrt-G bands
     "auto": plan_partitions_auto,  # beyond-paper two-term model selection
 }
+
+
+def plan_for(
+    partitioner: str,
+    stats: VertexStats,
+    total_width: int,
+    *,
+    square: bool,
+    min_width: int = 8,
+    outlier_frac: float | None = None,
+    max_partitions: int = 64,
+    n_bands: int = 16,
+) -> PartitionPlan:
+    """Dispatch to a named partitioner with its mode-specific knobs.
+
+    Shared by both kMatrix backends (``core.kmatrix`` flat pool,
+    ``core.kmatrix_accel`` width classes) so a backend switch never changes
+    which plan a given configuration produces.  The greedy recursion floors
+    ``min_width`` at 16: below that its equal binary splits produce slabs
+    too small to be worth the routing entry.
+    """
+    if partitioner == "greedy":
+        return plan_partitions(
+            stats, total_width, square=square, max_partitions=max_partitions,
+            min_width=max(min_width, 16), outlier_frac=outlier_frac)
+    if partitioner == "banded":
+        return plan_partitions_banded(
+            stats, total_width, square=square, n_bands=n_bands,
+            min_width=min_width, outlier_frac=outlier_frac)
+    if partitioner == "auto":
+        return plan_partitions_auto(
+            stats, total_width, square=square, min_width=min_width,
+            outlier_frac=outlier_frac)
+    raise ValueError(f"unknown partitioner {partitioner!r}")

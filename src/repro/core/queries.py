@@ -27,6 +27,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import kmatrix as km
+from repro.core import kmatrix_accel as kma
 from repro.core import matrix_sketch as ms
 
 
@@ -125,7 +126,7 @@ def closure_layers(sk) -> jax.Array:
     whole edge to one cell, so no adjacency structure exists to close over —
     rejecting them here beats returning silently meaningless reachability.
     """
-    if isinstance(sk, km.KMatrix):
+    if isinstance(sk, (km.KMatrix, kma.KMatrixAccel)):
         assert sk.conn_w > 0, (
             "kMatrix built with conn_frac=0 cannot answer reachability")
         return sk.conn
@@ -140,6 +141,8 @@ def reach_cells(sk, v: jax.Array) -> jax.Array:
     """Per-layer connectivity-matrix slot of vertex ``v`` -> int32[d, *S]."""
     if isinstance(sk, km.KMatrix):
         return km.conn_cells(sk, v)
+    if isinstance(sk, kma.KMatrixAccel):
+        return kma.conn_cells(sk, v)
     if isinstance(sk, ms.MatrixSketch):
         return ms.node_cells(sk, v)
     raise ValueError(

@@ -23,14 +23,12 @@ import functools
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.common.hashing import HashFamily, fastrange
-from repro.common.struct import pytree_dataclass, static_field
+from repro.common.hashing import fastrange
+from repro.core.kmatrix_accel import KMatrixAccel
+from repro.core.kmatrix_accel import edge_freq as kmatrix_accel_edge_freq  # noqa: F401 (kernel-level re-export)
 from repro.core.matrix_sketch import MatrixSketch
-from repro.core.partitioning import plan_partitions_banded
-from repro.core.routing import RouteTable
-from repro.core.types import EdgeBatch, VertexStats
+from repro.core.types import EdgeBatch
 from repro.kernels.matrix_ingest import matrix_ingest
 from repro.kernels.matrix_lookup import matrix_lookup
 from repro.kernels.reach_closure import reach_step
@@ -94,91 +92,11 @@ def accel_reach_closure(table: jax.Array, *, block: int = 128,
 # --------------------------------------------------------------------------
 # kMatrix width-class layout
 # --------------------------------------------------------------------------
-
-@pytree_dataclass
-class KMatrixAccel:
-    """kMatrix with power-of-two width classes (TPU-native layout).
-
-    ``pools[c]`` holds every partition of width ``class_widths[c]`` as one
-    rectangular array int32[d, P_c, w_c, w_c].  ``part_class``/``part_index``
-    map a global partition id to (class, row-within-class).
-    """
-
-    pools: tuple  # tuple[int32[d, P_c, w_c, w_c], ...]
-    conn: jax.Array  # int32[d, cw, cw]
-    hashes: HashFamily
-    route: RouteTable  # widths/offsets unused; lookup() gives partition id
-    part_class: jax.Array  # int32[P]
-    part_index: jax.Array  # int32[P]
-    part_width: jax.Array  # int32[P]
-    class_widths: tuple = static_field()
-    class_counts: tuple = static_field()
-    conn_w: int = static_field()
-
-    @property
-    def depth(self) -> int:
-        return self.conn.shape[0] if self.conn.ndim == 3 else self.pools[0].shape[0]
-
-    @property
-    def num_counters(self) -> int:
-        return sum(int(p.size) for p in self.pools) + int(self.conn.size)
-
-    @staticmethod
-    def create(
-        *,
-        bytes_budget: int,
-        stats: VertexStats,
-        depth: int = 7,
-        seed: int = 0,
-        n_bands: int = 16,
-        min_width: int = 8,
-        conn_frac: float = 0.1,
-        outlier_frac: float | None = None,
-    ) -> "KMatrixAccel":
-        counters = bytes_budget // 4
-        per_layer = max(counters // depth, 4)
-        conn_w = int(np.sqrt(per_layer * conn_frac)) if conn_frac > 0 else 0
-        total_width = max(int(np.sqrt(per_layer - conn_w * conn_w)), 2)
-        plan = plan_partitions_banded(
-            stats, total_width, square=True, n_bands=n_bands,
-            min_width=min_width, outlier_frac=outlier_frac,
-        )
-        # Quantize each width DOWN to a power of two (keeps the budget).
-        widths = np.asarray([1 << (int(p.width).bit_length() - 1)
-                             for p in plan.partitions], dtype=np.int32)
-        classes = sorted(set(widths.tolist()))
-        part_class = np.asarray([classes.index(w) for w in widths], np.int32)
-        part_index = np.zeros(len(widths), np.int32)
-        counts = []
-        for c in range(len(classes)):
-            members = np.nonzero(part_class == c)[0]
-            part_index[members] = np.arange(len(members))
-            counts.append(len(members))
-        route = RouteTable(
-            keys=jnp.asarray(plan.route_keys),
-            part=jnp.asarray(plan.route_part),
-            offsets=jnp.zeros(len(widths), jnp.int32),
-            widths=jnp.asarray(widths),
-            outlier=plan.outlier,
-            n_partitions=len(widths),
-            max_width=int(widths.max()),
-        )
-        pools = tuple(
-            jnp.zeros((depth, counts[c], classes[c], classes[c]), jnp.int32)
-            for c in range(len(classes))
-        )
-        return KMatrixAccel(
-            pools=pools,
-            conn=jnp.zeros((depth, conn_w, conn_w), jnp.int32),
-            hashes=HashFamily.create(seed, depth),
-            route=route,
-            part_class=jnp.asarray(part_class),
-            part_index=jnp.asarray(part_index),
-            part_width=jnp.asarray(widths),
-            class_widths=tuple(classes),
-            class_counts=tuple(counts),
-            conn_w=conn_w,
-        )
+#
+# The ``KMatrixAccel`` state and its pure-jnp query/merge/relayout surface
+# live in ``repro.core.kmatrix_accel`` (the sketch-protocol module the
+# serving/runtime layers consume).  This file owns only the Pallas-backed
+# ingest dispatch; the names below are re-exported for kernel-level callers.
 
 
 def _dispatch(sk: KMatrixAccel, batch: EdgeBatch, capacity: int):
@@ -242,7 +160,10 @@ def kmatrix_accel_ingest(sk: KMatrixAccel, batch: EdgeBatch,
                                  block_b=block_b, interpret=_INTERPRET)
 
     # Overflow tail: exact scatter (rare; only when a partition exceeds cap).
+    # The tally is surfaced as sk.overflow so capacity regressions show up
+    # in runtime metrics instead of silently eating scatter-fallback cost.
     over = (~in_cap) & (batch.weight > 0)
+    overflow = sk.overflow + jnp.sum(over.astype(sk.overflow.dtype))
     w_p = sk.part_width[p]
     hi_o = fastrange(mix_src, w_p)
     hj_o = fastrange(mix_dst, w_p)
@@ -265,25 +186,4 @@ def kmatrix_accel_ingest(sk: KMatrixAccel, batch: EdgeBatch,
         conn = sk.conn.at[rows, ci, cj].add(batch.weight[None])
     else:
         conn = sk.conn
-    return sk.replace(pools=tuple(pools), conn=conn)
-
-
-def kmatrix_accel_edge_freq(sk: KMatrixAccel, src: jax.Array,
-                            dst: jax.Array) -> jax.Array:
-    """Point queries on the class layout (pure gather; query volume is tiny
-    next to ingest volume, so this path stays unfused)."""
-    p = sk.route.lookup(src)
-    w_p = sk.part_width[p]
-    hi = fastrange(sk.hashes.mix(src), w_p)  # [d, B]
-    hj = fastrange(sk.hashes.mix(dst), w_p)
-    d = sk.depth
-    rows = jnp.arange(d, dtype=jnp.int32)[:, None]
-    est = jnp.full(src.shape, jnp.iinfo(jnp.int32).max, jnp.int32)
-    for c, (w_c, p_c) in enumerate(zip(sk.class_widths, sk.class_counts)):
-        if p_c == 0:
-            continue
-        sel = sk.part_class[p] == c
-        q = jnp.where(sel, sk.part_index[p], 0)
-        vals = jnp.min(sk.pools[c][rows, q[None], hi, hj], axis=0)
-        est = jnp.where(sel, vals, est)
-    return est
+    return sk.replace(pools=tuple(pools), conn=conn, overflow=overflow)

@@ -51,6 +51,12 @@ def parse_args(argv=None) -> argparse.Namespace:
     ap.add_argument("--scale", type=float, default=1.0)
     ap.add_argument("--partitioner", default="banded",
                     choices=["banded", "greedy", "auto"])
+    ap.add_argument("--sketch-backend", default="",
+                    choices=["", "flat", "pallas"],
+                    help="kmatrix physical layout: flat XLA scatter pool or "
+                         "width-class Pallas MXU layout (default: "
+                         "$REPRO_SKETCH_BACKEND, else pallas on TPU / flat "
+                         "elsewhere)")
     ap.add_argument("--qps", type=float, default=2000.0)
     ap.add_argument("--n-requests", type=int, default=8000)
     ap.add_argument("--batch-max", type=int, default=512)
@@ -166,6 +172,7 @@ def background_serve(args, tenant, engine, requests) -> tuple:
         "mean_publish_latency_ms": tr["mean_publish_latency_ms"],
         "max_queue_depth": tr["max_queue_depth"],
         "dropped_edges": tr["dropped_edges"],
+        "overflow_edges": tr["overflow_edges"],
         "spilled_batches": tr["spilled_batches"],
         "unaccounted_edges": tr["unaccounted_edges"],
         "checkpoints": tr["checkpoints"],
@@ -177,7 +184,8 @@ def background_serve(args, tenant, engine, requests) -> tuple:
 def main() -> None:
     args = parse_args()
     registry = SketchRegistry(depth=args.depth, scale=args.scale,
-                              partitioner=args.partitioner)
+                              partitioner=args.partitioner,
+                              sketch_backend=args.sketch_backend or None)
     tenant = registry.open(args.dataset, args.sketch, args.budget_kb,
                            seed=args.seed)
     n_nodes = tenant.stream.spec.n_nodes
@@ -211,6 +219,7 @@ def main() -> None:
         "driver": "query_serve",
         "dataset": args.dataset,
         "sketch": args.sketch,
+        "sketch_backend": registry.sketch_backend,
         "budget_kb": args.budget_kb,
         "achieved_qps": round(report.achieved_qps, 1),
         "offered_qps": args.qps,

@@ -42,6 +42,12 @@ def main() -> None:
     ap.add_argument("--scale", type=float, default=1.0)
     ap.add_argument("--partitioner", default="banded",
                     choices=["banded", "greedy"])
+    ap.add_argument("--sketch-backend", default="",
+                    choices=["", "flat", "pallas"],
+                    help="kmatrix physical layout (default: "
+                         "$REPRO_SKETCH_BACKEND, else pallas on TPU / flat "
+                         "elsewhere); checkpoints are layout-specific but "
+                         "convertible via core.kmatrix_accel relayout")
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--steps-per-ckpt", type=int, default=16)
     ap.add_argument("--resume", action="store_true")
@@ -58,8 +64,10 @@ def main() -> None:
     ssrc, sdst, sw = sample_stream(stream, args.sample_size, seed=args.seed + 1)
     stats = vertex_stats_from_sample(ssrc, sdst, sw)
     sk, mod = build_sketch(args.sketch, args.budget_kb * 1024, stats,
-                           args.depth, args.seed, args.partitioner)
-    print(f"init: {args.sketch} counters={sk.num_counters} "
+                           args.depth, args.seed, args.partitioner,
+                           backend=args.sketch_backend or None)
+    print(f"init: {args.sketch} [{type(sk).__name__}] "
+          f"counters={sk.num_counters} "
           f"({time.time()-t0:.2f}s init incl. sampling)")
 
     offset = 0

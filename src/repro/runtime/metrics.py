@@ -72,7 +72,7 @@ class WorkerMetrics:
         self.last_checkpoint_at = now
 
     def snapshot(self, *, queue_stats: dict, state: str, epoch: int,
-                 now: float | None = None) -> dict:
+                 overflow_edges: int = 0, now: float | None = None) -> dict:
         """One JSON-able metrics view; ``queue_stats`` from the worker's queue."""
         now = time.monotonic() if now is None else now
         elapsed = max(now - self.started_at, 1e-9) if self.started_at else 0.0
@@ -94,6 +94,10 @@ class WorkerMetrics:
                 self.publish_latency_sum_s / self.publishes * 1e3, 3)
             if self.publishes else 0.0,
             "checkpoints": self.checkpoints,
+            # accel-backend scatter-fallback volume (0 on the flat backend):
+            # a rising rate means per-partition dispatch capacity is being
+            # outgrown and ingest is silently paying scatter cost
+            "overflow_edges": overflow_edges,
             "queue_depth": queue_stats["depth"],
             "ingest_lag_batches": queue_stats["depth"],
             "dropped_batches": queue_stats["dropped_batches"],

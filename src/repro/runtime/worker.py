@@ -205,9 +205,11 @@ class IngestWorker(threading.Thread):
         }
 
     def metrics_snapshot(self) -> dict:
-        return self.metrics.snapshot(queue_stats=self.queue.stats(),
-                                     state=self.state,
-                                     epoch=self.tenant.epoch)
+        return self.metrics.snapshot(
+            queue_stats=self.queue.stats(),
+            state=self.state,
+            epoch=self.tenant.epoch,
+            overflow_edges=getattr(self.tenant.buffer, "overflow_edges", 0))
 
 
 def restore_worker_state(tenant, checkpoint_dir: str,

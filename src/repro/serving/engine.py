@@ -26,8 +26,15 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import CountMin, GSketch, KMatrix, MatrixSketch
-from repro.core import countmin, gsketch, kmatrix, matrix_sketch, queries
+from repro.core import CountMin, GSketch, KMatrix, KMatrixAccel, MatrixSketch
+from repro.core import (
+    countmin,
+    gsketch,
+    kmatrix,
+    kmatrix_accel,
+    matrix_sketch,
+    queries,
+)
 from repro.serving.snapshot import Snapshot
 
 EDGE_FREQ = "edge_freq"
@@ -94,7 +101,8 @@ class Result:
     value: Any  # int | bool | (ids ndarray, freqs ndarray) for heavy_nodes
 
 
-_MODULES = {KMatrix: kmatrix, MatrixSketch: matrix_sketch,
+_MODULES = {KMatrix: kmatrix, KMatrixAccel: kmatrix_accel,
+            MatrixSketch: matrix_sketch,
             GSketch: gsketch, CountMin: countmin}
 
 

@@ -23,10 +23,12 @@ from repro.core import (
     CountMin,
     GSketch,
     KMatrix,
+    KMatrixAccel,
     MatrixSketch,
     vertex_stats_from_sample,
 )
-from repro.core import countmin, gsketch, kmatrix, matrix_sketch
+from repro.core import sketch_backend as resolve_sketch_backend
+from repro.core import countmin, gsketch, kmatrix, kmatrix_accel, matrix_sketch
 from repro.serving.snapshot import Snapshot, SnapshotBuffer
 from repro.streams import make_stream, sample_stream
 
@@ -40,8 +42,16 @@ SKETCHES = {
 
 
 def build_sketch(name: str, budget: int, stats, depth: int, seed: int,
-                 partitioner: str = "banded"):
-    """Construct any sketch kind from a byte budget (+ stats if partitioned)."""
+                 partitioner: str = "banded", backend: str | None = None):
+    """Construct any sketch kind from a byte budget (+ stats if partitioned).
+
+    For ``kmatrix`` the physical layout is a *backend* choice
+    (``sketch_backend``: arg > $REPRO_SKETCH_BACKEND > platform default):
+    ``pallas`` builds the width-class ``KMatrixAccel`` whose ingest runs the
+    MXU kernel, ``flat`` the classic flat-pool scatter ``KMatrix``.  Every
+    layer above (snapshots, workers, engine, checkpoints) is
+    layout-agnostic, dispatching on the returned module.
+    """
     cls, mod = SKETCHES[name]
     if name == "countmin":
         return cls.create(bytes_budget=budget, depth=depth, seed=seed), mod
@@ -51,6 +61,10 @@ def build_sketch(name: str, budget: int, stats, depth: int, seed: int,
     if name == "gsketch":
         return cls.create(bytes_budget=budget, stats=stats, depth=depth,
                           seed=seed), mod
+    if resolve_sketch_backend(backend) == "pallas":
+        return KMatrixAccel.create(
+            bytes_budget=budget, stats=stats, depth=depth, seed=seed,
+            partitioner=partitioner), kmatrix_accel
     return cls.create(bytes_budget=budget, stats=stats, depth=depth,
                       seed=seed, partitioner=partitioner), mod
 
@@ -117,12 +131,17 @@ class SketchRegistry:
 
     def __init__(self, *, depth: int = 5, batch_size: int = 8192,
                  sample_size: int = 30_000, scale: float = 1.0,
-                 partitioner: str = "banded") -> None:
+                 partitioner: str = "banded",
+                 sketch_backend: str | None = None) -> None:
         self.depth = depth
         self.batch_size = batch_size
         self.sample_size = sample_size
         self.scale = scale
         self.partitioner = partitioner
+        # resolved once at registry build, not per tenant open: a registry
+        # whose tenants straddle two layouts would break merge/restore
+        # interchange assumptions downstream
+        self.sketch_backend = resolve_sketch_backend(sketch_backend)
         self._tenants: dict[TenantKey, Tenant] = {}
         # get-or-create must be atomic once background workers can race
         # opens: two tenants for one key would double-ingest the stream
@@ -143,7 +162,8 @@ class SketchRegistry:
         ssrc, sdst, sw = sample_stream(stream, n_sample, seed=seed + 1)
         stats = vertex_stats_from_sample(ssrc, sdst, sw)
         sketch, mod = build_sketch(kind, budget_kb * 1024, stats, self.depth,
-                                   seed, self.partitioner)
+                                   seed, self.partitioner,
+                                   backend=self.sketch_backend)
         with self._lock:
             if key in self._tenants:  # lost the build race; first one wins
                 return self._tenants[key]

@@ -105,6 +105,20 @@ class SnapshotBuffer:
             pending = self._pending
         return int(jax.device_get(pending))
 
+    @property
+    def overflow_edges(self) -> int:
+        """Ingest updates that took the accel backend's scatter-fallback
+        (per-partition capacity exceeded), front + live delta.  0 for
+        layouts without overflow accounting.  Host sync; diagnostics only —
+        surfaced through runtime metrics and the serve bench."""
+        with self._lock:
+            front = getattr(self._front.sketch, "overflow", None)
+            delta = getattr(self._delta, "overflow", None)
+        if front is None:
+            return 0
+        total = int(jax.device_get(front))
+        return total + (int(jax.device_get(delta)) if delta is not None else 0)
+
     def ingest(self, batch: EdgeBatch) -> None:
         """Absorb a batch into the back buffer; published readers unaffected."""
         with self._lock:

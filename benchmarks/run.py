@@ -9,12 +9,18 @@ Prints ``name,us_per_call,derived`` CSV rows (plus figure tables to stderr).
   kernel_micro      — Pallas kernels (interpret) vs pure-jnp reference ops
   ingest            — flat-scatter vs width-class accel sketch backend
                       edges/s (emits BENCH_ingest.json, bit-exactness gated)
+                      + dispatch-capacity policy: plan-derived vs 2B/P
+                      overflow on a skewed stream (strict-improvement gated)
+  serve_sharded     — sharded serving at K=1/2/4: per-shard runtime ingest
+                      + scatter/gather queries (emits BENCH_sharded.json,
+                      conservation + merged-exactness gated)
 
 Usage: PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig7_are]
 """
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 import time
 
@@ -214,6 +220,7 @@ def ingest_backends(scale: float, quick: bool,
     stream = make_stream(dataset, batch_size=4096, seed=1, scale=scale)
     ssrc, sdst, sw = sample_stream(stream, int(30_000 * scale) or 1000, seed=7)
     stats = vertex_stats_from_sample(ssrc, sdst, sw)
+    capacity = _capacity_policy_compare(stream, stats, quick)
     n_batches = min(stream.num_batches, 3 if quick else 16)
     edges = sum(int((np.asarray(stream.batch(i).weight) > 0).sum())
                 for i in range(n_batches))
@@ -242,12 +249,10 @@ def ingest_backends(scale: float, quick: bool,
         _emit(f"ingest/{name}", dt / max(edges, 1) * 1e6,
               f"edges_per_s={edges / max(dt, 1e-9):.0f}")
 
+    from benchmarks.serve_bench import _layout_counters_equal
+
     relayout = kma.to_flat_layout(states["pallas"])
-    bit_exact = bool(
-        np.array_equal(np.asarray(relayout.pool),
-                       np.asarray(states["flat"].pool))
-        and np.array_equal(np.asarray(relayout.conn),
-                           np.asarray(states["flat"].conn)))
+    bit_exact = _layout_counters_equal(relayout, states["flat"])
     record = {
         "bench": "ingest",
         "dataset": dataset,
@@ -260,6 +265,7 @@ def ingest_backends(scale: float, quick: bool,
         "overflow_edges": int(states["pallas"].overflow),
         "backends": backends,
         "bit_exact": bit_exact,
+        "capacity_policy": capacity,
     }
     with open(out_path, "w") as f:
         _json.dump(record, f, indent=2)
@@ -268,6 +274,65 @@ def ingest_backends(scale: float, quick: bool,
         raise RuntimeError(
             "ingest: accel backend counters diverged from the flat backend "
             "on the same stream — edges/s for wrong counters is meaningless")
+    if not capacity["counters_equal"]:
+        raise RuntimeError(
+            "ingest: capacity policy changed counter state — dispatch "
+            "capacity must only move edges between the MXU path and the "
+            "exact scatter fallback, never change what is counted")
+    if capacity["overflow_plan_capacity"] >= capacity["overflow_2bp_capacity"]:
+        raise RuntimeError(
+            "ingest: plan-derived dispatch capacity did not reduce the "
+            "scatter-fallback volume vs the 2B/P baseline on a skewed "
+            f"stream ({capacity['overflow_plan_capacity']} >= "
+            f"{capacity['overflow_2bp_capacity']}) — the capacity-policy "
+            "fix regressed")
+
+
+def _capacity_policy_compare(stream, stats, quick: bool) -> dict:
+    """Dispatch-capacity policy on a skewed stream: plan-derived (the fix)
+    vs the legacy uniform ``2B/P`` baseline.
+
+    Uses the production ``banded`` partitioner (the registry default, P=17)
+    where the hot band's load exceeds 2B/P by the skew factor.  Capacity is
+    a dispatch concern only, so both runs must land bit-identical counters;
+    the plan-derived capacity must STRICTLY cut ``overflow_edges`` (the
+    scatter-fallback volume) — both enforced by the caller."""
+    from benchmarks.serve_bench import _layout_counters_equal
+    from repro.core import kmatrix_accel as kma
+
+    accel = KMatrixAccel.create(bytes_budget=256 * 1024, stats=stats,
+                                depth=5, seed=3, partitioner="banded")
+    b = stream.batch_size
+    n_parts = accel.route.n_partitions
+    legacy = max(128, (2 * b) // max(n_parts, 1))
+    legacy = -(-legacy // 128) * 128
+    plan_cap = kma.dispatch_capacity(accel, b)
+    n_batches = min(stream.num_batches, 3 if quick else 8)
+    st_plan, st_legacy = accel, accel
+    for i in range(n_batches):
+        batch = stream.batch(i)
+        st_plan = kma.ingest(st_plan, batch)  # default: plan-derived
+        st_legacy = kma.ingest(st_legacy, batch, capacity=legacy)
+    counters_equal = _layout_counters_equal(st_plan, st_legacy)
+    out = {
+        "partitioner": "banded",
+        "n_partitions": n_parts,
+        "batch_size": b,
+        "n_batches": n_batches,
+        "capacity_2bp": legacy,
+        "capacity_plan": plan_cap,
+        "max_load_share": round(max(accel.load_shares), 4),
+        "overflow_2bp_capacity": int(st_legacy.overflow),
+        "overflow_plan_capacity": int(st_plan.overflow),
+        "counters_equal": counters_equal,
+    }
+    _log(f"capacity policy (banded, P={n_parts}, B={b}): overflow "
+         f"{out['overflow_2bp_capacity']} @2B/P={legacy} -> "
+         f"{out['overflow_plan_capacity']} @plan={plan_cap}")
+    _emit("ingest/capacity_policy", 0.0,
+          f"overflow_2bp={out['overflow_2bp_capacity']};"
+          f"overflow_plan={out['overflow_plan_capacity']}")
+    return out
 
 
 def serve_mixed(scale: float, quick: bool) -> None:
@@ -321,6 +386,74 @@ def serve_concurrent(scale: float, quick: bool) -> None:
           f"dropped={rec['dropped_edges']}")
 
 
+def serve_sharded(scale: float, quick: bool,
+                  out_path: str = "BENCH_sharded.json") -> None:
+    """Sharded serving at K=1/2/4 -> BENCH_sharded.json.
+
+    Per K: aggregate ingest edges/s under live query load plus p50/p99, with
+    BOTH sharded hard gates enforced (cross-shard conservation; merged
+    shards bit-identical to a single-sketch replay).  The JSON gives fast
+    CI a per-commit scaling curve for the scatter/gather serving path.
+    """
+    import json as _json
+
+    from benchmarks.serve_bench import run_serve_bench_sharded
+
+    _log("\n== serve_sharded (per-shard runtime ingest + scatter/gather) ==")
+    shards: dict[str, dict] = {}
+    for k in (1, 2, 4):
+        rec = run_serve_bench_sharded(
+            scale=scale, n_requests=600 if quick else 2000,
+            target_qps=1000.0 if quick else 2000.0, n_shards=k)
+        if not rec["conservation_ok"]:
+            raise RuntimeError(
+                f"serve_sharded K={k}: cross-shard conservation failed "
+                f"(published {rec['published_edges']} + dropped "
+                f"{rec['dropped_edges']} != stream "
+                f"{rec['stream_total_edges']})")
+        if rec["sharded_exact"] is False:
+            raise RuntimeError(
+                f"serve_sharded K={k}: merged shard sketches diverged from "
+                "the single-sketch replay — the hash-band routing invariant "
+                "is broken")
+        if not rec["engine_matches_direct"]:
+            raise RuntimeError(
+                f"serve_sharded K={k}: scatter/gather engine diverged from "
+                "the sharded direct oracle")
+        shards[str(k)] = {
+            "ingest_edges_per_s": rec["ingest_edges_per_s_dedicated"],
+            "ingest_edges_per_s_during_serve":
+                rec["ingest_edges_per_s_during_serve"],
+            "achieved_qps": rec["achieved_qps"],
+            "p50_ms": rec["p50_ms"],
+            "p99_ms": rec["p99_ms"],
+            "per_shard_published": rec["per_shard_published"],
+            "conservation_ok": rec["conservation_ok"],
+            "sharded_exact": rec["sharded_exact"],
+        }
+        _log(f"K={k}: {rec['ingest_edges_per_s_dedicated']:,.0f} ingest "
+             f"edges/s (dedicated), {rec['achieved_qps']} qps, "
+             f"p99 {rec['p99_ms']} ms")
+        _emit(f"serve/sharded_k{k}",
+              1e6 / max(rec["ingest_edges_per_s_dedicated"], 1e-9),
+              f"ingest_eps={rec['ingest_edges_per_s_dedicated']};"
+              f"qps={rec['achieved_qps']};p99_ms={rec['p99_ms']}")
+    record = {
+        "bench": "serve_sharded",
+        "dataset": "cit-HepPh",
+        "scale": scale,
+        "budget_kb": 256,
+        "depth": 5,
+        # scaling is bounded by available cores: K > cpu_count adds thread
+        # overhead without parallelism, so read the curve against this
+        "cpu_count": os.cpu_count(),
+        "shards": shards,
+    }
+    with open(out_path, "w") as f:
+        _json.dump(record, f, indent=2)
+    _log(f"wrote {out_path}")
+
+
 BENCHES = {
     "fig6_build_time": lambda a: fig6_build_time(a.scale),
     "fig7_are": lambda a: fig7_fig8_accuracy(a.scale, a.quick),
@@ -329,6 +462,7 @@ BENCHES = {
     "ingest": lambda a: ingest_backends(a.scale, a.quick),
     "serve_mixed": lambda a: serve_mixed(a.scale, a.quick),
     "serve_concurrent": lambda a: serve_concurrent(a.scale, a.quick),
+    "serve_sharded": lambda a: serve_sharded(a.scale, a.quick),
 }
 
 

@@ -16,6 +16,13 @@ The BENCH trajectory's serving row.  Measures, in one process:
     replayed through the flat-pool backend and both the relayout counters
     and every direct estimate must be bit-identical (hard-fails otherwise).
 
+``--shards K`` serves K hash-band shards: one background runtime worker per
+shard, scatter/gather queries through ``ShardedQueryEngine``, and two hard
+gates — cross-shard edge conservation (Σ per-shard published + accounted
+drops == stream total) and sharded-vs-unsharded exactness (the merge of the
+shard sketches must be bit-identical, counters and estimates, to a
+single-sketch replay of the same stream).
+
 ``--concurrent`` switches ingest to a ``repro.runtime`` background worker:
 queries and ingest genuinely overlap, the JSON reports ingest edges/s and
 query p50/p99 side by side, the engine-vs-direct gate is re-checked on
@@ -88,9 +95,7 @@ def _backend_parity_gate(tenant, requests, accel_answers=None) -> dict | None:
     for i in range(tenant.offset):
         flat = ing(flat, tenant.stream.batch(i))
     relayout = kma.to_flat_layout(snap.sketch)
-    counters_equal = bool(
-        np.array_equal(np.asarray(relayout.pool), np.asarray(flat.pool))
-        and np.array_equal(np.asarray(relayout.conn), np.asarray(flat.conn)))
+    counters_equal = _layout_counters_equal(relayout, flat)
     flat_snap = Snapshot(snap.tenant_id + "/flat-twin", snap.epoch, flat,
                          snap.kind, snap.n_edges)
     if accel_answers is None:
@@ -350,6 +355,192 @@ def run_serve_bench_concurrent(*, dataset: str = "cit-HepPh",
     }
 
 
+def _layout_counters_equal(a, b) -> bool:
+    """Bit-equality of a sketch's counter state (pool(s) + conn), layout
+    aware; the ``overflow`` diagnostic is deliberately excluded — dispatch
+    capacity differs between sub-batch shapes, so sharded and unsharded
+    runs legitimately tally different fallback volumes for identical
+    counters."""
+    if hasattr(a, "pools"):
+        return (all(np.array_equal(np.asarray(x), np.asarray(y))
+                    for x, y in zip(a.pools, b.pools))
+                and np.array_equal(np.asarray(a.conn), np.asarray(b.conn)))
+    if hasattr(a, "pool"):
+        return (np.array_equal(np.asarray(a.pool), np.asarray(b.pool))
+                and np.array_equal(np.asarray(a.conn), np.asarray(b.conn)))
+    if hasattr(a, "table"):
+        return np.array_equal(np.asarray(a.table), np.asarray(b.table))
+    return np.array_equal(np.asarray(a.counters), np.asarray(b.counters))
+
+
+def run_serve_bench_sharded(*, dataset: str = "cit-HepPh",
+                            sketch: str = "kmatrix", budget_kb: int = 256,
+                            depth: int = 5, seed: int = 0,
+                            scale: float = 1.0, target_qps: float = 2000.0,
+                            n_requests: int = 4000, batch_max: int = 512,
+                            publish_every: int = 2, warm_batches: int = 4,
+                            n_shards: int = 4, queue_capacity: int = 64,
+                            backpressure: str = "block",
+                            publish_policy: str = "",
+                            epoch_check_requests: int = 64,
+                            sketch_backend: str | None = None) -> dict:
+    """Sharded regime: K runtime ingest workers (one per hash-band shard)
+    under live scatter/gather query load.  Two hard gates (both fail the
+    bench): cross-shard edge conservation (Σ per-shard published +
+    accounted drops == stream total) and sharded-vs-unsharded exactness
+    (the merge of the shard sketches must be bit-identical — counters and
+    direct estimates — to a single-sketch replay of the same stream, which
+    the source-hash-band routing guarantees)."""
+    from repro.runtime import Runtime
+    from repro.serving import (ShardedQueryEngine, attach_shards,
+                               measure_sharded_ingest, sharded_conservation,
+                               sharded_direct_answers, warm_ingest_shapes)
+    from repro.serving.snapshot import Snapshot
+
+    registry = SketchRegistry(depth=depth, scale=scale,
+                              sketch_backend=sketch_backend)
+    tenant = registry.open_sharded(dataset, sketch, budget_kb, seed=seed,
+                                   n_shards=n_shards)
+    engine = ShardedQueryEngine()
+    stream = tenant.stream
+
+    # ---- dedicated ingest throughput: backlog drain, no query load --------
+    # a THROWAWAY tenant (fresh registry, same config) so the serve-phase
+    # tenant below still owns its whole stream; this is the scaling number
+    # BENCH_sharded.json charts against K
+    dedicated = measure_sharded_ingest(
+        SketchRegistry(depth=depth, scale=scale,
+                       sketch_backend=sketch_backend).open_sharded(
+            dataset, sketch, budget_kb, seed=seed, n_shards=n_shards))
+    if not dedicated["conserved"]:
+        _log(f"DEDICATED INGEST CONSERVATION FAILURE: {dedicated}")
+    _log(f"dedicated ingest drain x{n_shards}: "
+         f"{dedicated['edges_per_s']:,.0f} edges/s "
+         f"({dedicated['ingested_edges']} edges, {dedicated['wall_s']}s)")
+    warm_ingest_shapes(tenant)  # serve-phase shard shapes, off the clock
+
+    tenant.step(min(warm_batches, max(1, stream.num_batches // 2)))
+    snap = tenant.publish()
+    n_nodes = stream.spec.n_nodes
+    _log(f"sharded tenant {tenant.key.tenant_id} x{n_shards}: epochs "
+         f"{snap.epochs}, {snap.n_edges} edges warm, universe {n_nodes}")
+
+    mix = mix_for_sketch(sketch)
+    requests = synth_requests(n_requests, mix, n_nodes=n_nodes, seed=seed + 7,
+                              heavy_universe=min(n_nodes, 1 << 14),
+                              heavy_threshold=100.0)
+    warm = synth_requests(max(batch_max, 256), mix, n_nodes=n_nodes, seed=99,
+                          heavy_universe=min(n_nodes, 1 << 14),
+                          heavy_threshold=100.0)
+    warm_bucket_ladder(engine, snap, warm)
+
+    # ---- exactness: scatter/gather engine vs sharded direct oracle --------
+    check = requests[:epoch_check_requests]
+    got = [r.value for r in engine.execute(snap, check)]
+    want = sharded_direct_answers(snap, check)
+    matches = all(_values_match(g, w) for g, w in zip(got, want))
+    if not matches:
+        bad = [i for i, (g, w) in enumerate(zip(got, want))
+               if not _values_match(g, w)]
+        _log(f"MISMATCH sharded engine vs direct at request indices "
+             f"{bad[:10]}")
+
+    # ---- serve under live per-shard background ingest ---------------------
+    runtime = Runtime(queue_capacity=queue_capacity,
+                      backpressure=backpressure,
+                      publish_policy=publish_policy
+                      or f"every:{publish_every}",
+                      coalesce_batches=max(4, n_shards),
+                      coalesce_target=stream.batch_size)
+    handles = attach_shards(runtime, tenant)
+    runtime.start()
+    loadgen = OpenLoopLoadGen(target_qps=target_qps, batch_max=batch_max)
+    t0 = time.perf_counter()
+    report = loadgen.run(engine, lambda: tenant.snapshot, requests)
+    serve_wall_s = time.perf_counter() - t0
+    edges_during_serve = sum(m["ingested_edges"]
+                             for m in runtime.metrics().values())
+    _log(report.to_json())
+
+    runtime.join_pumps()
+    t_ingest0 = time.perf_counter()
+    runtime.stop(drain=True)
+    drain_s = time.perf_counter() - t_ingest0
+
+    # ---- gate 1: cross-shard conservation ---------------------------------
+    cons = sharded_conservation(handles, stream.spec.n_edges)
+    if not cons["conservation_ok"]:
+        _log(f"SHARDED CONSERVATION FAILURE: {cons}")
+
+    # ---- gate 2: merged shards == single-sketch replay, bit-exact ---------
+    # Only meaningful with zero drops: under drop_oldest the replay would
+    # ingest the accounted drops the shards legitimately never saw, so the
+    # mismatch would be the backpressure policy, not a routing break.
+    if cons["dropped_edges"] == 0:
+        merged = tenant.merged_snapshot()
+        mod = tenant.mod
+        replay = mod.empty_like(merged.sketch)
+        ing = jax.jit(mod.ingest)
+        for i in range(stream.num_batches):
+            replay = ing(replay, stream.batch(i))
+        counters_equal = _layout_counters_equal(merged.sketch, replay)
+        replay_snap = Snapshot(merged.tenant_id + "/replay", merged.epoch,
+                               replay, merged.kind, merged.n_edges)
+        merged_answers = eng.direct_answers(merged, check)
+        replay_answers = eng.direct_answers(replay_snap, check)
+        estimates_equal = all(_values_match(a, b) for a, b in
+                              zip(merged_answers, replay_answers))
+        sharded_exact = bool(counters_equal and estimates_equal)
+        if not sharded_exact:
+            _log(f"SHARDED EXACTNESS FAILURE: "
+                 f"counters_equal={counters_equal} "
+                 f"estimates_equal={estimates_equal}")
+    else:
+        counters_equal = estimates_equal = sharded_exact = None
+        _log(f"sharded exactness gate skipped: {cons['dropped_edges']} "
+             "edges dropped under backpressure (accounted by the "
+             "conservation gate); a full-stream replay is not comparable")
+
+    total_edges = cons["published_edges"]
+    return {
+        "bench": "serve_sharded",
+        "dataset": dataset,
+        "sketch": sketch,
+        "sketch_backend": registry.sketch_backend,
+        "budget_kb": budget_kb,
+        "depth": depth,
+        "n_shards": n_shards,
+        "backpressure": backpressure,
+        "publish_policy": publish_policy or f"every:{publish_every}",
+        "offered_qps": report.offered_qps,
+        "achieved_qps": round(report.achieved_qps, 1),
+        "p50_ms": round(report.p50_ms, 3),
+        "p99_ms": round(report.p99_ms, 3),
+        "n_requests": report.n_requests,
+        "ingest_edges_during_serve": edges_during_serve,
+        "ingest_edges_per_s_during_serve": round(
+            edges_during_serve / max(serve_wall_s, 1e-9), 1),
+        # pure concurrent-ingest capacity (backlog drain, no query load) —
+        # the honest scaling-vs-K number; the during-serve rate above is
+        # dominated by query contention on shared cores
+        "ingest_edges_per_s_dedicated": dedicated["edges_per_s"],
+        "dedicated_ingest_conserved": dedicated["conserved"],
+        "drain_s": round(drain_s, 3),
+        "epochs": list(tenant.epochs),
+        "published_edges": total_edges,
+        "dropped_edges": cons["dropped_edges"],
+        "per_shard_published": cons["per_shard_published"],
+        "stream_total_edges": cons["stream_total_edges"],
+        "conservation_ok": cons["conservation_ok"],
+        # None (not False) when drops made the replay incomparable
+        "sharded_counters_equal": counters_equal,
+        "sharded_estimates_equal": estimates_equal,
+        "sharded_exact": sharded_exact,
+        "engine_matches_direct": bool(matches),
+        **{f"engine_{k}": v for k, v in engine.stats.items()},
+    }
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--dataset", default="cit-HepPh")
@@ -368,6 +559,11 @@ def main() -> None:
                          "else platform pick)")
     ap.add_argument("--concurrent", action="store_true",
                     help="background runtime ingest concurrent with queries")
+    ap.add_argument("--shards", type=int, default=0,
+                    help="serve K hash-band shards (one runtime ingest "
+                         "worker per shard, scatter/gather queries); gates "
+                         "cross-shard conservation AND merged-vs-unsharded "
+                         "bit-exactness")
     ap.add_argument("--backpressure", default="block",
                     choices=["block", "drop_oldest"])
     ap.add_argument("--publish-policy", default="",
@@ -380,6 +576,25 @@ def main() -> None:
         args.scale = min(args.scale, 0.1)
         args.n_requests = min(args.n_requests, 1000)
         args.qps = min(args.qps, 1000.0)
+
+    if args.shards:
+        record = run_serve_bench_sharded(
+            dataset=args.dataset, sketch=args.sketch,
+            budget_kb=args.budget_kb, depth=args.depth, seed=args.seed,
+            scale=args.scale, target_qps=args.qps,
+            n_requests=args.n_requests, batch_max=args.batch_max,
+            publish_every=args.publish_every, n_shards=args.shards,
+            queue_capacity=args.queue_capacity,
+            backpressure=args.backpressure,
+            publish_policy=args.publish_policy,
+            sketch_backend=args.sketch_backend or None)
+        print(json.dumps(record))
+        if not (record["engine_matches_direct"]
+                and record["conservation_ok"]
+                and record["sharded_exact"] is not False
+                and record["dedicated_ingest_conserved"]):
+            sys.exit(1)
+        return
 
     if args.concurrent:
         record = run_serve_bench_concurrent(

@@ -99,10 +99,23 @@ def restore(directory: str, template: Any, step: int | None = None):
     data = np.load(os.path.join(path, "leaves.npz"))
     paths_leaves = jax.tree_util.tree_flatten_with_path(template)
     leaves = []
+    filled = []
     for p, leaf in paths_leaves[0]:
         key = "/".join(str(x) for x in p)
+        if key not in data.files:
+            # Forward compatibility: a template may carry leaves an older
+            # checkpoint never wrote (e.g. the KMatrix ``overflow``
+            # diagnostic added after the checkpoint was taken).  The
+            # template holds the freshly-built default for exactly that
+            # case, so fall back to it instead of crashing the restore —
+            # and surface what was filled in the returned metadata so a
+            # caller can refuse if the gap matters to it.
+            filled.append(key)
+            leaves.append(np.asarray(leaf))
+            continue
         arr = data[key]
         assert arr.shape == tuple(leaf.shape), (key, arr.shape, leaf.shape)
         leaves.append(arr.astype(leaf.dtype) if hasattr(leaf, "dtype") else arr)
     state = jax.tree_util.tree_unflatten(paths_leaves[1], leaves)
+    meta["filled_from_template"] = filled
     return state, meta

@@ -19,7 +19,12 @@ from repro.core.gsketch import GSketch
 from repro.core.matrix_sketch import MatrixSketch
 from repro.core.kmatrix import KMatrix
 from repro.core.kmatrix_accel import KMatrixAccel, sketch_backend
-from repro.core.partitioning import PartitionPlan, plan_partitions, total_expected_error
+from repro.core.partitioning import (
+    PartitionPlan,
+    ShardPlan,
+    plan_partitions,
+    total_expected_error,
+)
 
 __all__ = [
     "EdgeBatch",
@@ -32,6 +37,7 @@ __all__ = [
     "KMatrixAccel",
     "sketch_backend",
     "PartitionPlan",
+    "ShardPlan",
     "plan_partitions",
     "total_expected_error",
 ]

@@ -45,6 +45,12 @@ from repro.core.types import EdgeBatch, VertexStats
 class KMatrix:
     pool: jax.Array  # int32[d, pool_size]
     conn: jax.Array  # int32[d, cw, cw] global connectivity sketch (cw may be 0)
+    # scatter-fallback tally carried over from the width-class backend
+    # (``core.kmatrix_accel``).  The flat scatter path never overflows, so
+    # ingest leaves it untouched; it exists so a relayout / checkpoint
+    # migration round-trip (accel -> flat -> accel) preserves the diagnostic
+    # instead of silently zeroing it.  merge sums it (same as accel).
+    overflow: jax.Array  # int32[]
     hashes: HashFamily
     route: RouteTable
     pool_size: int = static_field()
@@ -91,6 +97,7 @@ class KMatrix:
         return KMatrix(
             pool=jnp.zeros((depth, pool_size), dtype=jnp.int32),
             conn=jnp.zeros((depth, conn_w, conn_w), dtype=jnp.int32),
+            overflow=jnp.zeros((), jnp.int32),
             hashes=HashFamily.create(seed, depth),
             route=route,
             pool_size=pool_size,
@@ -162,7 +169,8 @@ def empty_like(sk: KMatrix) -> KMatrix:
     into an ``empty_like`` delta and folds it into the published sketch with
     ``merge`` at epoch publish.
     """
-    return sk.replace(pool=jnp.zeros_like(sk.pool), conn=jnp.zeros_like(sk.conn))
+    return sk.replace(pool=jnp.zeros_like(sk.pool), conn=jnp.zeros_like(sk.conn),
+                      overflow=jnp.zeros_like(sk.overflow))
 
 
 def merge(a: KMatrix, b: KMatrix) -> KMatrix:
@@ -184,4 +192,5 @@ def merge(a: KMatrix, b: KMatrix) -> KMatrix:
             "merge: operands use different partition plans (built from "
             "different samples); edges route to different slabs, so summing "
             "the pools silently corrupts estimates")
-    return a.replace(pool=a.pool + b.pool, conn=a.conn + b.conn)
+    return a.replace(pool=a.pool + b.pool, conn=a.conn + b.conn,
+                     overflow=a.overflow + b.overflow)

@@ -39,7 +39,7 @@ import numpy as np
 from repro.common.hashing import HashFamily, families_match, fastrange
 from repro.common.struct import pytree_dataclass, static_field
 from repro.core.kmatrix import KMatrix
-from repro.core.partitioning import plan_for
+from repro.core.partitioning import good_turing_outlier_share, plan_for
 from repro.core.routing import RouteTable, routes_match
 from repro.core.types import EdgeBatch, VertexStats
 
@@ -80,6 +80,13 @@ class KMatrixAccel:
     class_widths: tuple = static_field()
     class_counts: tuple = static_field()
     conn_w: int = static_field()
+    # Expected per-partition share of stream edges, from the partition
+    # plan's banded load (sampled frequency mass per partition, Good-Turing
+    # share for the outlier).  Sizes the ingest dispatch capacity
+    # (``dispatch_capacity``) from the plan instead of a uniform 2B/P.
+    # None on sketches relayouted from a flat pool (no sample available):
+    # those fall back to the uniform formula.
+    load_shares: tuple | None = static_field(default=None)
 
     @property
     def depth(self) -> int:
@@ -136,6 +143,7 @@ class KMatrixAccel:
             jnp.zeros((depth, counts[c], classes[c], classes[c]), jnp.int32)
             for c in range(len(classes))
         )
+        load_shares = _plan_load_shares(plan, stats)
         return KMatrixAccel(
             pools=pools,
             conn=jnp.zeros((depth, conn_w, conn_w), jnp.int32),
@@ -148,7 +156,53 @@ class KMatrixAccel:
             class_widths=tuple(classes),
             class_counts=tuple(counts),
             conn_w=conn_w,
+            load_shares=load_shares,
         )
+
+
+def _plan_load_shares(plan, stats: VertexStats) -> tuple:
+    """Expected stream-edge share per partition, from the sample.
+
+    Sampled partitions split the SEEN share of the stream proportionally to
+    their sampled frequency mass; the outlier partition's share is the
+    Good-Turing estimate of unseen-source traffic (the same estimate that
+    sized its width).  Shares sum to ~1 and are static Python floats, so the
+    ingest capacity derived from them stays a trace-time constant.
+    """
+    vert = np.asarray(stats.vertex)  # sorted unique (types.py contract)
+    freq = np.asarray(stats.freq, np.float64)
+    total = max(float(freq.sum()), 1e-9)
+    unseen = good_turing_outlier_share(freq)
+    shares = []
+    for p in plan.partitions[:-1]:
+        pos = np.searchsorted(vert, np.asarray(p.vertices))
+        shares.append(float(freq[pos].sum()) / total * (1.0 - unseen))
+    shares.append(float(unseen))  # outlier partition (appended last)
+    return tuple(round(s, 6) for s in shares)
+
+
+def dispatch_capacity(sk: KMatrixAccel, batch_size: int,
+                      block_b: int = 128) -> int:
+    """Per-partition ingest dispatch capacity for one batch of ``batch_size``.
+
+    Sized from the partition plan's banded load: the hottest partition's
+    expected share of the stream (``load_shares``) with 2x headroom, capped
+    at the batch size (a partition can never receive more than B edges, and
+    capacity == B guarantees a zero overflow tail).  The legacy uniform
+    ``2B/P`` is kept only as the fallback for relayouted sketches that carry
+    no sample — on skewed streams it undersizes the hot partition by the
+    skew factor and every excess edge pays the scatter-fallback path
+    (ROADMAP dispatch-capacity item; regression visible as
+    ``overflow_edges`` in runtime metrics / serve_bench / BENCH_ingest).
+    Rounded up to the Pallas ingest block so the kernel grid stays aligned.
+    """
+    if sk.load_shares:
+        cap = int(np.ceil(2.0 * max(sk.load_shares) * batch_size))
+        cap = min(cap, batch_size)
+    else:
+        cap = (2 * batch_size) // max(sk.route.n_partitions, 1)
+    cap = max(cap, min(block_b, batch_size))
+    return -(-cap // block_b) * block_b
 
 
 def _class_structure(widths: np.ndarray):
@@ -274,10 +328,11 @@ def to_flat_layout(sk: KMatrixAccel) -> KMatrix:
 
     Pure permutation — cell ``(hi, hj)`` of partition ``p`` moves from
     ``pools[class(p)][:, index(p)]`` to ``pool[:, offset(p) + hi*w_p + hj]``.
-    The route table (with its flat offsets), hashes and conn matrix carry
-    over unchanged, so every estimate of the result equals the source's.
-    ``overflow`` is ingest-path diagnostics, not counter state; the flat
-    layout has no scatter-fallback and does not carry it.
+    The route table (with its flat offsets), hashes, conn matrix AND the
+    ``overflow`` diagnostic carry over unchanged, so every estimate of the
+    result equals the source's and a relayout round-trip (or a checkpoint
+    migration through the flat layout) preserves the scatter-fallback tally
+    instead of zeroing it.
     """
     d = sk.depth
     widths = np.asarray(sk.part_width)
@@ -294,6 +349,7 @@ def to_flat_layout(sk: KMatrixAccel) -> KMatrix:
     return KMatrix(
         pool=pool,
         conn=sk.conn,
+        overflow=sk.overflow,
         hashes=sk.hashes,
         route=sk.route,
         pool_size=pool_size,
@@ -301,7 +357,7 @@ def to_flat_layout(sk: KMatrixAccel) -> KMatrix:
     )
 
 
-def to_class_layout(sk: KMatrix, *, overflow: jax.Array | int = 0
+def to_class_layout(sk: KMatrix, *, overflow: jax.Array | int | None = None
                     ) -> KMatrixAccel:
     """Bit-exact relayout: flat pool -> width-class pools (inverse of
     ``to_flat_layout``).
@@ -309,8 +365,10 @@ def to_class_layout(sk: KMatrix, *, overflow: jax.Array | int = 0
     Requires the flat sketch to be a *class-layout twin*: every partition
     width a power of two and offsets the standard ``cumsum(w^2)`` slabs —
     i.e. a sketch built by either backend's ``create`` (or a checkpoint of
-    one), not an arbitrary un-quantized plan.  ``overflow`` restores the
-    scatter-fallback counter when relaying out a checkpointed accel state.
+    one), not an arbitrary un-quantized plan.  The scatter-fallback tally
+    defaults to the flat sketch's own ``overflow`` leaf (which
+    ``to_flat_layout`` preserves), so a round-trip is identity on the
+    diagnostic too; pass ``overflow`` explicitly only to override it.
     """
     widths = np.asarray(sk.route.widths)
     if len(widths) == 0:
@@ -338,6 +396,8 @@ def to_class_layout(sk: KMatrix, *, overflow: jax.Array | int = 0
             for p in members
         ]
         pools.append(jnp.stack(blocks, axis=1))
+    if overflow is None:
+        overflow = sk.overflow
     return KMatrixAccel(
         pools=tuple(pools),
         conn=sk.conn,

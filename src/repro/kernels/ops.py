@@ -25,7 +25,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.common.hashing import fastrange
-from repro.core.kmatrix_accel import KMatrixAccel
+from repro.core.kmatrix_accel import KMatrixAccel, dispatch_capacity
 from repro.core.kmatrix_accel import edge_freq as kmatrix_accel_edge_freq  # noqa: F401 (kernel-level re-export)
 from repro.core.matrix_sketch import MatrixSketch
 from repro.core.types import EdgeBatch
@@ -128,9 +128,12 @@ def kmatrix_accel_ingest(sk: KMatrixAccel, batch: EdgeBatch,
     """Exact batched ingest: per-class Pallas matmul ingest for edges within
     capacity, in-jit scatter fallback for the overflow tail (no drops)."""
     b = batch.size
-    n_parts = sk.route.n_partitions
     if capacity is None:
-        capacity = max(block_b, (2 * b) // max(n_parts, 1))
+        # sized from the partition plan's banded load (hottest partition's
+        # expected share of the batch), NOT a uniform 2B/P — on skewed
+        # streams the hot partition's load exceeds 2B/P by the skew factor
+        # and every excess edge would pay the scatter fallback
+        capacity = dispatch_capacity(sk, b, block_b)
     capacity = -(-capacity // block_b) * block_b
 
     p, rank, in_cap = _dispatch(sk, batch, capacity)

@@ -14,6 +14,15 @@ Two ingest modes share the same tenant, engine and load generator:
       accounted drops); ``--checkpoint-dir`` adds crash-safe checkpoints
       and ``--restore`` resumes from the latest one.
 
+  --shards K              (with --background-ingest) sharded serving: edges
+      route to K independent sketch shards by a source-node hash band; one
+      worker + queue per shard, each publishing epochs independently, and
+      queries scatter/gather through ``ShardedQueryEngine``.  With
+      ``--checkpoint-dir`` each shard checkpoints separately and a shard
+      manifest records the topology; ``--restore`` validates it and resumes
+      every shard from its own offset.  The summary gains per-shard
+      published counts and a cross-shard conservation verdict.
+
 Prints a JSON summary line (QPS, p50/p99 latency, epochs) on completion.
 
   python -m repro.launch.query_serve --dataset cit-HepPh --sketch kmatrix \
@@ -71,6 +80,13 @@ def parse_args(argv=None) -> argparse.Namespace:
     ap.add_argument("--background-ingest", action="store_true",
                     help="ingest in a worker thread behind a bounded queue; "
                          "queries run truly concurrently")
+    ap.add_argument("--shards", type=int, default=1,
+                    help="serve K hash-band shards: one ingest worker + "
+                         "queue per shard, scatter/gather queries "
+                         "(requires --background-ingest)")
+    ap.add_argument("--shard-seed", type=int, default=0,
+                    help="seed of the shard routing hash (must match the "
+                         "manifest when restoring a sharded checkpoint)")
     ap.add_argument("--queue-capacity", type=int, default=64)
     ap.add_argument("--backpressure", default="block",
                     choices=["block", "drop_oldest", "spill"])
@@ -100,6 +116,13 @@ def parse_args(argv=None) -> argparse.Namespace:
                               args.queue_capacity != 64)]:
             if is_set:
                 ap.error(f"{flag} requires --background-ingest")
+    if args.shards < 1:
+        ap.error("--shards must be >= 1")
+    if args.shards > 1 and not args.background_ingest:
+        # sharding exists to parallelize ingest; a cooperative single
+        # thread stepping K shards round-robin would just serve the same
+        # stream slower
+        ap.error("--shards > 1 requires --background-ingest")
     if args.restore and not args.checkpoint_dir:
         ap.error("--restore requires --checkpoint-dir")
     if args.backpressure == "spill" and not args.spill_dir:
@@ -181,8 +204,96 @@ def background_serve(args, tenant, engine, requests) -> tuple:
     return report, tenant.snapshot, extras
 
 
+def sharded_main(args) -> None:
+    """Sharded serving: K hash-band shards, one runtime worker per shard,
+    scatter/gather queries (DESIGN.md §Sharding)."""
+    from repro.runtime import Runtime
+    from repro.serving import (QueryEngine as _QE, ShardedQueryEngine,
+                               attach_shards, sharded_conservation)
+
+    registry = SketchRegistry(depth=args.depth, scale=args.scale,
+                              partitioner=args.partitioner,
+                              sketch_backend=args.sketch_backend or None)
+    tenant = registry.open_sharded(args.dataset, args.sketch, args.budget_kb,
+                                   seed=args.seed, n_shards=args.shards,
+                                   shard_seed=args.shard_seed)
+    stream = tenant.stream
+    n_nodes = stream.spec.n_nodes
+    print(f"sharded tenant {tenant.key.tenant_id} x{args.shards}: stream "
+          f"{stream.num_batches} batches, universe {n_nodes}",
+          file=sys.stderr)
+
+    if not args.restore:  # a restored tenant is already warm
+        tenant.step(min(args.warm_batches,
+                        max(1, stream.num_batches // 2)))
+        snap = tenant.publish()
+        print(f"warm: epochs {snap.epochs}, {snap.n_edges} edges",
+              file=sys.stderr)
+
+    mix = build_mix(args)
+    requests = synth_requests(
+        args.n_requests, mix, n_nodes=n_nodes, seed=args.seed + 7,
+        heavy_universe=min(n_nodes, 1 << 14), heavy_threshold=100.0)
+    engine = ShardedQueryEngine(_QE())
+    warm = synth_requests(args.batch_max, mix, n_nodes=n_nodes, seed=99,
+                          heavy_universe=min(n_nodes, 1 << 14),
+                          heavy_threshold=100.0)
+    warm_bucket_ladder(engine, tenant.snapshot, warm)
+
+    runtime = Runtime(
+        queue_capacity=args.queue_capacity,
+        backpressure=args.backpressure,
+        publish_policy=args.publish_policy or f"every:{args.publish_every}",
+        checkpoint_dir=args.checkpoint_dir or None,
+        checkpoint_every=args.checkpoint_every,
+        spill_dir=args.spill_dir or None,
+        # under backlog, fold sub-batches back to full-batch dispatches so
+        # K small shards don't pay K-fold fixed dispatch cost
+        coalesce_batches=max(4, args.shards),
+        coalesce_target=stream.batch_size,
+    )
+    handles = attach_shards(runtime, tenant, restore=args.restore)
+    runtime.start()
+    loadgen = OpenLoopLoadGen(target_qps=args.qps, batch_max=args.batch_max)
+    report = loadgen.run(engine, lambda: tenant.snapshot, requests)
+    mid = runtime.metrics()
+    ingest_eps = sum(m["edges_per_s_ewma"] for m in mid.values())
+    runtime.join_pumps()
+    runtime.stop(drain=True)
+    cons = sharded_conservation(handles, stream.spec.n_edges)
+
+    summary = {
+        "driver": "query_serve",
+        "dataset": args.dataset,
+        "sketch": args.sketch,
+        "sketch_backend": registry.sketch_backend,
+        "budget_kb": args.budget_kb,
+        "ingest_mode": "sharded-background",
+        "n_shards": args.shards,
+        "achieved_qps": round(report.achieved_qps, 1),
+        "offered_qps": args.qps,
+        "p50_ms": round(report.p50_ms, 3),
+        "p99_ms": round(report.p99_ms, 3),
+        "n_requests": report.n_requests,
+        "final_epochs": list(tenant.epochs),
+        "total_edges": tenant.snapshot.n_edges,
+        "ingest_edges_per_s": round(ingest_eps, 1),
+        "per_shard_published": cons["per_shard_published"],
+        "dropped_edges": cons["dropped_edges"],
+        "stream_total_edges": cons["stream_total_edges"],
+        "conservation_ok": cons["conservation_ok"],
+        **{f"engine_{k}": v for k, v in engine.stats.items()},
+    }
+    print(json.dumps(summary))
+    if not cons["conservation_ok"]:
+        sys.exit(1)
+
+
 def main() -> None:
     args = parse_args()
+    if args.shards > 1:
+        sharded_main(args)
+        return
     registry = SketchRegistry(depth=args.depth, scale=args.scale,
                               partitioner=args.partitioner,
                               sketch_backend=args.sketch_backend or None)

@@ -69,8 +69,20 @@ class BoundedEdgeQueue:
         self.capacity = capacity
         self.policy = policy
         self.spill_dir = spill_dir
+        self.stale_spills_removed = 0
         if policy == SPILL:
             os.makedirs(spill_dir, exist_ok=True)
+            # A fresh queue reusing a crashed run's spill_dir must never
+            # confuse that run's leftovers with its own slots: slot indices
+            # restart at 0, so a stale file could sit at a path this queue
+            # is about to reserve.  The slot-ready events make reads safe
+            # within one queue lifetime, but stale files are dead weight at
+            # best and a hazard if the numbering scheme ever changes —
+            # purge them (and any torn .tmp writes) up front, accounted.
+            for name in os.listdir(spill_dir):
+                if name.startswith("spill_"):
+                    os.remove(os.path.join(spill_dir, name))
+                    self.stale_spills_removed += 1
         self._items: deque[QueueItem] = deque()
         self._cv = threading.Condition()
         self._closed = False
@@ -93,10 +105,19 @@ class BoundedEdgeQueue:
         return os.path.join(self.spill_dir, f"spill_{idx:012d}.npz")
 
     def _spill_write(self, idx: int, item: QueueItem) -> None:
-        """File I/O for reserved slot ``idx`` — called OUTSIDE the lock."""
-        np.savez(self._spill_path(idx),
-                 offset=np.int64(item.offset), src=item.src, dst=item.dst,
-                 weight=item.weight, n_edges=np.int64(item.n_edges))
+        """File I/O for reserved slot ``idx`` — called OUTSIDE the lock.
+
+        tmp + rename so a producer crash mid-write leaves a recognizable
+        ``.tmp`` orphan (purged by the next queue on this dir), never a
+        torn file at the slot's final path.
+        """
+        path = self._spill_path(idx)
+        tmp = path + ".tmp"
+        with open(tmp, "wb") as f:
+            np.savez(f, offset=np.int64(item.offset), src=item.src,
+                     dst=item.dst, weight=item.weight,
+                     n_edges=np.int64(item.n_edges))
+        os.replace(tmp, path)
 
     def _spill_read(self, idx: int) -> QueueItem:
         """File I/O for claimed slot ``idx`` — called OUTSIDE the lock."""
@@ -209,7 +230,15 @@ class BoundedEdgeQueue:
         return self._spill_read(idx)
 
     def close(self) -> None:
-        """Wake every blocked producer/consumer; further puts are refused."""
+        """Wake every blocked producer/consumer; further puts are refused.
+
+        Closing does NOT discard queued work: in-memory items and pending
+        spilled batches stay drainable through ``get()`` until the queue is
+        empty (only then does ``get`` return None), so a drain-after-close
+        conserves every accepted edge — the disk FIFO is part of the queue,
+        not a side channel.  Anything left undrained remains visible in
+        ``stats()`` (``depth`` / ``spill_pending``), never silently lost.
+        """
         with self._cv:
             self._closed = True
             self._cv.notify_all()
@@ -223,5 +252,7 @@ class BoundedEdgeQueue:
                 "dropped_batches": self.dropped_batches,
                 "dropped_edges": self.dropped_edges,
                 "spilled_batches": self.spilled_batches,
+                "spill_pending": self._spill_pending,
+                "stale_spills_removed": self.stale_spills_removed,
                 "max_depth_seen": self.max_depth_seen,
             }

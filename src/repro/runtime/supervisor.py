@@ -122,7 +122,9 @@ class Runtime:
     def __init__(self, *, queue_capacity: int = 64, backpressure: str = BLOCK,
                  publish_policy: str = "every:4", reservoir_k: int = 4096,
                  checkpoint_dir: str | None = None, checkpoint_every: int = 0,
-                 spill_dir: str | None = None, poll_s: float = 0.02) -> None:
+                 spill_dir: str | None = None, poll_s: float = 0.02,
+                 coalesce_batches: int = 1,
+                 coalesce_target: int = 8192) -> None:
         self.queue_capacity = queue_capacity
         self.backpressure = backpressure
         self.publish_policy = publish_policy
@@ -131,6 +133,9 @@ class Runtime:
         self.checkpoint_every = checkpoint_every
         self.spill_dir = spill_dir
         self.poll_s = poll_s
+        # ingest coalescing under backlog (see IngestWorker); 1 = off
+        self.coalesce_batches = coalesce_batches
+        self.coalesce_target = coalesce_target
         self._handles: dict[str, TenantRuntime] = {}
         self._started = False
         self._lock = threading.Lock()
@@ -176,7 +181,8 @@ class Runtime:
             tenant, queue, make_policy(publish_policy or self.publish_policy),
             reservoir=reservoir, checkpoint_dir=ckpt_dir,
             checkpoint_every=self.checkpoint_every, on_publish=on_publish,
-            poll_s=self.poll_s)
+            poll_s=self.poll_s, coalesce_batches=self.coalesce_batches,
+            coalesce_target=self.coalesce_target)
         pump_thread = (StreamPump(tenant.stream, queue,
                                   start_offset=tenant.offset,
                                   max_batches=max_batches,

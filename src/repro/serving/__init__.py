@@ -34,9 +34,35 @@ from repro.serving.loadgen import (
     warm_bucket_ladder,
 )
 from repro.serving.registry import SketchRegistry, Tenant, TenantKey
+from repro.serving.sharding import (
+    ShardKey,
+    ShardStreamView,
+    ShardedQueryEngine,
+    ShardedSnapshot,
+    ShardedTenant,
+    attach_shards,
+    measure_sharded_ingest,
+    read_shard_manifest,
+    sharded_conservation,
+    sharded_direct_answers,
+    warm_ingest_shapes,
+    write_shard_manifest,
+)
 from repro.serving.snapshot import Snapshot, SnapshotBuffer
 
 __all__ = [
+    "ShardKey",
+    "ShardStreamView",
+    "ShardedQueryEngine",
+    "ShardedSnapshot",
+    "ShardedTenant",
+    "attach_shards",
+    "measure_sharded_ingest",
+    "read_shard_manifest",
+    "sharded_conservation",
+    "sharded_direct_answers",
+    "warm_ingest_shapes",
+    "write_shard_manifest",
     "ClosureCache",
     "QueryEngine",
     "Request",

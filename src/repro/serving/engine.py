@@ -132,15 +132,25 @@ class ClosureCache:
         self.misses = 0
 
     def get(self, snapshot: Snapshot, max_hops: int | None) -> jax.Array:
-        key = (snapshot.tenant_id, snapshot.epoch, max_hops)
+        return self.get_or_build(
+            (snapshot.tenant_id, snapshot.epoch, max_hops),
+            lambda: queries.build_closure(
+                queries.closure_layers(snapshot.sketch), max_hops))
+
+    def get_or_build(self, key: tuple, build: Callable) -> jax.Array:
+        """LRU lookup under an arbitrary key, calling ``build()`` on miss.
+
+        The generalized entry point: sharded serving keys its merged-layer
+        closures on the per-shard epoch VECTOR (serving/sharding.py) but
+        shares this cache's eviction and stats semantics.
+        """
         closure = self._entries.get(key)
         if closure is not None:
             self.hits += 1
             self._entries.move_to_end(key)
             return closure
         self.misses += 1
-        closure = queries.build_closure(
-            queries.closure_layers(snapshot.sketch), max_hops)
+        closure = build()
         self._entries[key] = closure
         while len(self._entries) > self.capacity:
             self._entries.popitem(last=False)

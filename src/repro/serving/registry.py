@@ -143,6 +143,7 @@ class SketchRegistry:
         # interchange assumptions downstream
         self.sketch_backend = resolve_sketch_backend(sketch_backend)
         self._tenants: dict[TenantKey, Tenant] = {}
+        self._sharded: dict = {}  # (key, n_shards, shard_seed) -> ShardedTenant
         # get-or-create must be atomic once background workers can race
         # opens: two tenants for one key would double-ingest the stream
         self._lock = threading.Lock()
@@ -171,6 +172,50 @@ class SketchRegistry:
                                     kind=kind)
             tenant = Tenant(key, stream, buffer, mod)
             self._tenants[key] = tenant
+            return tenant
+
+    def open_sharded(self, dataset: str, kind: str, budget_kb: int,
+                     seed: int = 0, *, n_shards: int, shard_seed: int = 0):
+        """Get-or-create a ``ShardedTenant``: K shard tenants over ONE layout.
+
+        The master sketch is built exactly like ``open`` would build it
+        (same stream, same bootstrap sample, same partition plan and hash
+        family) and every shard gets an ``empty_like`` clone — that shared
+        layout is what makes the merge of the shards bit-identical to an
+        unsharded ingest of the same stream (DESIGN.md §Sharding).  Each
+        shard's stream is a ``ShardStreamView`` filtering the base stream by
+        the ``ShardPlan`` hash band of the source vertex.
+        """
+        from repro.core.partitioning import ShardPlan
+        from repro.serving.sharding import (ShardKey, ShardStreamView,
+                                            ShardedTenant)
+
+        key = TenantKey(dataset, kind, budget_kb, seed)
+        skey = (key, n_shards, shard_seed)
+        with self._lock:
+            if skey in self._sharded:
+                return self._sharded[skey]
+        stream = make_stream(dataset, batch_size=self.batch_size, seed=seed,
+                             scale=self.scale)
+        n_sample = max(int(self.sample_size * self.scale), 1000)
+        ssrc, sdst, sw = sample_stream(stream, n_sample, seed=seed + 1)
+        stats = vertex_stats_from_sample(ssrc, sdst, sw)
+        sketch, mod = build_sketch(kind, budget_kb * 1024, stats, self.depth,
+                                   seed, self.partitioner,
+                                   backend=self.sketch_backend)
+        plan = ShardPlan(n_shards, seed=shard_seed)
+        shards = []
+        for s in range(n_shards):
+            shard_key = ShardKey(key, s, n_shards)
+            view = ShardStreamView(stream, plan, s)
+            buffer = SnapshotBuffer(mod.empty_like(sketch), mod,
+                                    tenant_id=shard_key.tenant_id, kind=kind)
+            shards.append(Tenant(shard_key, view, buffer, mod))
+        tenant = ShardedTenant(key, plan, shards, mod)
+        with self._lock:
+            if skey in self._sharded:  # lost the build race; first one wins
+                return self._sharded[skey]
+            self._sharded[skey] = tenant
             return tenant
 
     def get(self, key: TenantKey) -> Tenant:

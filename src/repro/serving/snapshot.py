@@ -52,6 +52,33 @@ class Snapshot:
 
 _anon_ids = itertools.count()
 
+# One jitted (ingest, publish) kernel pair per sketch MODULE, shared by
+# every buffer of that module.  jax.jit caches compilations per wrapped
+# callable: a per-buffer lambda would recompile the identical graph once
+# per tenant — K shards of one tenant (serving/sharding.py) share a layout,
+# so per-buffer caches would pay K compiles for one graph and the sharded
+# ingest wall would be mostly XLA compilation.  Distinct layouts/shapes
+# still compile separately (jit keys on shapes + statics), so sharing is
+# always safe.
+_KERNELS: dict = {}
+
+
+def _shared_kernels(mod):
+    pair = _KERNELS.get(mod)
+    if pair is None:
+        jit_ingest = jax.jit(
+            lambda sk, batch, pending: (
+                mod.ingest(sk, batch),
+                pending + jnp.sum((batch.weight > 0).astype(pending.dtype))))
+        # One fused publish kernel: fold delta into front, zero the delta.
+        # Safe to jit (which skips merge's hash-family check): the delta is
+        # empty_like(front) by construction, so the families always match.
+        jit_publish = jax.jit(
+            lambda front, delta: (mod.merge(front, delta),
+                                  mod.empty_like(delta)))
+        pair = _KERNELS[mod] = (jit_ingest, jit_publish)
+    return pair
+
 
 class SnapshotBuffer:
     """Double buffer: live delta sketch (ingest side) + published Snapshot."""
@@ -73,16 +100,7 @@ class SnapshotBuffer:
         # into the ingest kernel so each batch is ONE dispatch
         self._pending = jnp.zeros((), jnp.int64 if jax.config.x64_enabled
                                   else jnp.int32)
-        self._jit_ingest = jax.jit(
-            lambda sk, batch, pending: (
-                mod.ingest(sk, batch),
-                pending + jnp.sum((batch.weight > 0).astype(pending.dtype))))
-        # One fused publish kernel: fold delta into front, zero the delta.
-        # Safe to jit (which skips merge's hash-family check): the delta is
-        # empty_like(front) by construction, so the families always match.
-        self._jit_publish = jax.jit(
-            lambda front, delta: (mod.merge(front, delta),
-                                  mod.empty_like(delta)))
+        self._jit_ingest, self._jit_publish = _shared_kernels(mod)
         # Guards the back buffer (_delta/_pending) and the front swap against
         # a checkpointing thread reading ``state()`` mid-operation.  Readers
         # of ``snapshot`` need no lock: the property is one atomic reference

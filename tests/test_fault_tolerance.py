@@ -48,6 +48,30 @@ def test_crash_restart_is_bit_exact(tmp_path):
     np.testing.assert_array_equal(np.asarray(sk.conn), np.asarray(ref.conn))
 
 
+def test_restore_fills_template_leaves_missing_from_old_checkpoints(tmp_path):
+    """A checkpoint written before a (inert) leaf existed must still
+    restore into the grown template: the missing leaf falls back to the
+    template's freshly-built default and is reported in the metadata —
+    e.g. pre-overflow-leaf KMatrix checkpoints migrating forward."""
+    stream, sk = _build()
+    sk = kmatrix.ingest(sk, stream.batch(0))
+    # simulate the old on-disk layout: same sketch minus the overflow leaf
+    old_state = {"pool": np.asarray(sk.pool), "conn": np.asarray(sk.conn)}
+    store.save(str(tmp_path), 1, old_state)
+    template = {"pool": np.zeros_like(sk.pool), "conn": np.zeros_like(sk.conn),
+                "overflow": np.zeros((), np.int32)}
+    restored, meta = store.restore(str(tmp_path), template)
+    np.testing.assert_array_equal(restored["pool"], np.asarray(sk.pool))
+    np.testing.assert_array_equal(restored["conn"], np.asarray(sk.conn))
+    assert int(restored["overflow"]) == 0
+    assert len(meta["filled_from_template"]) == 1
+    assert "overflow" in meta["filled_from_template"][0]
+    # a complete checkpoint reports nothing filled
+    store.save(str(tmp_path), 2, template)
+    _, meta2 = store.restore(str(tmp_path), template, step=2)
+    assert meta2["filled_from_template"] == []
+
+
 def test_worker_failure_merge_recovery():
     """Counters are additive: a failed worker's sub-stream can be replayed
     by any other worker and merged — final state identical to no-failure."""

@@ -85,18 +85,70 @@ def test_accel_reachability_matches_flat():
 
 # --------------------------------------------------------------- relayout --
 def test_relayout_roundtrip_is_identity():
-    """to_class_layout ∘ to_flat_layout == id on every pytree leaf."""
+    """to_class_layout ∘ to_flat_layout == id on every pytree leaf —
+    INCLUDING the overflow tally (ISSUE 4 satellite: a relayout round-trip
+    or flat-checkpoint migration must not zero a nonzero diagnostic)."""
     acc = _accel(seed=3)
     src, dst, w = _random_stream(11)
     acc = kma.ingest(acc, EdgeBatch.from_numpy(src, dst, w),
                      capacity=128, block_b=128)
-    back = kma.to_class_layout(kma.to_flat_layout(acc), overflow=acc.overflow)
+    assert int(acc.overflow) > 0, "round-trip must carry a real tally"
+    flat = kma.to_flat_layout(acc)
+    assert int(flat.overflow) == int(acc.overflow)
+    back = kma.to_class_layout(flat)
     assert back.class_widths == acc.class_widths
     assert back.class_counts == acc.class_counts
     assert back.conn_w == acc.conn_w
     assert _leaves_equal(back, acc)
-    # overflow is diagnostics, not counter state: dropped unless re-supplied
-    assert int(kma.to_class_layout(kma.to_flat_layout(acc)).overflow) == 0
+    assert int(back.overflow) == int(acc.overflow)
+    # an explicit override still wins (checkpoint-migration escape hatch)
+    assert int(kma.to_class_layout(flat, overflow=0).overflow) == 0
+
+
+def test_flat_overflow_leaf_is_inert_and_additive():
+    """The flat KMatrix carries the diagnostic but never writes it: ingest
+    leaves it unchanged, empty_like zeroes it, merge sums it."""
+    acc = _accel(seed=3)
+    src, dst, w = _random_stream(12)
+    acc = kma.ingest(acc, EdgeBatch.from_numpy(src, dst, w),
+                     capacity=128, block_b=128)
+    flat = kma.to_flat_layout(acc)
+    tally = int(flat.overflow)
+    assert tally > 0
+    flat2 = kmatrix.ingest(flat, EdgeBatch.from_numpy(src, dst, w))
+    assert int(flat2.overflow) == tally, "flat ingest must not touch it"
+    assert int(kmatrix.empty_like(flat).overflow) == 0
+    assert int(kmatrix.merge(flat, flat2).overflow) == 2 * tally
+
+
+def test_dispatch_capacity_sized_from_plan_load():
+    """ISSUE 4 satellite: default dispatch capacity comes from the
+    partition plan's banded load (max per-partition share, 2x headroom,
+    capped at B), not the uniform 2B/P — and capacity is a dispatch-only
+    concern: counters are bit-identical under any capacity."""
+    src, dst, w = _random_stream(0)
+    stats = vertex_stats_from_sample(src[:1000], dst[:1000], w[:1000])
+    acc = KMatrixAccel.create(bytes_budget=1 << 16, stats=stats, depth=3,
+                              seed=1, partitioner="banded")
+    assert acc.load_shares is not None
+    assert len(acc.load_shares) == acc.route.n_partitions
+    assert 0.99 <= sum(acc.load_shares) <= 1.01
+    b = 4096
+    cap = kma.dispatch_capacity(acc, b)
+    want = int(np.ceil(2.0 * max(acc.load_shares) * b))
+    assert cap >= min(want, b) and cap % 128 == 0 and cap <= b + 127
+    # relayouted sketches carry no sample: uniform fallback
+    relayout = kma.to_class_layout(kma.to_flat_layout(acc))
+    assert relayout.load_shares is None
+    legacy = kma.dispatch_capacity(relayout, b)
+    assert legacy == -(-max(128, (2 * b) // acc.route.n_partitions)
+                       // 128) * 128
+    # capacity never changes counters, only the MXU/scatter split
+    batch = EdgeBatch.from_numpy(*_random_stream(55))
+    a = kma.ingest(acc, batch)                    # plan-derived default
+    bb = kma.ingest(acc, batch, capacity=legacy)  # legacy uniform
+    assert _leaves_equal(a.pools, bb.pools)
+    np.testing.assert_array_equal(np.asarray(a.conn), np.asarray(bb.conn))
 
 
 def test_to_class_layout_rejects_unquantized_plan():

@@ -140,6 +140,53 @@ def test_queue_spill_concurrent_producer_consumer(tmp_path):
     assert q.dropped_batches == 0
 
 
+def test_queue_close_with_pending_spill_drains_everything(tmp_path):
+    """Satellite audit: close() with a non-empty disk FIFO must not strand
+    or lose spilled batches — they stay drainable (FIFO, complete) until
+    the queue is empty, and depth/spill_pending account for them."""
+    q = BoundedEdgeQueue(2, "spill", spill_dir=str(tmp_path / "spill"))
+    items = [_item(i, n=4) for i in range(8)]
+    for it in items:
+        assert q.put(it)
+    assert q.stats()["spill_pending"] == 6
+    q.close()
+    assert not q.put(_item(99)), "closed queue must refuse new work"
+    # conservation: every accepted batch is still retrievable, in order
+    out = [q.get(timeout=1) for _ in range(8)]
+    assert [o.offset for o in out] == list(range(8))
+    for want, got in zip(items, out):
+        np.testing.assert_array_equal(want.src, got.src)
+        np.testing.assert_array_equal(want.weight, got.weight)
+    assert q.get(timeout=0.01) is None
+    s = q.stats()
+    assert s["depth"] == 0 and s["spill_pending"] == 0
+    assert s["accepted_edges"] == 8 * 4 and s["dropped_edges"] == 0
+
+
+def test_queue_fresh_spill_dir_purges_stale_files(tmp_path):
+    """Satellite audit: spill files left by a crashed run must never be
+    re-ingested (or leak) when a fresh queue reuses the same spill_dir."""
+    spill_dir = tmp_path / "spill"
+    q1 = BoundedEdgeQueue(1, "spill", spill_dir=str(spill_dir))
+    for i in range(5):
+        assert q1.put(_item(i, n=4))
+    # crash-like: drop q1 undrained; its spill files stay on disk
+    assert len(list(spill_dir.glob("spill_*"))) == 4
+    (spill_dir / "spill_000000000099.npz.tmp").write_bytes(b"torn write")
+
+    q2 = BoundedEdgeQueue(1, "spill", spill_dir=str(spill_dir))
+    assert q2.stale_spills_removed == 5
+    assert list(spill_dir.glob("spill_*")) == []
+    # the fresh queue serves ONLY its own items, in its own order
+    fresh = [_item(100 + i, n=4) for i in range(3)]
+    for it in fresh:
+        assert q2.put(it)
+    got = [q2.get(timeout=1).offset for _ in range(3)]
+    assert got == [100, 101, 102]
+    assert q2.get(timeout=0.01) is None
+    assert q2.stats()["dropped_edges"] == 0
+
+
 def test_queue_close_unblocks_producer_and_consumer():
     q = BoundedEdgeQueue(1, "block")
     q.put(_item(0))

@@ -14,6 +14,9 @@ Prints ``name,us_per_call,derived`` CSV rows (plus figure tables to stderr).
   serve_sharded     — sharded serving at K=1/2/4: per-shard runtime ingest
                       + scatter/gather queries (emits BENCH_sharded.json,
                       conservation + merged-exactness gated)
+  serve_process     — thread vs process runtime backends at K=1/2/4
+                      (emits BENCH_process.json; same sharded hard gates,
+                      process K4/K1 scaling recorded vs cpu_count)
 
 Usage: PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig7_are]
 """
@@ -249,10 +252,10 @@ def ingest_backends(scale: float, quick: bool,
         _emit(f"ingest/{name}", dt / max(edges, 1) * 1e6,
               f"edges_per_s={edges / max(dt, 1e-9):.0f}")
 
-    from benchmarks.serve_bench import _layout_counters_equal
+    from repro.serving.gates import layout_counters_equal
 
     relayout = kma.to_flat_layout(states["pallas"])
-    bit_exact = _layout_counters_equal(relayout, states["flat"])
+    bit_exact = layout_counters_equal(relayout, states["flat"])
     record = {
         "bench": "ingest",
         "dataset": dataset,
@@ -297,8 +300,8 @@ def _capacity_policy_compare(stream, stats, quick: bool) -> dict:
     a dispatch concern only, so both runs must land bit-identical counters;
     the plan-derived capacity must STRICTLY cut ``overflow_edges`` (the
     scatter-fallback volume) — both enforced by the caller."""
-    from benchmarks.serve_bench import _layout_counters_equal
     from repro.core import kmatrix_accel as kma
+    from repro.serving.gates import layout_counters_equal
 
     accel = KMatrixAccel.create(bytes_budget=256 * 1024, stats=stats,
                                 depth=5, seed=3, partitioner="banded")
@@ -313,7 +316,7 @@ def _capacity_policy_compare(stream, stats, quick: bool) -> dict:
         batch = stream.batch(i)
         st_plan = kma.ingest(st_plan, batch)  # default: plan-derived
         st_legacy = kma.ingest(st_legacy, batch, capacity=legacy)
-    counters_equal = _layout_counters_equal(st_plan, st_legacy)
+    counters_equal = layout_counters_equal(st_plan, st_legacy)
     out = {
         "partitioner": "banded",
         "n_partitions": n_parts,
@@ -405,6 +408,9 @@ def serve_sharded(scale: float, quick: bool,
         rec = run_serve_bench_sharded(
             scale=scale, n_requests=600 if quick else 2000,
             target_qps=1000.0 if quick else 2000.0, n_shards=k)
+        # serve_process reuses these thread rows when it runs in the same
+        # sweep, instead of re-running the identical thread bench
+        _SHARDED_THREAD_RECS[(scale, k)] = rec
         if not rec["conservation_ok"]:
             raise RuntimeError(
                 f"serve_sharded K={k}: cross-shard conservation failed "
@@ -454,6 +460,102 @@ def serve_sharded(scale: float, quick: bool,
     _log(f"wrote {out_path}")
 
 
+# thread-backend sharded records from serve_sharded, keyed by (scale, K) —
+# lets serve_process skip re-running benches an earlier target in the same
+# `benchmarks.run` invocation already produced (CI runs the full sweep)
+_SHARDED_THREAD_RECS: dict = {}
+
+
+def serve_process(scale: float, quick: bool,
+                  out_path: str = "BENCH_process.json") -> None:
+    """Thread vs process runtime backends at K=1/2/4 -> BENCH_process.json.
+
+    The GIL story in one artifact: the thread backend time-slices K shard
+    workers inside one interpreter, the process backend gives each worker
+    its own (ISSUE 5 tentpole).  Per (backend, K): dedicated backlog-drain
+    ingest edges/s plus query p50/p99 under live ingest, with every sharded
+    hard gate enforced (cross-shard conservation, merged-vs-replay
+    bit-exactness, engine==direct).  Process K=4 vs K=1 scaling is recorded
+    (cpu_count-contextualized) — no gate on absolute numbers: a 2-core CI
+    box legitimately plateaus where a 16-core server keeps scaling.
+    """
+    import json as _json
+
+    from benchmarks.serve_bench import run_serve_bench_sharded
+
+    _log("\n== serve_process (thread vs process runtime backends) ==")
+    backends: dict[str, dict] = {}
+    for backend in ("thread", "process"):
+        rows: dict[str, dict] = {}
+        for k in (1, 2, 4):
+            rec = (_SHARDED_THREAD_RECS.get((scale, k))
+                   if backend == "thread" else None)
+            if rec is None:
+                # same load as serve_sharded, so reused thread rows and
+                # fresh process rows stay apples-to-apples within the one
+                # artifact (and standalone --only runs match the sweep)
+                rec = run_serve_bench_sharded(
+                    scale=scale, n_requests=600 if quick else 2000,
+                    target_qps=1000.0 if quick else 2000.0, n_shards=k,
+                    runtime_backend=backend)
+            if not rec["conservation_ok"]:
+                raise RuntimeError(
+                    f"serve_process {backend} K={k}: cross-shard "
+                    f"conservation failed (published "
+                    f"{rec['published_edges']} + dropped "
+                    f"{rec['dropped_edges']} != stream "
+                    f"{rec['stream_total_edges']})")
+            if rec["sharded_exact"] is False:
+                raise RuntimeError(
+                    f"serve_process {backend} K={k}: merged shard sketches "
+                    "diverged from the single-sketch replay")
+            if not rec["engine_matches_direct"]:
+                raise RuntimeError(
+                    f"serve_process {backend} K={k}: scatter/gather engine "
+                    "diverged from the sharded direct oracle")
+            if not rec["dedicated_ingest_conserved"]:
+                raise RuntimeError(
+                    f"serve_process {backend} K={k}: dedicated ingest "
+                    "drain lost edges")
+            rows[str(k)] = {
+                "ingest_edges_per_s": rec["ingest_edges_per_s_dedicated"],
+                "ingest_edges_per_s_during_serve":
+                    rec["ingest_edges_per_s_during_serve"],
+                "achieved_qps": rec["achieved_qps"],
+                "p50_ms": rec["p50_ms"],
+                "p99_ms": rec["p99_ms"],
+                "conservation_ok": rec["conservation_ok"],
+                "sharded_exact": rec["sharded_exact"],
+            }
+            _log(f"{backend:8s} K={k}: "
+                 f"{rec['ingest_edges_per_s_dedicated']:,.0f} ingest "
+                 f"edges/s (dedicated), p99 {rec['p99_ms']} ms")
+            _emit(f"serve/{backend}_k{k}",
+                  1e6 / max(rec["ingest_edges_per_s_dedicated"], 1e-9),
+                  f"ingest_eps={rec['ingest_edges_per_s_dedicated']};"
+                  f"qps={rec['achieved_qps']};p99_ms={rec['p99_ms']}")
+        backends[backend] = rows
+    p1 = backends["process"]["1"]["ingest_edges_per_s"]
+    p4 = backends["process"]["4"]["ingest_edges_per_s"]
+    record = {
+        "bench": "serve_process",
+        "dataset": "cit-HepPh",
+        "scale": scale,
+        "budget_kb": 256,
+        "depth": 5,
+        # scaling is bounded by available cores: K > cpu_count adds spawn +
+        # scheduler overhead without parallelism, so read both curves (and
+        # the thread-vs-process gap, which the GIL caps) against this
+        "cpu_count": os.cpu_count(),
+        "backends": backends,
+        "process_k4_over_k1": round(p4 / max(p1, 1e-9), 3),
+    }
+    with open(out_path, "w") as f:
+        _json.dump(record, f, indent=2)
+    _log(f"wrote {out_path} (process K4/K1 = "
+         f"{record['process_k4_over_k1']}x on {os.cpu_count()} cores)")
+
+
 BENCHES = {
     "fig6_build_time": lambda a: fig6_build_time(a.scale),
     "fig7_are": lambda a: fig7_fig8_accuracy(a.scale, a.quick),
@@ -463,6 +565,7 @@ BENCHES = {
     "serve_mixed": lambda a: serve_mixed(a.scale, a.quick),
     "serve_concurrent": lambda a: serve_concurrent(a.scale, a.quick),
     "serve_sharded": lambda a: serve_sharded(a.scale, a.quick),
+    "serve_process": lambda a: serve_process(a.scale, a.quick),
 }
 
 

@@ -53,16 +53,15 @@ from repro.serving import (
     warm_bucket_ladder,
 )
 from repro.serving import engine as eng
-
+from repro.serving.gates import (
+    conservation_verdict,
+    mismatched_indices,
+    replay_exactness,
+    replay_sketch,
+)
 
 def _log(msg: str) -> None:
     print(msg, file=sys.stderr)
-
-
-def _values_match(a, b) -> bool:
-    if isinstance(a, tuple):
-        return (np.array_equal(a[0], b[0]) and np.array_equal(a[1], b[1]))
-    return a == b
 
 
 def _time_execute(engine: QueryEngine, snapshot, requests) -> float:
@@ -90,26 +89,26 @@ def _backend_parity_gate(tenant, requests, accel_answers=None) -> dict | None:
     snap = tenant.snapshot
     if not isinstance(snap.sketch, KMatrixAccel):
         return None
-    flat = kma.to_flat_layout(kma.empty_like(snap.sketch))
-    ing = jax.jit(kmatrix.ingest)
-    for i in range(tenant.offset):
-        flat = ing(flat, tenant.stream.batch(i))
-    relayout = kma.to_flat_layout(snap.sketch)
-    counters_equal = _layout_counters_equal(relayout, flat)
-    flat_snap = Snapshot(snap.tenant_id + "/flat-twin", snap.epoch, flat,
-                         snap.kind, snap.n_edges)
+    flat = replay_sketch(kmatrix, kma.to_flat_layout(kma.empty_like(
+        snap.sketch)), tenant.stream, tenant.offset)
+    relayout_snap = Snapshot(snap.tenant_id + "/relayout", snap.epoch,
+                             kma.to_flat_layout(snap.sketch), snap.kind,
+                             snap.n_edges)
     if accel_answers is None:
+        # baseline answers MUST come from the accel snapshot itself (not
+        # the relayout) — the estimate half of the gate exists to catch
+        # accel-side query-path bugs, which a flat-vs-flat compare hides
         accel_answers = eng.direct_answers(snap, requests)
-    flat_answers = eng.direct_answers(flat_snap, requests)
-    estimates_equal = all(_values_match(a, f)
-                          for a, f in zip(accel_answers, flat_answers))
-    if not (counters_equal and estimates_equal):
-        _log(f"BACKEND PARITY FAILURE: counters_equal={counters_equal} "
-             f"estimates_equal={estimates_equal}")
+    verdict = replay_exactness(relayout_snap, flat, requests,
+                               answers=accel_answers)
+    if not verdict["ok"]:
+        _log(f"BACKEND PARITY FAILURE: "
+             f"counters_equal={verdict['counters_equal']} "
+             f"estimates_equal={verdict['estimates_equal']}")
     return {
-        "backend_parity_counters": counters_equal,
-        "backend_parity_estimates": bool(estimates_equal),
-        "backend_parity_ok": bool(counters_equal and estimates_equal),
+        "backend_parity_counters": verdict["counters_equal"],
+        "backend_parity_estimates": verdict["estimates_equal"],
+        "backend_parity_ok": verdict["ok"],
     }
 
 
@@ -183,10 +182,9 @@ def run_serve_bench(*, dataset: str = "cit-HepPh", sketch: str = "kmatrix",
     check = requests[:200]
     got = [r.value for r in engine.execute(snap, check)]
     want = eng.direct_answers(snap, check)
-    matches = all(_values_match(g, w) for g, w in zip(got, want))
-    if not matches:
-        bad = [i for i, (g, w) in enumerate(zip(got, want))
-               if not _values_match(g, w)]
+    bad = mismatched_indices(got, want)
+    matches = not bad
+    if bad:
         _log(f"MISMATCH engine vs direct at request indices {bad[:10]}")
 
     # ---- accel backend: bit-exact vs the flat layout on the same prefix ---
@@ -249,11 +247,13 @@ def run_serve_bench_concurrent(*, dataset: str = "cit-HepPh",
                                backpressure: str = "block",
                                publish_policy: str = "",
                                epoch_check_requests: int = 32,
-                               sketch_backend: str | None = None) -> dict:
+                               sketch_backend: str | None = None,
+                               runtime_backend: str = "thread") -> dict:
     """Concurrent regime: loadgen in the main thread, ingest in a
-    ``repro.runtime`` worker.  Gates (both hard-fail): engine == direct on
-    every published epoch; conservation (published + drops == stream total)
-    after a graceful drain."""
+    ``repro.runtime`` worker (thread or process execution backend).  Gates
+    (both hard-fail): engine == direct on every published epoch;
+    conservation (published + drops == stream total) after a graceful
+    drain."""
     from repro.runtime import Runtime
 
     registry = SketchRegistry(depth=depth, scale=scale,
@@ -282,9 +282,12 @@ def run_serve_bench_concurrent(*, dataset: str = "cit-HepPh",
     runtime = Runtime(queue_capacity=queue_capacity,
                       backpressure=backpressure,
                       publish_policy=publish_policy
-                      or f"every:{publish_every}")
+                      or f"every:{publish_every}",
+                      backend=runtime_backend)
     runtime.attach(tenant, on_publish=published.append)
-    runtime.start()
+    runtime.start(pumps=False)
+    runtime.wait_ready()  # process children build + warm off the clock
+    runtime.start_pumps()
 
     loadgen = OpenLoopLoadGen(target_qps=target_qps, batch_max=batch_max)
     t0 = time.perf_counter()
@@ -303,19 +306,20 @@ def run_serve_bench_concurrent(*, dataset: str = "cit-HepPh",
     for s in published:
         got = [r.value for r in engine.execute(s, check)]
         want = eng.direct_answers(s, check)
-        if not all(_values_match(g, w) for g, w in zip(got, want)):
+        if mismatched_indices(got, want):
             mismatched_epochs.append(s.epoch)
     if mismatched_epochs:
         _log(f"MISMATCH engine vs direct at epochs {mismatched_epochs}")
 
     # ---- gate 2: conservation after graceful drain ------------------------
-    stream_total = tenant.stream.spec.n_edges
-    conserved = (final["unaccounted_edges"] == 0
-                 and final["published_edges"] + final["dropped_edges"]
-                 == stream_total)
-    if not conserved:
+    cons = conservation_verdict(final["published_edges"],
+                                final["dropped_edges"],
+                                tenant.stream.spec.n_edges,
+                                final["unaccounted_edges"])
+    if not cons["conservation_ok"]:
         _log(f"CONSERVATION FAILURE: published {final['published_edges']} "
-             f"+ dropped {final['dropped_edges']} != stream {stream_total} "
+             f"+ dropped {final['dropped_edges']} != stream "
+             f"{cons['stream_total_edges']} "
              f"(unaccounted {final['unaccounted_edges']})")
 
     return {
@@ -325,6 +329,7 @@ def run_serve_bench_concurrent(*, dataset: str = "cit-HepPh",
         "sketch_backend": registry.sketch_backend,
         "budget_kb": budget_kb,
         "depth": depth,
+        "runtime_backend": runtime.backend.name,
         "backpressure": backpressure,
         "publish_policy": publish_policy or f"every:{publish_every}",
         "offered_qps": report.offered_qps,
@@ -347,30 +352,12 @@ def run_serve_bench_concurrent(*, dataset: str = "cit-HepPh",
         # capacity regressions surface here instead of as silent slow ingest
         "overflow_edges": final["overflow_edges"],
         "published_edges": final["published_edges"],
-        "stream_total_edges": stream_total,
+        "stream_total_edges": cons["stream_total_edges"],
         "unaccounted_edges": final["unaccounted_edges"],
-        "conservation_ok": bool(conserved),
+        "conservation_ok": cons["conservation_ok"],
         "engine_matches_direct": not mismatched_epochs,
         **{f"engine_{k}": v for k, v in engine.stats.items()},
     }
-
-
-def _layout_counters_equal(a, b) -> bool:
-    """Bit-equality of a sketch's counter state (pool(s) + conn), layout
-    aware; the ``overflow`` diagnostic is deliberately excluded — dispatch
-    capacity differs between sub-batch shapes, so sharded and unsharded
-    runs legitimately tally different fallback volumes for identical
-    counters."""
-    if hasattr(a, "pools"):
-        return (all(np.array_equal(np.asarray(x), np.asarray(y))
-                    for x, y in zip(a.pools, b.pools))
-                and np.array_equal(np.asarray(a.conn), np.asarray(b.conn)))
-    if hasattr(a, "pool"):
-        return (np.array_equal(np.asarray(a.pool), np.asarray(b.pool))
-                and np.array_equal(np.asarray(a.conn), np.asarray(b.conn)))
-    if hasattr(a, "table"):
-        return np.array_equal(np.asarray(a.table), np.asarray(b.table))
-    return np.array_equal(np.asarray(a.counters), np.asarray(b.counters))
 
 
 def run_serve_bench_sharded(*, dataset: str = "cit-HepPh",
@@ -383,19 +370,20 @@ def run_serve_bench_sharded(*, dataset: str = "cit-HepPh",
                             backpressure: str = "block",
                             publish_policy: str = "",
                             epoch_check_requests: int = 64,
-                            sketch_backend: str | None = None) -> dict:
-    """Sharded regime: K runtime ingest workers (one per hash-band shard)
-    under live scatter/gather query load.  Two hard gates (both fail the
-    bench): cross-shard edge conservation (Σ per-shard published +
-    accounted drops == stream total) and sharded-vs-unsharded exactness
-    (the merge of the shard sketches must be bit-identical — counters and
-    direct estimates — to a single-sketch replay of the same stream, which
-    the source-hash-band routing guarantees)."""
+                            sketch_backend: str | None = None,
+                            runtime_backend: str = "thread") -> dict:
+    """Sharded regime: K runtime ingest workers (one per hash-band shard,
+    on the thread OR process execution backend) under live scatter/gather
+    query load.  Two hard gates (both fail the bench): cross-shard edge
+    conservation (Σ per-shard published + accounted drops == stream total)
+    and sharded-vs-unsharded exactness (the merge of the shard sketches
+    must be bit-identical — counters and direct estimates — to a
+    single-sketch replay of the same stream, which the source-hash-band
+    routing guarantees)."""
     from repro.runtime import Runtime
     from repro.serving import (ShardedQueryEngine, attach_shards,
                                measure_sharded_ingest, sharded_conservation,
                                sharded_direct_answers, warm_ingest_shapes)
-    from repro.serving.snapshot import Snapshot
 
     registry = SketchRegistry(depth=depth, scale=scale,
                               sketch_backend=sketch_backend)
@@ -407,11 +395,12 @@ def run_serve_bench_sharded(*, dataset: str = "cit-HepPh",
     # ---- dedicated ingest throughput: backlog drain, no query load --------
     # a THROWAWAY tenant (fresh registry, same config) so the serve-phase
     # tenant below still owns its whole stream; this is the scaling number
-    # BENCH_sharded.json charts against K
+    # BENCH_sharded.json / BENCH_process.json chart against K
     dedicated = measure_sharded_ingest(
         SketchRegistry(depth=depth, scale=scale,
                        sketch_backend=sketch_backend).open_sharded(
-            dataset, sketch, budget_kb, seed=seed, n_shards=n_shards))
+            dataset, sketch, budget_kb, seed=seed, n_shards=n_shards),
+        backend=runtime_backend)
     if not dedicated["conserved"]:
         _log(f"DEDICATED INGEST CONSERVATION FAILURE: {dedicated}")
     _log(f"dedicated ingest drain x{n_shards}: "
@@ -438,10 +427,9 @@ def run_serve_bench_sharded(*, dataset: str = "cit-HepPh",
     check = requests[:epoch_check_requests]
     got = [r.value for r in engine.execute(snap, check)]
     want = sharded_direct_answers(snap, check)
-    matches = all(_values_match(g, w) for g, w in zip(got, want))
-    if not matches:
-        bad = [i for i, (g, w) in enumerate(zip(got, want))
-               if not _values_match(g, w)]
+    bad = mismatched_indices(got, want)
+    matches = not bad
+    if bad:
         _log(f"MISMATCH sharded engine vs direct at request indices "
              f"{bad[:10]}")
 
@@ -451,9 +439,12 @@ def run_serve_bench_sharded(*, dataset: str = "cit-HepPh",
                       publish_policy=publish_policy
                       or f"every:{publish_every}",
                       coalesce_batches=max(4, n_shards),
-                      coalesce_target=stream.batch_size)
+                      coalesce_target=stream.batch_size,
+                      backend=runtime_backend)
     handles = attach_shards(runtime, tenant)
-    runtime.start()
+    runtime.start(pumps=False)
+    runtime.wait_ready()  # process children build + warm off the clock
+    runtime.start_pumps()
     loadgen = OpenLoopLoadGen(target_qps=target_qps, batch_max=batch_max)
     t0 = time.perf_counter()
     report = loadgen.run(engine, lambda: tenant.snapshot, requests)
@@ -478,19 +469,13 @@ def run_serve_bench_sharded(*, dataset: str = "cit-HepPh",
     # mismatch would be the backpressure policy, not a routing break.
     if cons["dropped_edges"] == 0:
         merged = tenant.merged_snapshot()
-        mod = tenant.mod
-        replay = mod.empty_like(merged.sketch)
-        ing = jax.jit(mod.ingest)
-        for i in range(stream.num_batches):
-            replay = ing(replay, stream.batch(i))
-        counters_equal = _layout_counters_equal(merged.sketch, replay)
-        replay_snap = Snapshot(merged.tenant_id + "/replay", merged.epoch,
-                               replay, merged.kind, merged.n_edges)
-        merged_answers = eng.direct_answers(merged, check)
-        replay_answers = eng.direct_answers(replay_snap, check)
-        estimates_equal = all(_values_match(a, b) for a, b in
-                              zip(merged_answers, replay_answers))
-        sharded_exact = bool(counters_equal and estimates_equal)
+        replay = replay_sketch(tenant.mod,
+                               tenant.mod.empty_like(merged.sketch),
+                               stream, stream.num_batches)
+        verdict = replay_exactness(merged, replay, check)
+        counters_equal = verdict["counters_equal"]
+        estimates_equal = verdict["estimates_equal"]
+        sharded_exact = verdict["ok"]
         if not sharded_exact:
             _log(f"SHARDED EXACTNESS FAILURE: "
                  f"counters_equal={counters_equal} "
@@ -510,6 +495,7 @@ def run_serve_bench_sharded(*, dataset: str = "cit-HepPh",
         "budget_kb": budget_kb,
         "depth": depth,
         "n_shards": n_shards,
+        "runtime_backend": runtime.backend.name,
         "backpressure": backpressure,
         "publish_policy": publish_policy or f"every:{publish_every}",
         "offered_qps": report.offered_qps,
@@ -569,9 +555,18 @@ def main() -> None:
     ap.add_argument("--publish-policy", default="",
                     help="every:N | interval:S | drain[:W]")
     ap.add_argument("--queue-capacity", type=int, default=64)
+    ap.add_argument("--runtime-backend", default="thread",
+                    choices=["thread", "process"],
+                    help="execution backend for ingest workers (process = "
+                         "spawn children owning their sketches; needs "
+                         "--concurrent or --shards)")
     ap.add_argument("--quick", action="store_true",
                     help="small scale + short run (CI)")
     args = ap.parse_args()
+    if args.runtime_backend == "process" and not (args.concurrent
+                                                  or args.shards):
+        ap.error("--runtime-backend process requires --concurrent or "
+                 "--shards (the plain bench has no background runtime)")
     if args.quick:
         args.scale = min(args.scale, 0.1)
         args.n_requests = min(args.n_requests, 1000)
@@ -587,7 +582,8 @@ def main() -> None:
             queue_capacity=args.queue_capacity,
             backpressure=args.backpressure,
             publish_policy=args.publish_policy,
-            sketch_backend=args.sketch_backend or None)
+            sketch_backend=args.sketch_backend or None,
+            runtime_backend=args.runtime_backend)
         print(json.dumps(record))
         if not (record["engine_matches_direct"]
                 and record["conservation_ok"]
@@ -606,7 +602,8 @@ def main() -> None:
             queue_capacity=args.queue_capacity,
             backpressure=args.backpressure,
             publish_policy=args.publish_policy,
-            sketch_backend=args.sketch_backend or None)
+            sketch_backend=args.sketch_backend or None,
+            runtime_backend=args.runtime_backend)
         print(json.dumps(record))
         if not (record["engine_matches_direct"]
                 and record["conservation_ok"]):

@@ -14,6 +14,14 @@ Two ingest modes share the same tenant, engine and load generator:
       accounted drops); ``--checkpoint-dir`` adds crash-safe checkpoints
       and ``--restore`` resumes from the latest one.
 
+  --runtime-backend process   (with --background-ingest) run each ingest
+      worker in a spawn-safe child process that owns its sketch
+      (DESIGN.md §Runtime §Backends): published epochs ship back into this
+      process's snapshot buffer, so queries serve locally while K-shard
+      ingest scales past the GIL.  Checkpoints stay interchangeable with
+      the thread backend.  SIGTERM/SIGINT trigger a graceful drain (final
+      epoch + checkpoint flushed) before exit in every background mode.
+
   --shards K              (with --background-ingest) sharded serving: edges
       route to K independent sketch shards by a source-node hash band; one
       worker + queue per shard, each publishing epochs independently, and
@@ -34,6 +42,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import signal
 import sys
 import time
 
@@ -80,6 +89,13 @@ def parse_args(argv=None) -> argparse.Namespace:
     ap.add_argument("--background-ingest", action="store_true",
                     help="ingest in a worker thread behind a bounded queue; "
                          "queries run truly concurrently")
+    ap.add_argument("--runtime-backend", default="thread",
+                    choices=["thread", "process"],
+                    help="execution backend for ingest workers: thread "
+                         "(in-process, GIL-shared) or process (spawn "
+                         "children owning their sketches — K-shard ingest "
+                         "scales past the GIL); requires "
+                         "--background-ingest")
     ap.add_argument("--shards", type=int, default=1,
                     help="serve K hash-band shards: one ingest worker + "
                          "queue per shard, scatter/gather queries "
@@ -112,6 +128,8 @@ def parse_args(argv=None) -> argparse.Namespace:
                              ("--backpressure",
                               args.backpressure != "block"),
                              ("--publish-policy", bool(args.publish_policy)),
+                             ("--runtime-backend",
+                              args.runtime_backend != "thread"),
                              ("--queue-capacity",
                               args.queue_capacity != 64)]:
             if is_set:
@@ -141,6 +159,38 @@ def build_mix(args) -> WorkloadMix:
             raise SystemExit(f"unknown query family {k.strip()!r} in --mix")
         weights[k.strip()] = float(v)
     return WorkloadMix(**weights)
+
+
+def install_graceful_drain(runtime) -> None:
+    """SIGTERM/SIGINT -> graceful drain-and-stop, then exit 128+signum.
+
+    An orchestrator's shutdown (or a terminal Ctrl-C) must not be a crash:
+    the runtime drains its queues, publishes the final epoch and flushes a
+    final checkpoint (when checkpointing is configured — the worker's drain
+    path does that) before the process exits, so the next ``--restore``
+    resumes from the shutdown point instead of replaying from the last
+    periodic checkpoint.  Worker failures discovered during the drain are
+    reported but do not mask the signal exit code.
+    """
+    def handler(signum, frame):
+        name = signal.Signals(signum).name
+        print(f"{name}: draining ingest and flushing checkpoints before "
+              "exit", file=sys.stderr)
+        try:
+            report = runtime.stop(drain=True, raise_on_failure=False)
+            health = runtime.health()
+            for tenant_id, rep in report.items():
+                if rep.get("state") == "failed" or rep.get(
+                        "unaccounted_edges"):
+                    err = health.get(tenant_id, {}).get("error")
+                    print(f"worker {tenant_id}: state={rep.get('state')} "
+                          f"unaccounted={rep.get('unaccounted_edges')} "
+                          f"error={err}", file=sys.stderr)
+        finally:
+            sys.exit(128 + signum)
+
+    signal.signal(signal.SIGTERM, handler)
+    signal.signal(signal.SIGINT, handler)
 
 
 def cooperative_serve(args, tenant, engine, requests) -> tuple:
@@ -177,9 +227,13 @@ def background_serve(args, tenant, engine, requests) -> tuple:
         checkpoint_dir=args.checkpoint_dir or None,
         checkpoint_every=args.checkpoint_every,
         spill_dir=args.spill_dir or None,
+        backend=args.runtime_backend,
     )
     runtime.attach(tenant, restore=args.restore)
-    runtime.start()
+    install_graceful_drain(runtime)
+    runtime.start(pumps=False)
+    runtime.wait_ready()  # process children build their tenants first
+    runtime.start_pumps()
     loadgen = OpenLoopLoadGen(target_qps=args.qps, batch_max=args.batch_max)
     report = loadgen.run(engine, lambda: tenant.snapshot, requests)
     mid_metrics = runtime.metrics()[tenant.key.tenant_id]
@@ -188,6 +242,7 @@ def background_serve(args, tenant, engine, requests) -> tuple:
     tr = final_report[tenant.key.tenant_id]
     extras = {
         "ingest_mode": "background",
+        "runtime_backend": args.runtime_backend,
         "backpressure": args.backpressure,
         "publish_policy": args.publish_policy or f"every:{args.publish_every}",
         "ingest_edges_per_s": mid_metrics["edges_per_s_ewma"],
@@ -251,9 +306,13 @@ def sharded_main(args) -> None:
         # K small shards don't pay K-fold fixed dispatch cost
         coalesce_batches=max(4, args.shards),
         coalesce_target=stream.batch_size,
+        backend=args.runtime_backend,
     )
     handles = attach_shards(runtime, tenant, restore=args.restore)
-    runtime.start()
+    install_graceful_drain(runtime)
+    runtime.start(pumps=False)
+    runtime.wait_ready()  # process children build their tenants first
+    runtime.start_pumps()
     loadgen = OpenLoopLoadGen(target_qps=args.qps, batch_max=args.batch_max)
     report = loadgen.run(engine, lambda: tenant.snapshot, requests)
     mid = runtime.metrics()
@@ -269,6 +328,7 @@ def sharded_main(args) -> None:
         "sketch_backend": registry.sketch_backend,
         "budget_kb": args.budget_kb,
         "ingest_mode": "sharded-background",
+        "runtime_backend": args.runtime_backend,
         "n_shards": args.shards,
         "achieved_qps": round(report.achieved_qps, 1),
         "offered_qps": args.qps,

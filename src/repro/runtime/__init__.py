@@ -10,9 +10,25 @@ crash-like kill), the per-tenant online reservoir sample, crash-safe
 checkpointing through ``repro.checkpoint.store``, and live metrics (queue
 depth, ingest lag, edges/s, publish latency, epoch age).
 
-Entry points: ``launch/query_serve.py --background-ingest`` and
-``benchmarks/serve_bench.py --concurrent``.
+Since PR 5 the worker's execution venue is an **execution backend**
+(``runtime/backend.py``): ``backend="thread"`` keeps the classic in-process
+worker threads; ``backend="process"`` runs each worker in a spawn-safe
+multiprocessing child that owns its sketch and ships epoch-stamped
+snapshot publications back into the parent's ``SnapshotBuffer`` — K-shard
+ingest then scales past the GIL.
+
+Entry points: ``launch/query_serve.py --background-ingest
+[--runtime-backend process]`` and ``benchmarks/serve_bench.py
+--concurrent`` / ``--shards K``.
 """
+from repro.runtime.backend import (
+    ExecutionBackend,
+    ProcessBackend,
+    ProcessWorker,
+    ThreadBackend,
+    WorkerFailure,
+    resolve_backend,
+)
 from repro.runtime.metrics import RateEWMA, WorkerMetrics
 from repro.runtime.policies import (
     EveryNBatches,
@@ -41,6 +57,12 @@ from repro.runtime.worker import (
 )
 
 __all__ = [
+    "ExecutionBackend",
+    "ProcessBackend",
+    "ProcessWorker",
+    "ThreadBackend",
+    "WorkerFailure",
+    "resolve_backend",
     "RateEWMA",
     "WorkerMetrics",
     "EveryNBatches",

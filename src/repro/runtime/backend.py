@@ -1,0 +1,716 @@
+"""Execution backends: where an ingest worker's write path actually runs.
+
+The runtime's worker/queue contract (DESIGN.md §Runtime §Backends) is
+transport-agnostic.  Everything the supervisor, publish policies, metrics,
+backpressure accounting and crash/restore logic need crosses exactly two
+seams:
+
+  inward   the serialized edge-batch stream: ``QueueItem``s pulled from the
+           tenant's parent-side ``BoundedEdgeQueue`` (so ALL backpressure
+           policies — block / drop-oldest / spill — and their drop/spill
+           accounting live in one place regardless of backend);
+  outward  epoch-stamped snapshot publication: the full published state
+           (sketch pytree leaves + counters + reservoir arrays/RNG + stream
+           offset cursor), adopted into the parent's ``SnapshotBuffer`` so
+           queries always serve from the parent's address space.
+
+``ThreadBackend`` is the PR 2 behaviour: the worker is an ``IngestWorker``
+thread sharing the parent's sketch buffer — publication is a pointer swap.
+
+``ProcessBackend`` runs the same ``IngestWorker`` code in a spawn-safe
+``multiprocessing`` child that OWNS its sketch: the child rebuilds the
+tenant from its registry-stamped ``TenantOrigin`` (deterministic ⇒
+identical layout), loads the parent's buffer state shipped at spawn (warm
+prefix or restored checkpoint — restore logic runs once, parent-side),
+folds transported batches in its own interpreter (no GIL sharing with K-1
+sibling shards or the query path), and ships every published epoch back
+over a FIFO result pipe.  Checkpoints are written by the child through the
+same ``checkpoint/store`` path a thread worker uses, so thread- and
+process-written checkpoints are interchangeable.
+
+Ordering guarantees the parent relies on: the item pipe and the result
+pipe are both FIFO, publishes are emitted in epoch order from a single
+writer thread, and the terminal ``stopped`` message is sent only after the
+child worker joined — so when ``join()`` returns, every published epoch
+(including the final drain publish) has been adopted.
+"""
+from __future__ import annotations
+
+import dataclasses
+import multiprocessing
+import os
+import queue as queue_mod
+import signal
+import sys
+import threading
+import time
+
+import numpy as np
+
+from repro.runtime.metrics import WorkerMetrics
+from repro.runtime.queueing import BoundedEdgeQueue, QueueItem
+from repro.runtime.worker import (
+    CREATED,
+    DRAINING,
+    FAILED,
+    RUNNING,
+    STOPPED,
+    IngestWorker,
+)
+
+_BACKEND_NAMES = ("thread", "process")
+
+
+class WorkerFailure(RuntimeError):
+    """One or more ingest workers died; carries the original tracebacks.
+
+    Raised by ``Runtime.stop()`` (and drain callers) so failures surface at
+    the call site instead of only via ``health()`` polling.  ``failures``
+    is a list of ``{"tenant_id", "error", "traceback"}`` dicts; ``report``
+    holds the final per-tenant accounting gathered before raising, so a
+    caller that catches this still sees the conservation numbers.
+    """
+
+    def __init__(self, failures: list, report: dict | None = None) -> None:
+        self.failures = failures
+        self.report = report
+        lines = []
+        for f in failures:
+            lines.append(f"worker {f['tenant_id']} failed: {f['error']}")
+            if f.get("traceback"):
+                lines.append(f["traceback"].rstrip())
+        super().__init__("\n".join(lines) or "worker failure")
+
+
+class ExecutionBackend:
+    """Factory for worker handles honouring the backend contract.
+
+    A worker handle must expose the surface ``Runtime``/``TenantRuntime``
+    program against: ``start / request_stop(drain) / join / is_alive``,
+    ``state`` (created/running/draining/stopped/failed), ``error`` +
+    ``error_tb``, ``base_edges``, ``ingested_edges``, ``wait_ready``,
+    ``health()``, ``metrics_snapshot()``, ``checkpoint()`` and the parent
+    ``queue`` it consumes from.
+    """
+
+    name: str = ""
+    remote: bool = False  # worker's sketch state lives outside this process
+
+    def make_worker(self, tenant, queue: BoundedEdgeQueue, policy, *,
+                    reservoir=None, checkpoint_dir: str | None = None,
+                    checkpoint_every: int = 0, on_publish=None,
+                    poll_s: float = 0.05, coalesce_batches: int = 1,
+                    coalesce_target: int = 8192, queue_capacity: int = 64):
+        raise NotImplementedError
+
+
+class ThreadBackend(ExecutionBackend):
+    """In-process worker threads over the shared snapshot buffer (PR 2)."""
+
+    name = "thread"
+    remote = False
+
+    def make_worker(self, tenant, queue, policy, *, reservoir=None,
+                    checkpoint_dir=None, checkpoint_every=0, on_publish=None,
+                    poll_s=0.05, coalesce_batches=1, coalesce_target=8192,
+                    queue_capacity=64):
+        from repro.runtime.policies import make_policy
+
+        return IngestWorker(
+            tenant, queue, make_policy(policy), reservoir=reservoir,
+            checkpoint_dir=checkpoint_dir, checkpoint_every=checkpoint_every,
+            on_publish=on_publish, poll_s=poll_s,
+            coalesce_batches=coalesce_batches,
+            coalesce_target=coalesce_target)
+
+
+def resolve_backend(spec) -> ExecutionBackend:
+    """``"thread"`` | ``"process"`` | a ready ``ExecutionBackend``."""
+    if isinstance(spec, ExecutionBackend):
+        return spec
+    if spec == "thread" or spec is None:
+        return ThreadBackend()
+    if spec == "process":
+        return ProcessBackend()
+    raise ValueError(f"unknown runtime backend {spec!r}; "
+                     f"choose from {_BACKEND_NAMES}")
+
+
+# ----------------------------------------------------------------- process --
+
+@dataclasses.dataclass
+class _ChildSpec:
+    """Everything a spawn child needs; plain picklable values only."""
+
+    origin: object  # serving.registry.TenantOrigin
+    policy: str
+    init: dict  # parent buffer state: flat numpy leaves + counters + offset
+    reservoir: dict | None  # {"k": int, "state": Reservoir.state_dict()}
+    checkpoint_dir: str | None
+    checkpoint_every: int
+    poll_s: float
+    coalesce_batches: int
+    coalesce_target: int
+    queue_capacity: int
+    warm_shapes: bool
+    env: dict  # applied before the child imports jax (platform pinning,
+    #            thread-pool caps under core oversubscription, ...)
+
+
+def _tree_leaves_np(tree) -> list:
+    import jax
+
+    return [np.asarray(x) for x in jax.tree_util.tree_leaves(tree)]
+
+
+def _warm_child_shapes(tenant) -> None:
+    """Compile the child's ingest bucket ladder (and the publish kernel)
+    before the ready handshake, so transport-fed ingest never stalls on XLA.
+    Zero-weight batches are counter no-ops; the warm publish bumps the
+    epoch, which is harmless (epoch numbers are arbitrary, still monotone).
+    """
+    from repro.core.types import EdgeBatch
+
+    view = tenant.stream
+    granule = getattr(view, "granule", None)
+    base = getattr(view, "base", view)
+    base_b = getattr(base, "batch_size", None) or 8192
+    if granule:  # ShardStreamView ladder; 2x covers coalesced overshoot
+        buckets = range(granule, 2 * base_b + granule, granule)
+    else:
+        buckets = [base_b]
+    for bucket in buckets:
+        z = np.zeros(bucket, np.int32)
+        tenant.buffer.ingest(EdgeBatch.from_numpy(z, z, z))
+    tenant.buffer.publish()
+
+
+def _child_main(spec: _ChildSpec, in_q, out_q) -> None:
+    """Entry point of a process-backend worker child (spawn-safe: top-level
+    function, rebuilds everything from the picklable spec)."""
+    # the parent orchestrates graceful drains; a terminal Ctrl-C must not
+    # kill children mid-drain before the parent can flush checkpoints
+    signal.signal(signal.SIGINT, signal.SIG_IGN)
+    worker = None
+    try:
+        os.environ.update(spec.env)  # must land before jax initializes
+        import jax
+
+        from repro.runtime.policies import make_policy
+        from repro.streams.reservoir import Reservoir
+
+        tenant = spec.origin.rebuild()
+        # adopt the parent's buffer state (warm prefix / restored checkpoint)
+        buf = tenant.buffer.state()
+        structure = jax.tree_util.tree_structure(buf["front"])
+        tenant.buffer.load_state({
+            "front": jax.tree_util.tree_unflatten(structure,
+                                                  spec.init["front"]),
+            "delta": jax.tree_util.tree_unflatten(structure,
+                                                  spec.init["delta"]),
+            "pending": spec.init["pending"],
+            "epoch": spec.init["epoch"],
+            "n_edges": spec.init["n_edges"],
+        })
+        tenant.offset = int(spec.init["offset"])
+        reservoir = None
+        if spec.reservoir is not None:
+            reservoir = Reservoir(int(spec.reservoir["k"]))
+            reservoir.load_state_dict(spec.reservoir["state"])
+        if spec.warm_shapes:
+            _warm_child_shapes(tenant)
+
+        # deliberately small (just enough backlog for coalescing to engage):
+        # the PARENT queue is the system's one backpressure point, and a
+        # child-side buffer as large as the parent's would double the
+        # effective lag bound an operator tuned queue_capacity for
+        local_queue = BoundedEdgeQueue(
+            min(spec.queue_capacity, max(8, spec.coalesce_batches)))
+        worker = IngestWorker(
+            tenant, local_queue, make_policy(spec.policy),
+            reservoir=reservoir, checkpoint_dir=spec.checkpoint_dir,
+            checkpoint_every=spec.checkpoint_every, poll_s=spec.poll_s,
+            coalesce_batches=spec.coalesce_batches,
+            coalesce_target=spec.coalesce_target)
+
+        def ship(snap):  # runs in the worker thread, post-publish
+            out_q.put(("publish", {
+                "epoch": snap.epoch,
+                "n_edges": snap.n_edges,
+                "leaves": _tree_leaves_np(snap.sketch),
+                "next_offset": worker._ingested_offset + 1,
+                "reservoir": (reservoir.state_dict()
+                              if reservoir is not None else None),
+                "metrics": worker.metrics_snapshot(),
+            }))
+
+        worker.on_publish = ship
+        worker.start()
+        out_q.put(("ready", {"pid": os.getpid(), "offset": tenant.offset,
+                             "epoch": tenant.epoch}))
+
+        last_beat = time.monotonic()
+        while True:
+            if worker.state == FAILED:
+                out_q.put(("failed", repr(worker.error),
+                           worker.error_tb or "", worker.metrics_snapshot()))
+                sys.exit(1)
+            try:
+                msg = in_q.get(timeout=0.1)
+            except queue_mod.Empty:
+                msg = None
+            now = time.monotonic()
+            if now - last_beat >= 0.25:
+                out_q.put(("metrics", worker.metrics_snapshot()))
+                last_beat = now
+            if msg is None:
+                continue
+            kind = msg[0]
+            if kind == "item":
+                _, offset, src, dst, weight, n_edges = msg
+                item = QueueItem(offset, src, dst, weight, n_edges)
+                while not local_queue.put(item, timeout=0.2):
+                    if worker.state == FAILED:
+                        break  # surfaced at the top of the loop
+            elif kind == "checkpoint":
+                try:
+                    out_q.put(("checkpointed", {"path": worker.checkpoint()}))
+                except BaseException as exc:  # keep serving; caller decides
+                    out_q.put(("checkpointed", {"error": repr(exc)}))
+            elif kind == "stop":
+                worker.request_stop(drain=bool(msg[1]))
+                worker.join()
+                if worker.state == FAILED:
+                    out_q.put(("failed", repr(worker.error),
+                               worker.error_tb or "",
+                               worker.metrics_snapshot()))
+                    sys.exit(1)
+                out_q.put(("stopped", worker.metrics_snapshot()))
+                return
+            else:
+                raise ValueError(f"unknown transport message {kind!r}")
+    except SystemExit:
+        raise
+    except BaseException as exc:
+        import traceback
+
+        out_q.put(("failed", repr(exc), traceback.format_exc(),
+                   worker.metrics_snapshot() if worker is not None else None))
+        sys.exit(1)
+
+
+class ProcessWorker:
+    """Parent-side handle for one ingest worker living in a spawn child.
+
+    Quacks like ``IngestWorker`` for everything the supervisor touches.
+    Three parent threads cooperate: the *forwarder* moves ``QueueItem``s
+    from the parent's bounded queue into the child's item pipe (held until
+    the child's ready handshake so readiness is observable), the *receiver*
+    adopts published epochs into the parent ``SnapshotBuffer`` and mirrors
+    child metrics/health, and the caller's thread drives lifecycle.
+    """
+
+    def __init__(self, tenant, queue: BoundedEdgeQueue, policy, *,
+                 reservoir=None, checkpoint_dir=None, checkpoint_every=0,
+                 on_publish=None, poll_s=0.05, coalesce_batches=1,
+                 coalesce_target=8192, queue_capacity=64,
+                 warm_shapes=True, child_env=None, ctx=None) -> None:
+        import jax
+
+        if not isinstance(policy, str):
+            raise TypeError(
+                "the process backend needs a publish-policy SPEC string "
+                f"(e.g. 'every:4'), not {type(policy).__name__}: the policy "
+                "object lives in the child and is rebuilt there")
+        origin = getattr(tenant, "origin", None)
+        if origin is None:
+            raise ValueError(
+                "process backend requires a registry-opened tenant (its "
+                "TenantOrigin rebuild spec is how the child reproduces the "
+                "sketch layout); hand-built tenants can only run on the "
+                "thread backend")
+        self.tenant = tenant
+        self.queue = queue
+        self.on_publish = on_publish
+        # kept live: each publish handoff loads the child's shipped
+        # reservoir state back into this object, so parent-side observers
+        # see the same online sample a thread worker would expose
+        self.reservoir = reservoir
+        self.state = CREATED
+        self.error: BaseException | None = None
+        self.error_tb: str | None = None
+        self.base_edges = (tenant.snapshot.n_edges
+                          + tenant.buffer.pending_edges)
+        self.poll_s = poll_s
+        self._treedef = jax.tree_util.tree_structure(tenant.snapshot.sketch)
+        buf = tenant.buffer.state()
+        init = {
+            "front": _tree_leaves_np(buf["front"]),
+            "delta": _tree_leaves_np(buf["delta"]),
+            "pending": int(np.asarray(buf["pending"])),
+            "epoch": int(buf["epoch"]),
+            "n_edges": int(buf["n_edges"]),
+            "offset": int(tenant.offset),
+        }
+        res = None
+        if reservoir is not None:
+            res = {"k": reservoir.k, "state": reservoir.state_dict()}
+        spec = _ChildSpec(
+            origin=origin, policy=policy, init=init, reservoir=res,
+            checkpoint_dir=checkpoint_dir, checkpoint_every=checkpoint_every,
+            poll_s=poll_s, coalesce_batches=coalesce_batches,
+            coalesce_target=coalesce_target, queue_capacity=queue_capacity,
+            warm_shapes=warm_shapes, env=dict(child_env or {}))
+        ctx = ctx or multiprocessing.get_context("spawn")
+        # small transit pipe: backpressure cascades child -> pipe ->
+        # parent queue -> pump, so the parent queue's policy stays the
+        # single source of drop/spill accounting
+        self._in_q = ctx.Queue(maxsize=8)
+        self._out_q = ctx.Queue()
+        self.process = ctx.Process(
+            target=_child_main, args=(spec, self._in_q, self._out_q),
+            daemon=True, name=f"ingest-proc-{tenant.key.tenant_id}")
+        self._ingested_offset = tenant.offset - 1
+        self._last_metrics: dict | None = None
+        self._fallback_metrics = WorkerMetrics()
+        self._ready = threading.Event()
+        self._spawned = threading.Event()
+        self._done = threading.Event()
+        self._stop_event = threading.Event()
+        self._drain = True
+        self._hard_stop = False
+        self._started = False
+        self._ckpt_lock = threading.Lock()
+        self._ckpt_event = threading.Event()
+        self._ckpt_result: dict | None = None
+        self._forwarder: threading.Thread | None = None
+        self._receiver: threading.Thread | None = None
+
+    # -------------------------------------------------------------- lifecycle
+    def start(self) -> None:
+        """Non-blocking: spawning happens in a starter thread.
+
+        ``Process.start()`` blocks until the child boots far enough to
+        drain the (sketch-sized, pipe-buffer-exceeding) spawn spec, so a
+        serial loop over K workers would serialize K child boots; the
+        starter thread lets ``Runtime.start()`` launch all children
+        concurrently.
+        """
+        self._started = True
+        self.state = RUNNING
+        threading.Thread(target=self._spawn_and_attach, daemon=True,
+                         name=f"{self.process.name}-spawn").start()
+
+    def _spawn_and_attach(self) -> None:
+        try:
+            self.process.start()
+        except BaseException as exc:
+            import traceback
+
+            self.error = exc
+            self.error_tb = traceback.format_exc()
+            self.state = FAILED
+            self._ready.set()
+            self._ckpt_event.set()
+            self._done.set()
+            return
+        self._spawned.set()
+        if self._hard_stop:  # killed while still booting
+            self.process.terminate()
+            self.state = STOPPED
+            self._done.set()
+            return
+        self._forwarder = threading.Thread(
+            target=self._forward_loop, daemon=True,
+            name=f"{self.process.name}-fwd")
+        self._receiver = threading.Thread(
+            target=self._receive_loop, daemon=True,
+            name=f"{self.process.name}-rcv")
+        self._receiver.start()
+        self._forwarder.start()
+
+    def wait_ready(self, timeout: float = 300.0) -> bool:
+        """Block until the child built its tenant (and warmed shapes)."""
+        ok = self._ready.wait(timeout)
+        if self.state == FAILED:
+            raise RuntimeError(
+                f"worker process for {self.tenant.key.tenant_id} failed "
+                f"during startup: {self.error}\n{self.error_tb or ''}")
+        return ok
+
+    def request_stop(self, drain: bool = True) -> None:
+        self._drain = drain
+        self._stop_event.set()
+        if drain:
+            if self.state == RUNNING:
+                self.state = DRAINING
+        else:
+            # crash-like hard stop, same contract as IngestWorker: in-queue
+            # and in-flight work is abandoned exactly as SIGKILL would
+            self._hard_stop = True
+            self.queue.close()
+            if self._spawned.is_set() and self.process.is_alive():
+                self.process.terminate()
+            elif not self._spawned.is_set():
+                # still booting: the starter thread owns the handoff; mark
+                # done so join() doesn't wait on a child we'll never use
+                self._done.set()
+
+    def join(self, timeout: float | None = None) -> None:
+        deadline = None if timeout is None else time.monotonic() + timeout
+
+        def remaining(default=None):
+            if deadline is None:
+                return default
+            return max(deadline - time.monotonic(), 0.01)
+
+        self._done.wait(timeout=remaining())
+        if self._spawned.is_set():
+            self.process.join(timeout=remaining(60.0))
+
+    def is_alive(self) -> bool:
+        if not self._started:
+            return False
+        if not self._spawned.is_set():
+            return not self._done.is_set()  # still booting (or spawn failed)
+        return self.process.is_alive() or not self._done.is_set()
+
+    # -------------------------------------------------------------- transport
+    def _forward_loop(self) -> None:
+        while not self._ready.wait(timeout=0.1):
+            if self._done.is_set() or self._hard_stop:
+                return
+        while True:
+            if self._done.is_set() or self._hard_stop:
+                return
+            item = self.queue.get(timeout=self.poll_s)
+            if item is None:
+                if (self._stop_event.is_set() and self._drain
+                        and self.queue.depth() == 0):
+                    break
+                continue
+            msg = ("item", item.offset, item.src, item.dst, item.weight,
+                   item.n_edges)
+            placed = False
+            while not placed:
+                try:
+                    self._in_q.put(msg, timeout=0.2)
+                    placed = True
+                except queue_mod.Full:
+                    if self._done.is_set() or self._hard_stop:
+                        return
+        # parent queue drained: hand the child its graceful-stop sentinel
+        # (retry while the transit pipe is full — the child is still
+        # working through the backlog; give up only on terminal states,
+        # which the receiver surfaces)
+        while not (self._done.is_set() or self._hard_stop):
+            try:
+                self._in_q.put(("stop", True), timeout=0.5)
+                return
+            except queue_mod.Full:
+                continue
+
+    def _receive_loop(self) -> None:
+        while True:
+            try:
+                msg = self._out_q.get(timeout=0.2)
+            except queue_mod.Empty:
+                if not self.process.is_alive():
+                    # the pipe may still hold messages the child flushed
+                    # before dying — adopt them before declaring death
+                    while True:
+                        try:
+                            tail = self._out_q.get(timeout=0.2)
+                        except (queue_mod.Empty, EOFError, OSError):
+                            break
+                        if not self._handle_guarded(tail):
+                            return
+                        if self._done.is_set():
+                            return
+                    self._finalize_death()
+                    return
+                continue
+            except (EOFError, OSError):
+                self._finalize_death()
+                return
+            if not self._handle_guarded(msg):
+                return
+            if self._done.is_set():
+                return
+
+    def _handle_guarded(self, msg) -> bool:
+        """Dispatch one child message; on a parent-side failure (e.g. an
+        on_publish callback raising, or a torn payload) mark the handle
+        failed, take the child down with us (it knows nothing and would
+        keep ingesting until its result pipe wedged), and finalize — the
+        receiver must NEVER die without setting ``_done``, or ``join()``
+        would hang for its full timeout with the failure swallowed.
+        Returns False when the receiver should exit."""
+        try:
+            self._handle(msg)
+            return True
+        except BaseException as exc:
+            import traceback
+
+            self.error = exc
+            self.error_tb = traceback.format_exc()
+            self.state = FAILED
+            if self.process.is_alive():
+                self.process.terminate()
+            self._ready.set()
+            self._ckpt_event.set()
+            self._done.set()
+            return False
+
+    def _handle(self, msg) -> None:
+        import jax
+        import jax.numpy as jnp
+
+        kind = msg[0]
+        if kind == "ready":
+            self._ready.set()
+        elif kind == "metrics":
+            self._last_metrics = msg[1]
+        elif kind == "publish":
+            payload = msg[1]
+            sketch = jax.tree_util.tree_unflatten(
+                self._treedef, [jnp.asarray(x) for x in payload["leaves"]])
+            snap = self.tenant.buffer.adopt_published(
+                sketch, payload["epoch"], payload["n_edges"])
+            self._ingested_offset = payload["next_offset"] - 1
+            self.tenant.offset = payload["next_offset"]
+            self._last_metrics = payload["metrics"]
+            if self.reservoir is not None and payload["reservoir"] is not None:
+                self.reservoir.load_state_dict(payload["reservoir"])
+            if self.on_publish is not None:
+                self.on_publish(snap)
+        elif kind == "checkpointed":
+            self._ckpt_result = msg[1]
+            self._ckpt_event.set()
+        elif kind == "stopped":
+            self._last_metrics = msg[1]
+            self.state = STOPPED
+            self._ready.set()
+            self._ckpt_event.set()
+            self._done.set()
+        elif kind == "failed":
+            _, err, tb, metrics = msg
+            self.error = RuntimeError(err)
+            self.error_tb = tb
+            if metrics:
+                self._last_metrics = metrics
+            self.state = FAILED
+            self._ready.set()
+            self._ckpt_event.set()
+            self._done.set()
+
+    def _finalize_death(self) -> None:
+        """The child exited without a terminal message."""
+        if self._done.is_set():
+            return
+        if self._hard_stop:
+            self.state = STOPPED
+        else:
+            code = self.process.exitcode
+            self.error = RuntimeError(
+                f"worker process for {self.tenant.key.tenant_id} exited "
+                f"unexpectedly (exitcode={code})")
+            self.error_tb = None
+            self.state = FAILED
+        self._ready.set()
+        self._ckpt_event.set()
+        self._done.set()
+
+    # ------------------------------------------------------------- checkpoint
+    def checkpoint(self, timeout: float = 300.0) -> str:
+        """Ask the child for a synchronous checkpoint; returns its path."""
+        with self._ckpt_lock:
+            if self._done.is_set() or not self._spawned.is_set() \
+                    or not self.process.is_alive():
+                raise RuntimeError(
+                    f"worker process for {self.tenant.key.tenant_id} is not "
+                    "running; cannot checkpoint")
+            self._ckpt_event.clear()
+            self._ckpt_result = None
+            self._in_q.put(("checkpoint",), timeout=60.0)
+            if not self._ckpt_event.wait(timeout):
+                raise TimeoutError("child did not acknowledge checkpoint")
+            res = self._ckpt_result
+        if res is None:  # terminal state raced the request
+            raise RuntimeError(
+                f"worker process for {self.tenant.key.tenant_id} stopped "
+                f"before checkpointing (state={self.state})")
+        if "error" in res:
+            raise RuntimeError(f"child checkpoint failed: {res['error']}")
+        return res["path"]
+
+    # ---------------------------------------------------------------- reports
+    @property
+    def ingested_edges(self) -> int:
+        return int((self._last_metrics or {}).get("ingested_edges", 0))
+
+    def health(self) -> dict:
+        return {
+            "state": self.state,
+            "alive": self.is_alive(),
+            "error": repr(self.error) if self.error else None,
+            "epoch": self.tenant.epoch,
+            "ingested_offset": self._ingested_offset,
+            "queue_depth": self.queue.depth(),
+            "pid": self.process.pid if self._spawned.is_set() else None,
+        }
+
+    def metrics_snapshot(self) -> dict:
+        qstats = self.queue.stats()
+        if self._last_metrics is None:
+            m = self._fallback_metrics.snapshot(
+                queue_stats=qstats, state=self.state,
+                epoch=self.tenant.epoch)
+            child_depth = 0
+        else:
+            m = dict(self._last_metrics)
+            child_depth = int(m.get("queue_depth", 0))
+        # queue accounting is parent-authoritative (drops/spills happen in
+        # the parent queue only); depth adds batches already in the child
+        m["state"] = self.state
+        m["epoch"] = self.tenant.epoch
+        m["queue_depth"] = qstats["depth"] + child_depth
+        m["ingest_lag_batches"] = m["queue_depth"]
+        m["dropped_batches"] = qstats["dropped_batches"]
+        m["dropped_edges"] = qstats["dropped_edges"]
+        m["spilled_batches"] = qstats["spilled_batches"]
+        m["max_queue_depth"] = qstats["max_depth_seen"]
+        m["pid"] = self.process.pid if self._spawned.is_set() else None
+        return m
+
+
+class ProcessBackend(ExecutionBackend):
+    """Spawn-safe multiprocessing children owning their sketches."""
+
+    name = "process"
+    remote = True
+
+    def __init__(self, *, warm_shapes: bool = True,
+                 child_env: dict | None = None,
+                 mp_context: str = "spawn") -> None:
+        # spawn, never fork: the parent holds a live XLA runtime and worker
+        # threads; forking either is undefined behaviour
+        self._ctx = multiprocessing.get_context(mp_context)
+        self.warm_shapes = warm_shapes
+        # applied in each child BEFORE jax initializes: pin children off a
+        # shared accelerator (JAX_PLATFORMS=cpu on a TPU host) or cap their
+        # XLA host thread pools when K workers oversubscribe the cores
+        self.child_env = dict(child_env or {})
+
+    def make_worker(self, tenant, queue, policy, *, reservoir=None,
+                    checkpoint_dir=None, checkpoint_every=0, on_publish=None,
+                    poll_s=0.05, coalesce_batches=1, coalesce_target=8192,
+                    queue_capacity=64):
+        return ProcessWorker(
+            tenant, queue, policy, reservoir=reservoir,
+            checkpoint_dir=checkpoint_dir, checkpoint_every=checkpoint_every,
+            on_publish=on_publish, poll_s=poll_s,
+            coalesce_batches=coalesce_batches,
+            coalesce_target=coalesce_target, queue_capacity=queue_capacity,
+            warm_shapes=self.warm_shapes, child_env=self.child_env,
+            ctx=self._ctx)

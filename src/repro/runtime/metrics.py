@@ -41,6 +41,13 @@ class WorkerMetrics:
     """Single-writer counters for one ingest worker."""
 
     started_at: float = 0.0
+    # monotonic timestamps of the first/last real ingest dispatch: the honest
+    # wall for throughput numbers (excludes spawn/compile warmup before the
+    # first batch).  CLOCK_MONOTONIC is system-wide on Linux, so these are
+    # comparable across the process boundary (runtime/backend.py relies on
+    # that to time multi-process drains from per-worker metrics alone).
+    first_ingest_at: float = 0.0
+    last_ingest_at: float = 0.0
     ingested_batches: int = 0
     ingested_edges: int = 0
     batches_since_publish: int = 0
@@ -55,6 +62,9 @@ class WorkerMetrics:
         self.edge_rate = RateEWMA()
 
     def note_ingest(self, n_edges: int, now: float) -> None:
+        if not self.first_ingest_at:
+            self.first_ingest_at = now
+        self.last_ingest_at = now
         self.ingested_batches += 1
         self.ingested_edges += n_edges
         self.batches_since_publish += 1
@@ -83,11 +93,14 @@ class WorkerMetrics:
             if self.last_publish_at else None,
             "ingested_batches": self.ingested_batches,
             "ingested_edges": self.ingested_edges,
+            "first_ingest_at": self.first_ingest_at,
+            "last_ingest_at": self.last_ingest_at,
             "batches_since_publish": self.batches_since_publish,
             "edges_per_s_ewma": round(self.edge_rate.rate, 1),
             "edges_per_s_lifetime": round(self.ingested_edges / elapsed, 1)
             if elapsed else 0.0,
             "publishes": self.publishes,
+            "last_publish_at": self.last_publish_at,
             "last_publish_latency_ms": round(
                 self.last_publish_latency_s * 1e3, 3),
             "mean_publish_latency_ms": round(

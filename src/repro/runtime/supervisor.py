@@ -3,12 +3,16 @@
 ``Runtime`` owns the concurrency story that `launch/query_serve.py` and
 `benchmarks/serve_bench.py --concurrent` build on: per tenant, a
 ``StreamPump`` thread reads the seekable stream and feeds a
-``BoundedEdgeQueue`` (explicit backpressure), an ``IngestWorker`` thread
-folds batches into the delta sketch and publishes epochs, and the
-supervisor provides lifecycle (start / health / graceful drain-and-stop /
-crash-like kill), live metrics, conservation accounting, and crash-safe
-checkpoint/restore.  Query threads are *not* managed here — they just read
-``tenant.snapshot``, which is always a consistent immutable epoch.
+``BoundedEdgeQueue`` (explicit backpressure), a worker built by the
+configured **execution backend** (``backend="thread"`` — the classic
+``IngestWorker`` thread — or ``"process"`` — a spawn child owning its
+sketch, see ``runtime/backend.py``) folds batches into the delta sketch
+and publishes epochs, and the supervisor provides lifecycle (start /
+health / graceful drain-and-stop / crash-like kill), live metrics,
+conservation accounting, and crash-safe checkpoint/restore — all written
+once against the backend interface.  Query threads are *not* managed here
+— they just read ``tenant.snapshot``, which is always a consistent
+immutable epoch in THIS process regardless of where ingest runs.
 
 Conservation contract (tested; the serve bench gates on it): for every
 tenant, ``offered == ingested + dropped`` and after a graceful stop
@@ -22,9 +26,9 @@ import os
 import threading
 import time
 
-from repro.runtime.policies import make_policy
+from repro.runtime.backend import WorkerFailure, resolve_backend
 from repro.runtime.queueing import BLOCK, SPILL, BoundedEdgeQueue, QueueItem
-from repro.runtime.worker import IngestWorker, restore_worker_state
+from repro.runtime.worker import FAILED, restore_worker_state
 from repro.streams.reservoir import Reservoir
 
 
@@ -72,9 +76,9 @@ class StreamPump(threading.Thread):
 
 
 class TenantRuntime:
-    """Handle bundling one tenant's pump + queue + worker."""
+    """Handle bundling one tenant's pump + queue + backend worker."""
 
-    def __init__(self, tenant, queue: BoundedEdgeQueue, worker: IngestWorker,
+    def __init__(self, tenant, queue: BoundedEdgeQueue, worker,
                  pump: StreamPump | None) -> None:
         self.tenant = tenant
         self.queue = queue
@@ -99,7 +103,7 @@ class TenantRuntime:
         """Edge-mass accounting: offered vs ingested vs dropped vs published."""
         qstats = self.queue.stats()
         offered = qstats["accepted_edges"]
-        ingested = self.worker.metrics.ingested_edges
+        ingested = self.worker.ingested_edges  # backend-neutral accessor
         dropped = qstats["dropped_edges"]
         published = self.tenant.snapshot.n_edges
         base = self.worker.base_edges
@@ -124,7 +128,12 @@ class Runtime:
                  checkpoint_dir: str | None = None, checkpoint_every: int = 0,
                  spill_dir: str | None = None, poll_s: float = 0.02,
                  coalesce_batches: int = 1,
-                 coalesce_target: int = 8192) -> None:
+                 coalesce_target: int = 8192,
+                 backend: str = "thread") -> None:
+        # execution backend: where workers run ("thread" | "process" | an
+        # ExecutionBackend instance) — everything below is written against
+        # the runtime/backend.py contract, not a concrete worker class
+        self.backend = resolve_backend(backend)
         self.queue_capacity = queue_capacity
         self.backpressure = backpressure
         self.publish_policy = publish_policy
@@ -169,6 +178,9 @@ class Runtime:
         if restore:
             if not ckpt_dir:
                 raise ValueError("restore=True requires checkpoint_dir")
+            # restore runs ONCE, here in the parent, for every backend: the
+            # thread worker shares this state directly; a process worker
+            # receives it (buffer + reservoir + offset) in its spawn spec
             restore_worker_state(tenant, ckpt_dir, reservoir)
         spill_dir = None
         if self.backpressure == SPILL:
@@ -177,12 +189,13 @@ class Runtime:
             spill_dir = self._tenant_dir(self.spill_dir, tenant)
         queue = BoundedEdgeQueue(self.queue_capacity, self.backpressure,
                                  spill_dir=spill_dir)
-        worker = IngestWorker(
-            tenant, queue, make_policy(publish_policy or self.publish_policy),
+        worker = self.backend.make_worker(
+            tenant, queue, publish_policy or self.publish_policy,
             reservoir=reservoir, checkpoint_dir=ckpt_dir,
             checkpoint_every=self.checkpoint_every, on_publish=on_publish,
             poll_s=self.poll_s, coalesce_batches=self.coalesce_batches,
-            coalesce_target=self.coalesce_target)
+            coalesce_target=self.coalesce_target,
+            queue_capacity=self.queue_capacity)
         pump_thread = (StreamPump(tenant.stream, queue,
                                   start_offset=tenant.offset,
                                   max_batches=max_batches,
@@ -204,16 +217,36 @@ class Runtime:
             return list(self._handles.values())
 
     # -------------------------------------------------------------- lifecycle
-    def start(self) -> None:
+    def start(self, pumps: bool = True) -> None:
+        """Start every worker (and, by default, every pump).
+
+        ``pumps=False`` is the staged start: workers come up first (process
+        children spawn and warm in parallel), the caller can
+        ``wait_ready()``, then ``start_pumps()`` — benchmarks use this to
+        keep child startup off the ingest clock.
+        """
         with self._lock:
             if self._started:
                 return
             self._started = True
         for h in self.handles():
             h.worker.start()
+        if pumps:
+            self.start_pumps()
+
+    def start_pumps(self) -> None:
         for h in self.handles():
-            if h.pump is not None:
+            if h.pump is not None and h.pump.ident is None:  # not yet started
                 h.pump.start()
+
+    def wait_ready(self, timeout: float = 300.0) -> bool:
+        """Block until every worker is ready to ingest (thread workers are
+        born ready; process workers finish their child-side build/warm)."""
+        deadline = time.monotonic() + timeout
+        return all(
+            h.worker.wait_ready(timeout=max(deadline - time.monotonic(),
+                                            0.01))
+            for h in self.handles())
 
     def join_pumps(self, timeout: float = 300.0) -> bool:
         """Wait until every pump has offered its whole stream."""
@@ -223,10 +256,18 @@ class Runtime:
                 h.pump.join(timeout=max(deadline - time.monotonic(), 0.01))
         return all(h.pump is None or h.pump.done for h in self.handles())
 
-    def stop(self, drain: bool = True, timeout: float = 300.0) -> dict:
+    def stop(self, drain: bool = True, timeout: float = 300.0,
+             raise_on_failure: bool = True) -> dict:
         """Stop everything; with ``drain`` the queues are consumed to empty,
         a final epoch is published and a final checkpoint written.  Returns
-        the final per-tenant report (metrics + conservation)."""
+        the final per-tenant report (metrics + conservation).
+
+        If any worker is in the ``failed`` state after the join, raises
+        ``WorkerFailure`` carrying each original exception + traceback (the
+        report rides along on the exception) — a dead worker must surface
+        at the drain call site, not only via ``health()`` polling.  Pass
+        ``raise_on_failure=False`` to get the report unconditionally.
+        """
         for h in self.handles():
             if h.pump is not None:
                 h.pump.request_stop()
@@ -240,7 +281,18 @@ class Runtime:
             if h.worker.is_alive():
                 h.worker.join(timeout=max(deadline - time.monotonic(), 0.01))
             h.queue.close()
-        return self.report()
+        report = self.report()
+        if raise_on_failure:
+            failures = [
+                {"tenant_id": h.tenant_id,
+                 "error": repr(h.worker.error) if h.worker.error else
+                 f"worker state {h.worker.state!r}",
+                 "traceback": getattr(h.worker, "error_tb", None)}
+                for h in self.handles() if h.worker.state == FAILED
+            ]
+            if failures:
+                raise WorkerFailure(failures, report)
+        return report
 
     def kill(self) -> None:
         """Crash-like termination: close queues, abandon in-flight work.

@@ -25,6 +25,7 @@ from __future__ import annotations
 
 import threading
 import time
+import traceback
 
 import numpy as np
 
@@ -74,6 +75,9 @@ class IngestWorker(threading.Thread):
         self.metrics = WorkerMetrics()
         self.state = CREATED
         self.error: BaseException | None = None
+        self.error_tb: str | None = None  # formatted traceback, for callers
+        #                                   in other processes/threads that
+        #                                   cannot reach error.__traceback__
         self._stop_event = threading.Event()
         self._drain = True
         self._state_lock = threading.Lock()
@@ -151,7 +155,10 @@ class IngestWorker(threading.Thread):
         except BaseException as exc:
             # don't re-raise: a dying thread would only reach
             # threading.excepthook; the supervisor reads state/error instead
+            # (and Runtime.stop() re-raises it to drain callers)
             self.error = exc
+            self.error_tb = "".join(traceback.format_exception(
+                type(exc), exc, exc.__traceback__))
             self.state = FAILED
 
     # ----------------------------------------------------------------- ingest
@@ -251,6 +258,19 @@ class IngestWorker(threading.Thread):
         return path
 
     # ---------------------------------------------------------------- reports
+    @property
+    def ingested_edges(self) -> int:
+        """Backend-neutral accessor (runtime/backend.py contract): total
+        non-padding edges this worker has folded into the delta."""
+        return self.metrics.ingested_edges
+
+    def wait_ready(self, timeout: float = 0.0) -> bool:
+        """Backend-neutral readiness barrier: a thread worker shares the
+        parent's address space and compiled kernels, so it is ready the
+        moment it exists.  (The process backend overrides this with a real
+        wait on the child's ready handshake.)"""
+        return True
+
     def health(self) -> dict:
         return {
             "state": self.state,

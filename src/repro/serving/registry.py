@@ -81,6 +81,40 @@ class TenantKey:
         return f"{self.dataset}/{self.kind}/{self.budget_kb}kb/s{self.seed}"
 
 
+@dataclasses.dataclass(frozen=True)
+class TenantOrigin:
+    """How to rebuild a registry-opened tenant from scratch, anywhere.
+
+    Tenant construction is deterministic — stream, bootstrap sample,
+    partition plan and hash family are all pure functions of the registry
+    config + the open() arguments — so this small picklable spec is enough
+    for another address space (the process execution backend's spawn-safe
+    children, ``runtime/backend.py``) to rebuild a tenant with the
+    *identical* sketch layout, making shipped counter pytrees loadable
+    leaf-for-leaf on either side.
+    """
+
+    registry: dict  # SketchRegistry(**registry) reproduces the config
+    dataset: str
+    kind: str
+    budget_kb: int
+    seed: int = 0
+    # set only for shard tenants (one shard of an open_sharded tenant)
+    n_shards: int | None = None
+    shard_seed: int | None = None
+    shard_index: int | None = None
+
+    def rebuild(self) -> "Tenant":
+        reg = SketchRegistry(**self.registry)
+        if self.n_shards is None:
+            return reg.open(self.dataset, self.kind, self.budget_kb,
+                            seed=self.seed)
+        sharded = reg.open_sharded(self.dataset, self.kind, self.budget_kb,
+                                   seed=self.seed, n_shards=self.n_shards,
+                                   shard_seed=self.shard_seed)
+        return sharded.shards[self.shard_index]
+
+
 class Tenant:
     """One registered sketch + its stream position + snapshot buffer.
 
@@ -97,6 +131,9 @@ class Tenant:
         self.buffer = buffer
         self.mod = mod
         self.offset = 0  # next stream batch to ingest
+        # rebuild spec stamped by the registry (None for hand-built tenants;
+        # the process execution backend requires it)
+        self.origin: TenantOrigin | None = None
 
     @property
     def snapshot(self) -> Snapshot:
@@ -148,6 +185,19 @@ class SketchRegistry:
         # opens: two tenants for one key would double-ingest the stream
         self._lock = threading.Lock()
 
+    def config(self) -> dict:
+        """The constructor kwargs that reproduce this registry (all plain
+        picklable values; ``sketch_backend`` ships resolved so a rebuild on
+        a different platform still picks the same layout)."""
+        return {
+            "depth": self.depth,
+            "batch_size": self.batch_size,
+            "sample_size": self.sample_size,
+            "scale": self.scale,
+            "partitioner": self.partitioner,
+            "sketch_backend": self.sketch_backend,
+        }
+
     def open(self, dataset: str, kind: str, budget_kb: int,
              seed: int = 0) -> Tenant:
         """Get-or-create the tenant for a key (idempotent, thread-safe)."""
@@ -171,6 +221,8 @@ class SketchRegistry:
             buffer = SnapshotBuffer(sketch, mod, tenant_id=key.tenant_id,
                                     kind=kind)
             tenant = Tenant(key, stream, buffer, mod)
+            tenant.origin = TenantOrigin(self.config(), dataset, kind,
+                                         budget_kb, seed)
             self._tenants[key] = tenant
             return tenant
 
@@ -210,7 +262,11 @@ class SketchRegistry:
             view = ShardStreamView(stream, plan, s)
             buffer = SnapshotBuffer(mod.empty_like(sketch), mod,
                                     tenant_id=shard_key.tenant_id, kind=kind)
-            shards.append(Tenant(shard_key, view, buffer, mod))
+            shard = Tenant(shard_key, view, buffer, mod)
+            shard.origin = TenantOrigin(self.config(), dataset, kind,
+                                        budget_kb, seed, n_shards=n_shards,
+                                        shard_seed=shard_seed, shard_index=s)
+            shards.append(shard)
         tenant = ShardedTenant(key, plan, shards, mod)
         with self._lock:
             if skey in self._sharded:  # lost the build race; first one wins

@@ -495,7 +495,8 @@ def attach_shards(runtime, tenant: ShardedTenant, *, restore: bool = False,
         for i, shard in enumerate(tenant.shards)
     ]
     if runtime.checkpoint_dir and not restore:
-        write_shard_manifest(runtime.checkpoint_dir, tenant)
+        write_shard_manifest(runtime.checkpoint_dir, tenant,
+                             runtime_backend=runtime.backend.name)
     return handles
 
 
@@ -507,19 +508,18 @@ def sharded_conservation(handles, stream_total: int) -> dict:
     drops must equal the base stream's total — and every shard must
     individually balance (zero unaccounted).
     """
+    from repro.serving.gates import conservation_verdict
+
     per_shard = [h.conservation() for h in handles]
-    published = sum(c["published_edges"] for c in per_shard)
-    dropped = sum(c["dropped_edges"] for c in per_shard)
     unaccounted = [c["unaccounted_edges"] for c in per_shard]
+    verdict = conservation_verdict(
+        sum(c["published_edges"] for c in per_shard),
+        sum(c["dropped_edges"] for c in per_shard),
+        stream_total, unaccounted)
     return {
-        "published_edges": published,
-        "dropped_edges": dropped,
-        "stream_total_edges": stream_total,
+        **verdict,
         "per_shard_published": [c["published_edges"] for c in per_shard],
         "per_shard_unaccounted": unaccounted,
-        "conservation_ok": bool(
-            published + dropped == stream_total
-            and all(u == 0 for u in unaccounted)),
     }
 
 
@@ -552,64 +552,75 @@ def warm_ingest_shapes(tenant: ShardedTenant) -> int:
 
 
 def measure_sharded_ingest(tenant: ShardedTenant, *,
+                           backend: str = "thread",
                            coalesce_batches: int = 16,
                            max_batches: int | None = None) -> dict:
-    """Backlog-drain ingest throughput over K shard workers.
+    """Backlog-drain ingest throughput over K shard workers, any backend.
 
-    Pre-fills each shard's queue with its (remaining) stream view, then
-    drains with one ``IngestWorker`` per shard — started in drain mode, no
-    pumps, no query load — and measures wall time.  This is the
-    pure concurrent-ingest capacity number ``benchmarks/run.py
-    serve_sharded`` charts against K: stream generation, pump scheduling
-    and query contention are off the clock, coalescing keeps the dispatch
-    count at parity with an unsharded run, and shapes are warmed first so
-    the wall measures ingest, not XLA compiles.  Conservation-checked:
-    every queued edge must land in a published epoch.
+    Pre-fills each shard's parent-side queue with its (remaining) stream
+    view, then drains through one ``Runtime`` worker per shard — no pumps,
+    no query load.  This is the pure concurrent-ingest capacity number
+    ``benchmarks/run.py`` charts against K (and thread-vs-process in
+    ``BENCH_process.json``).  The wall runs from each worker's first-ingest
+    monotonic timestamp to its drain-publish timestamp (system-wide clock
+    on Linux, so valid across the process boundary): stream generation,
+    spawn, jit warm-up and readiness handshakes are all off the clock for
+    every backend, while the publish end-point synchronizes on the device
+    ingest chain (the pending-count fetch), so async dispatch cannot hide
+    compute off the clock.  Conservation-checked: every queued edge must
+    land in a published epoch.
     """
-    from repro.runtime import (BoundedEdgeQueue, IngestWorker, QueueItem,
-                               make_policy)
+    from repro.runtime import QueueItem, Runtime
 
-    warm_ingest_shapes(tenant)
     nb = tenant.stream.num_batches
     coalesce_target = getattr(tenant.stream, "batch_size", 8192)
+    per_shard_items: list[list] = []
     queued_edges = 0
-    workers = []
     for shard in tenant.shards:
         end = nb if max_batches is None else min(nb, shard.offset
                                                  + max_batches)
-        queue = BoundedEdgeQueue(max(end - shard.offset, 0) + 1)
+        items = []
         for i in range(shard.offset, end):
             src, dst, w = shard.stream.batch_numpy(i)
             item = QueueItem.from_arrays(i, src, dst, w)
-            queue.put(item)
+            items.append(item)
             queued_edges += item.n_edges
-        # publish once at drain: per-epoch cadence is a serving concern and
-        # would bill one full-sketch merge per epoch to the ingest wall
-        worker = IngestWorker(shard, queue,
-                              make_policy("every:1000000000"),
-                              poll_s=0.002,
-                              coalesce_batches=coalesce_batches,
-                              coalesce_target=coalesce_target)
-        workers.append(worker)
-    base_edges = sum(w.base_edges for w in workers)
-    t0 = time.perf_counter()
-    for w in workers:
-        w.request_stop(drain=True)  # drain-to-empty, then final publish
-    for w in workers:
-        w.start()
-    for w in workers:
-        w.join(timeout=600)
-    wall = max(time.perf_counter() - t0, 1e-9)
-    ingested = sum(w.metrics.ingested_edges for w in workers)
+        per_shard_items.append(items)
+    capacity = max(max((len(x) for x in per_shard_items), default=0), 1) + 1
+    # publish once at drain: per-epoch cadence is a serving concern and
+    # would bill one full-sketch merge per epoch to the ingest wall
+    runtime = Runtime(queue_capacity=capacity,
+                      publish_policy="every:1000000000", reservoir_k=0,
+                      poll_s=0.002, backend=backend,
+                      coalesce_batches=coalesce_batches,
+                      coalesce_target=coalesce_target)
+    handles = [runtime.attach(shard, pump=False) for shard in tenant.shards]
+    if not runtime.backend.remote:
+        warm_ingest_shapes(tenant)  # process children warm on their side
+    runtime.start()
+    runtime.wait_ready()  # ALL workers up before the backlog lands: the
+    #                       wall must measure the concurrent drain, not
+    #                       K staggered child boots
+    base_edges = sum(h.worker.base_edges for h in handles)
+    for handle, items in zip(handles, per_shard_items):
+        for item in items:
+            handle.queue.put(item)  # capacity covers the whole backlog
+    runtime.stop(drain=True, timeout=600)
+    metrics = [h.worker.metrics_snapshot() for h in handles]
+    starts = [m["first_ingest_at"] for m in metrics if m["first_ingest_at"]]
+    ends = [m["last_publish_at"] for m in metrics if m["last_publish_at"]]
+    wall = max((max(ends) - min(starts)) if starts and ends else 0.0, 1e-9)
+    ingested = sum(h.worker.ingested_edges for h in handles)
     published = sum(s.snapshot.n_edges for s in tenant.shards)
     return {
         "n_shards": tenant.n_shards,
+        "backend": runtime.backend.name,
         "queued_edges": queued_edges,
         "ingested_edges": ingested,
         "published_edges": published,
         "wall_s": round(wall, 4),
         "edges_per_s": round(ingested / wall, 1),
-        "worker_states": [w.state for w in workers],
+        "worker_states": [h.worker.state for h in handles],
         "conserved": bool(ingested == queued_edges
                           and published - base_edges == ingested),
     }
@@ -620,8 +631,16 @@ def measure_sharded_ingest(tenant: ShardedTenant, *,
 _MANIFEST = "shard_manifest.json"
 
 
-def write_shard_manifest(directory: str, tenant: ShardedTenant) -> str:
-    """Atomically record the shard topology next to the per-shard stores."""
+def write_shard_manifest(directory: str, tenant: ShardedTenant, *,
+                         runtime_backend: str = "thread") -> str:
+    """Atomically record the shard topology next to the per-shard stores.
+
+    ``runtime_backend`` records which execution backend wrote the
+    checkpoints — informational only: thread- and process-written
+    checkpoints share one format (the child runs the same worker/store
+    code), so restore never rejects on it, but an operator reading the
+    manifest should know where the state came from.
+    """
     os.makedirs(directory, exist_ok=True)
     payload = {
         "base_tenant_id": tenant.key.tenant_id,
@@ -632,6 +651,7 @@ def write_shard_manifest(directory: str, tenant: ShardedTenant) -> str:
         "n_shards": tenant.n_shards,
         "shard_seed": tenant.plan.seed,
         "shard_tenant_ids": [s.key.tenant_id for s in tenant.shards],
+        "runtime_backend": runtime_backend,
     }
     path = os.path.join(directory, _MANIFEST)
     fd, tmp = tempfile.mkstemp(dir=directory, prefix=".tmp_manifest_")
@@ -647,10 +667,31 @@ def write_shard_manifest(directory: str, tenant: ShardedTenant) -> str:
 
 
 def read_shard_manifest(directory: str) -> dict:
+    """Load and validate the shard manifest; fail LOUDLY on corruption.
+
+    A truncated or torn manifest must never be treated as "no manifest"
+    (which a restore could shrug off) or crash with a bare JSON error:
+    restoring under an unverifiable shard plan could silently re-route the
+    stream mid-history, so corruption is a hard, descriptive failure.
+    """
     path = os.path.join(directory, _MANIFEST)
     if not os.path.exists(path):
         raise FileNotFoundError(
             f"no shard manifest at {path} — was this checkpoint dir written "
             "by a sharded run (attach_shards with checkpointing enabled)?")
     with open(path) as f:
-        return json.load(f)
+        try:
+            manifest = json.load(f)
+        except json.JSONDecodeError as exc:
+            raise ValueError(
+                f"shard manifest at {path} is truncated or corrupt ({exc}); "
+                "refusing to restore — the shard plan cannot be verified, "
+                "and resuming under a different plan would re-route the "
+                "stream mid-history") from exc
+    missing = [k for k in ("n_shards", "shard_seed", "shard_tenant_ids")
+               if k not in manifest]
+    if missing:
+        raise ValueError(
+            f"shard manifest at {path} is missing required keys {missing}; "
+            "refusing to restore under an unverifiable shard plan")
+    return manifest

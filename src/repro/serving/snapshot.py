@@ -163,6 +163,23 @@ class SnapshotBuffer:
             self._pending = jnp.zeros_like(self._pending)
             return self._front
 
+    def adopt_published(self, sketch: Any, epoch: int, n_edges: int) -> Snapshot:
+        """Install an externally-produced published front (runtime/backend.py).
+
+        The process execution backend folds batches into a sketch living in
+        a child process and ships each published epoch back as a pytree of
+        host arrays; this swaps that state in as the new front WITHOUT
+        touching the local delta (which stays empty — the remote side owns
+        the write path).  Same isolation contract as ``publish``: readers
+        holding the previous front keep a consistent immutable epoch.  The
+        caller must adopt epochs in publication order (the backend's FIFO
+        result pipe guarantees that).
+        """
+        with self._lock:
+            self._front = Snapshot(self._tenant_id, int(epoch),
+                                   sketch, self._kind, int(n_edges))
+            return self._front
+
     # ------------------------------------------------------------ checkpoint
     def state(self) -> dict:
         """Mutually-consistent (front, delta, pending, epoch, n_edges) view.

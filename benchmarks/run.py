@@ -17,6 +17,11 @@ Prints ``name,us_per_call,derived`` CSV rows (plus figure tables to stderr).
   serve_process     — thread vs process runtime backends at K=1/2/4
                       (emits BENCH_process.json; same sharded hard gates,
                       process K4/K1 scaling recorded vs cpu_count)
+  serve_net         — network transport tier (emits BENCH_net.json):
+                      socket vs process ingest edges/s under the same
+                      sharded hard gates, TCP query front-end QPS/p50/p99
+                      at 1/2/4 connections, and an overload cell gated on
+                      nonzero accounted shed with bounded accepted-p99
 
 Usage: PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig7_are]
 """
@@ -556,6 +561,214 @@ def serve_process(scale: float, quick: bool,
          f"{record['process_k4_over_k1']}x on {os.cpu_count()} cores)")
 
 
+def serve_net(scale: float, quick: bool,
+              out_path: str = "BENCH_net.json") -> None:
+    """Network transport tier -> BENCH_net.json (DESIGN.md §Net).
+
+    Three cells in one artifact:
+
+      * ingest transport — the sharded serving bench on the ``socket``
+        runtime backend (TCP self-host loopback workers) next to the
+        ``process`` backend (mp pipes), with EVERY sharded hard gate
+        enforced for both: cross-shard conservation, merged-vs-replay
+        bit-exactness, engine==direct, dedicated-drain conservation.
+        Same counters over a socket or a pipe, or the bench dies.
+      * front-end — QPS/p50/p99 of the TCP query server at 1/2/4 client
+        connections with the OFFERED load held constant (the loadgen's
+        arrival clock is global), over one warmed live tenant.
+      * overload — tiny ``max_inflight`` against a much higher offered
+        rate: admission control must shed (nonzero, accounted — offered ==
+        accepted + shed + errors on the client AND offered == admitted +
+        shed on the server) while accepted-request p99 stays bounded
+        instead of collapsing into queueing.
+    """
+    import json as _json
+
+    from benchmarks.serve_bench import run_serve_bench_sharded
+    from repro.net.query_server import QueryServer
+    from repro.serving import (
+        QueryEngine,
+        SketchRegistry,
+        mix_for_sketch,
+        synth_requests,
+        warm_bucket_ladder,
+    )
+    from repro.serving.loadgen import NetLoadGen
+
+    _log("\n== serve_net (socket ingest transport + TCP query front-end) ==")
+
+    # ---- cell 1: socket vs process ingest transport, gates on -------------
+    transports: dict[str, dict] = {}
+    for backend in ("process", "socket"):
+        rec = run_serve_bench_sharded(
+            scale=scale, n_requests=400 if quick else 1500,
+            target_qps=1000.0 if quick else 2000.0, n_shards=2,
+            runtime_backend=backend)
+        if not rec["conservation_ok"]:
+            raise RuntimeError(
+                f"serve_net {backend} transport: cross-shard conservation "
+                f"failed (published {rec['published_edges']} + dropped "
+                f"{rec['dropped_edges']} != stream "
+                f"{rec['stream_total_edges']})")
+        if rec["sharded_exact"] is False:
+            raise RuntimeError(
+                f"serve_net {backend} transport: merged shard sketches "
+                "diverged from the single-sketch replay — the transport "
+                "changed what was counted")
+        if not rec["engine_matches_direct"]:
+            raise RuntimeError(
+                f"serve_net {backend} transport: scatter/gather engine "
+                "diverged from the sharded direct oracle")
+        if not rec["dedicated_ingest_conserved"]:
+            raise RuntimeError(
+                f"serve_net {backend} transport: dedicated ingest drain "
+                "lost edges")
+        transports[backend] = {
+            "ingest_edges_per_s": rec["ingest_edges_per_s_dedicated"],
+            "ingest_edges_per_s_during_serve":
+                rec["ingest_edges_per_s_during_serve"],
+            "achieved_qps": rec["achieved_qps"],
+            "p99_ms": rec["p99_ms"],
+            "conservation_ok": rec["conservation_ok"],
+            "sharded_exact": rec["sharded_exact"],
+        }
+        _log(f"{backend:8s} transport: "
+             f"{rec['ingest_edges_per_s_dedicated']:,.0f} ingest edges/s "
+             f"(dedicated), p99 {rec['p99_ms']} ms")
+        _emit(f"net/ingest_{backend}",
+              1e6 / max(rec["ingest_edges_per_s_dedicated"], 1e-9),
+              f"ingest_eps={rec['ingest_edges_per_s_dedicated']};"
+              f"qps={rec['achieved_qps']};p99_ms={rec['p99_ms']}")
+
+    # ---- warmed live tenant + engine shared by cells 2 and 3 --------------
+    registry = SketchRegistry(depth=5, scale=scale)
+    tenant = registry.open("cit-HepPh", "kmatrix", 256, seed=0)
+    tenant.step(min(8, max(1, tenant.stream.num_batches // 2)))
+    tenant.publish()
+    n_nodes = tenant.stream.spec.n_nodes
+    engine = QueryEngine()
+    mix = mix_for_sketch("kmatrix")
+    kw = dict(n_nodes=n_nodes, heavy_universe=min(n_nodes, 1 << 14),
+              heavy_threshold=100.0)
+    warm_bucket_ladder(engine, tenant.snapshot,
+                       synth_requests(256, mix, seed=99, **kw))
+
+    # ---- cell 2: QPS/p50/p99 vs connection count --------------------------
+    n_req = 600 if quick else 2400
+    qps = 500.0 if quick else 1000.0
+    requests = synth_requests(n_req, mix, seed=11, **kw)
+    conn_rows: dict[str, dict] = {}
+    server = QueryServer(engine, lambda: tenant.snapshot,
+                         info={"n_nodes": n_nodes, "kind": "kmatrix",
+                               "dataset": "cit-HepPh"}).start()
+    try:
+        for conns in (1, 2, 4):
+            rep = NetLoadGen(target_qps=qps, connections=conns,
+                             batch_max=64).run(server.address, requests)
+            if rep.errors:
+                raise RuntimeError(
+                    f"serve_net conns={conns}: {rep.errors} server-side "
+                    "errors — QPS for failed answers is meaningless")
+            if rep.accepted != rep.n_requests:
+                raise RuntimeError(
+                    f"serve_net conns={conns}: {rep.shed} requests shed "
+                    "under nominal load (max_inflight=4096) — admission "
+                    "control is rejecting work it has room for")
+            if rep.last_epoch is None:
+                raise RuntimeError(
+                    f"serve_net conns={conns}: answers carried no epoch "
+                    "stamp — staleness contract broken")
+            conn_rows[str(conns)] = {
+                "achieved_qps": round(rep.achieved_qps, 1),
+                "p50_ms": round(rep.p50_ms, 3),
+                "p99_ms": round(rep.p99_ms, 3),
+                "n_batches": rep.n_batches,
+                "last_epoch": rep.last_epoch,
+            }
+            _log(f"conns={conns}: {rep.achieved_qps:,.0f} qps, "
+                 f"p50 {rep.p50_ms:.2f} ms, p99 {rep.p99_ms:.2f} ms "
+                 f"({rep.n_batches} calls)")
+            _emit(f"net/conns_{conns}", rep.p50_ms * 1e3,
+                  f"qps={rep.achieved_qps:.0f};p50_ms={rep.p50_ms:.3f};"
+                  f"p99_ms={rep.p99_ms:.3f}")
+    finally:
+        server.stop()
+
+    # ---- cell 3: overload — admission control must shed, accounted --------
+    over = QueryServer(engine, lambda: tenant.snapshot, max_inflight=64,
+                       batch_max=32,
+                       info={"n_nodes": n_nodes, "kind": "kmatrix"}).start()
+    try:
+        over_reqs = synth_requests(800 if quick else 2000, mix, seed=23, **kw)
+        rep = NetLoadGen(target_qps=qps * 10, connections=4,
+                         batch_max=64).run(over.address, over_reqs)
+        stats = over.stats()
+    finally:
+        over.stop()
+    if rep.errors:
+        raise RuntimeError(
+            f"serve_net overload: {rep.errors} server-side errors — "
+            "overload must shed at admission, not fail mid-execution")
+    if rep.shed <= 0:
+        raise RuntimeError(
+            "serve_net overload: offered 10x nominal against "
+            "max_inflight=64 and nothing was shed — admission control "
+            "is not engaging")
+    if rep.accepted + rep.shed != rep.n_requests:
+        raise RuntimeError(
+            f"serve_net overload: client accounting leak ({rep.accepted} "
+            f"accepted + {rep.shed} shed != {rep.n_requests} offered)")
+    if stats["offered_requests"] != (stats["admitted_requests"]
+                                     + stats["shed_overload"]
+                                     + stats["shed_rate_limited"]):
+        raise RuntimeError(
+            f"serve_net overload: server admission ledger does not "
+            f"balance ({stats})")
+    if not np.isfinite(rep.p99_ms) or rep.p99_ms > 30_000:
+        raise RuntimeError(
+            f"serve_net overload: accepted-request p99 {rep.p99_ms} ms — "
+            "shedding exists precisely so accepted work stays bounded")
+    if rep.mean_retry_after_ms <= 0:
+        raise RuntimeError(
+            "serve_net overload: rejections carried no Retry-After hint")
+    _log(f"overload: shed {rep.shed}/{rep.n_requests} "
+         f"({rep.shed_rate:.1%}), accepted p99 {rep.p99_ms:.2f} ms, "
+         f"mean retry-after hint {rep.mean_retry_after_ms:.1f} ms")
+    _emit("net/overload", rep.p99_ms * 1e3,
+          f"shed_rate={rep.shed_rate:.4f};p99_ms={rep.p99_ms:.3f};"
+          f"retry_after_ms={rep.mean_retry_after_ms:.1f}")
+
+    record = {
+        "bench": "serve_net",
+        "dataset": "cit-HepPh",
+        "scale": scale,
+        "budget_kb": 256,
+        "depth": 5,
+        "cpu_count": os.cpu_count(),
+        "ingest_transports": transports,
+        "socket_over_process": round(
+            transports["socket"]["ingest_edges_per_s"]
+            / max(transports["process"]["ingest_edges_per_s"], 1e-9), 3),
+        "frontend_offered_qps": qps,
+        "frontend_connections": conn_rows,
+        "overload": {
+            "offered_qps": qps * 10,
+            "max_inflight": 64,
+            "n_requests": rep.n_requests,
+            "accepted": rep.accepted,
+            "shed": rep.shed,
+            "shed_rate": round(rep.shed_rate, 4),
+            "p99_ms": round(rep.p99_ms, 3),
+            "mean_retry_after_ms": round(rep.mean_retry_after_ms, 1),
+            "server_stats": stats,
+        },
+    }
+    with open(out_path, "w") as f:
+        _json.dump(record, f, indent=2)
+    _log(f"wrote {out_path} (socket/process ingest = "
+         f"{record['socket_over_process']}x)")
+
+
 BENCHES = {
     "fig6_build_time": lambda a: fig6_build_time(a.scale),
     "fig7_are": lambda a: fig7_fig8_accuracy(a.scale, a.quick),
@@ -566,6 +779,7 @@ BENCHES = {
     "serve_concurrent": lambda a: serve_concurrent(a.scale, a.quick),
     "serve_sharded": lambda a: serve_sharded(a.scale, a.quick),
     "serve_process": lambda a: serve_process(a.scale, a.quick),
+    "serve_net": lambda a: serve_net(a.scale, a.quick),
 }
 
 

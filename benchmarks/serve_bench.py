@@ -556,17 +556,25 @@ def main() -> None:
                     help="every:N | interval:S | drain[:W]")
     ap.add_argument("--queue-capacity", type=int, default=64)
     ap.add_argument("--runtime-backend", default="thread",
-                    choices=["thread", "process"],
-                    help="execution backend for ingest workers (process = "
-                         "spawn children owning their sketches; needs "
-                         "--concurrent or --shards)")
+                    help="execution backend for ingest workers: thread, "
+                         "process (spawn children owning their sketches), "
+                         "or socket[:HOST:PORT,...] (workers across TCP — "
+                         "self-hosted loopback children, or stream_ingest "
+                         "--listen hosts); process/socket need "
+                         "--concurrent or --shards")
     ap.add_argument("--quick", action="store_true",
                     help="small scale + short run (CI)")
     args = ap.parse_args()
-    if args.runtime_backend == "process" and not (args.concurrent
-                                                  or args.shards):
-        ap.error("--runtime-backend process requires --concurrent or "
-                 "--shards (the plain bench has no background runtime)")
+    _valid_backends = ("thread", "process", "socket")
+    if args.runtime_backend not in _valid_backends \
+            and not args.runtime_backend.startswith("socket:"):
+        ap.error(f"--runtime-backend must be one of {_valid_backends} or "
+                 f"socket:HOST:PORT[,...], got {args.runtime_backend!r}")
+    if args.runtime_backend != "thread" and not (args.concurrent
+                                                 or args.shards):
+        ap.error(f"--runtime-backend {args.runtime_backend} requires "
+                 "--concurrent or --shards (the plain bench has no "
+                 "background runtime)")
     if args.quick:
         args.scale = min(args.scale, 0.1)
         args.n_requests = min(args.n_requests, 1000)

@@ -31,12 +31,24 @@ Two ingest modes share the same tenant, engine and load generator:
       every shard from its own offset.  The summary gains per-shard
       published counts and a cross-shard conservation verdict.
 
+  --serve HOST:PORT       (with --background-ingest) put the engine behind
+      a ``repro.net`` TCP query server with admission control (bounded
+      in-flight budget via --max-inflight, per-tenant token-bucket rate
+      limiting via --tenant-qps) and drive the measurement over real
+      sockets: --connections concurrent open-loop client connections
+      (``NetLoadGen``).  ``--n-requests 0`` serves until SIGTERM/SIGINT
+      instead — the standing front-end a remote
+      ``python -m repro.serving.loadgen --connect`` client can load.
+      Combine with ``--runtime-backend socket:HOST:PORT`` to place the
+      ingest workers on ``stream_ingest --listen`` hosts: a fully
+      networked ingest+serve deployment (DESIGN.md §Net).
+
 Prints a JSON summary line (QPS, p50/p99 latency, epochs) on completion.
 
   python -m repro.launch.query_serve --dataset cit-HepPh --sketch kmatrix \
       --budget-kb 256 --qps 2000 --n-requests 8000 [--scale 0.25] \
       [--background-ingest] [--backpressure drop_oldest] \
-      [--publish-policy interval:0.25]
+      [--publish-policy interval:0.25] [--serve 127.0.0.1:7311]
 """
 from __future__ import annotations
 
@@ -90,12 +102,14 @@ def parse_args(argv=None) -> argparse.Namespace:
                     help="ingest in a worker thread behind a bounded queue; "
                          "queries run truly concurrently")
     ap.add_argument("--runtime-backend", default="thread",
-                    choices=["thread", "process"],
                     help="execution backend for ingest workers: thread "
-                         "(in-process, GIL-shared) or process (spawn "
+                         "(in-process, GIL-shared), process (spawn "
                          "children owning their sketches — K-shard ingest "
-                         "scales past the GIL); requires "
-                         "--background-ingest")
+                         "scales past the GIL), or "
+                         "socket[:HOST:PORT,...] (workers across TCP: "
+                         "self-hosted loopback children, or stream_ingest "
+                         "--listen hosts when addresses are given); "
+                         "requires --background-ingest")
     ap.add_argument("--shards", type=int, default=1,
                     help="serve K hash-band shards: one ingest worker + "
                          "queue per shard, scatter/gather queries "
@@ -118,7 +132,28 @@ def parse_args(argv=None) -> argparse.Namespace:
     ap.add_argument("--restore", action="store_true",
                     help="resume from the latest checkpoint in "
                          "--checkpoint-dir before serving")
+    # ---- network front-end (repro.net) ----
+    ap.add_argument("--serve", default="", metavar="HOST:PORT",
+                    help="serve queries over TCP with admission control; "
+                         "measurement runs through --connections real "
+                         "client connections (requires "
+                         "--background-ingest); --n-requests 0 serves "
+                         "until signalled instead")
+    ap.add_argument("--connections", type=int, default=4,
+                    help="with --serve: concurrent loadgen client "
+                         "connections")
+    ap.add_argument("--max-inflight", type=int, default=4096,
+                    help="with --serve: admission budget — requests queued "
+                         "or executing before fast-reject")
+    ap.add_argument("--tenant-qps", type=float, default=0.0,
+                    help="with --serve: per-tenant token-bucket rate limit "
+                         "(0 = off)")
     args = ap.parse_args(argv)
+    _valid_backends = ("thread", "process", "socket")
+    if args.runtime_backend not in _valid_backends \
+            and not args.runtime_backend.startswith("socket:"):
+        ap.error(f"--runtime-backend must be one of {_valid_backends} or "
+                 f"socket:HOST:PORT[,...], got {args.runtime_backend!r}")
     if not args.background_ingest:
         # these only take effect inside the runtime; silently ignoring them
         # would serve a different run than the one asked for
@@ -131,9 +166,16 @@ def parse_args(argv=None) -> argparse.Namespace:
                              ("--runtime-backend",
                               args.runtime_backend != "thread"),
                              ("--queue-capacity",
-                              args.queue_capacity != 64)]:
+                              args.queue_capacity != 64),
+                             ("--serve", bool(args.serve))]:
             if is_set:
                 ap.error(f"{flag} requires --background-ingest")
+    if not args.serve:
+        for flag, is_set in [("--connections", args.connections != 4),
+                             ("--max-inflight", args.max_inflight != 4096),
+                             ("--tenant-qps", args.tenant_qps != 0.0)]:
+            if is_set:
+                ap.error(f"{flag} requires --serve")
     if args.shards < 1:
         ap.error("--shards must be >= 1")
     if args.shards > 1 and not args.background_ingest:
@@ -193,6 +235,53 @@ def install_graceful_drain(runtime) -> None:
     signal.signal(signal.SIGINT, handler)
 
 
+def run_load(args, engine, snapshot_fn, requests, *, n_nodes: int) -> tuple:
+    """Measurement phase: in-process open loop, or — with ``--serve`` — a
+    TCP query server loaded over ``--connections`` real client connections.
+    Returns ``(report, net_extras)``; ``report`` quacks the same either way
+    (n_requests / achieved_qps / p50_ms / p99_ms)."""
+    if not args.serve:
+        loadgen = OpenLoopLoadGen(target_qps=args.qps,
+                                  batch_max=args.batch_max)
+        return loadgen.run(engine, snapshot_fn, requests), {}
+
+    from repro.net import wire
+    from repro.net.query_server import QueryServer
+    from repro.serving.loadgen import NetLoadGen
+
+    host, port = wire.parse_hostport(args.serve)
+    server = QueryServer(
+        engine, snapshot_fn, host=host, port=port,
+        max_inflight=args.max_inflight, batch_max=args.batch_max,
+        tenant_qps=args.tenant_qps,
+        info={"n_nodes": n_nodes, "kind": args.sketch,
+              "dataset": args.dataset}).start()
+    print(json.dumps({"serving":
+                      f"{server.address[0]}:{server.address[1]}"}),
+          file=sys.stderr, flush=True)
+    try:
+        if args.n_requests <= 0:
+            # standing front-end: serve remote clients until the graceful
+            # drain handler (SIGTERM/SIGINT) exits the process
+            while True:
+                time.sleep(3600)
+        gen = NetLoadGen(target_qps=args.qps, connections=args.connections,
+                         batch_max=args.batch_max)
+        report = gen.run(server.address, requests)
+        stats = server.stats()
+        return report, {
+            "serve": f"{server.address[0]}:{server.address[1]}",
+            "connections": args.connections,
+            "shed": report.shed,
+            "shed_rate": round(report.shed_rate, 4),
+            "mean_retry_after_ms": round(report.mean_retry_after_ms, 3),
+            "answer_epoch": report.last_epoch,
+            "server_stats": stats,
+        }
+    finally:
+        server.stop()
+
+
 def cooperative_serve(args, tenant, engine, requests) -> tuple:
     """PR 1 behaviour: ingest interleaves with query batches, one thread."""
     ingested = [0]
@@ -234,8 +323,9 @@ def background_serve(args, tenant, engine, requests) -> tuple:
     runtime.start(pumps=False)
     runtime.wait_ready()  # process children build their tenants first
     runtime.start_pumps()
-    loadgen = OpenLoopLoadGen(target_qps=args.qps, batch_max=args.batch_max)
-    report = loadgen.run(engine, lambda: tenant.snapshot, requests)
+    report, net_extras = run_load(args, engine, lambda: tenant.snapshot,
+                                  requests,
+                                  n_nodes=tenant.stream.spec.n_nodes)
     mid_metrics = runtime.metrics()[tenant.key.tenant_id]
     runtime.join_pumps()  # finish offering the stream, then drain
     final_report = runtime.stop(drain=True)
@@ -255,6 +345,7 @@ def background_serve(args, tenant, engine, requests) -> tuple:
         "unaccounted_edges": tr["unaccounted_edges"],
         "checkpoints": tr["checkpoints"],
         "worker_state": tr["state"],
+        **net_extras,
     }
     return report, tenant.snapshot, extras
 
@@ -313,8 +404,8 @@ def sharded_main(args) -> None:
     runtime.start(pumps=False)
     runtime.wait_ready()  # process children build their tenants first
     runtime.start_pumps()
-    loadgen = OpenLoopLoadGen(target_qps=args.qps, batch_max=args.batch_max)
-    report = loadgen.run(engine, lambda: tenant.snapshot, requests)
+    report, net_extras = run_load(args, engine, lambda: tenant.snapshot,
+                                  requests, n_nodes=n_nodes)
     mid = runtime.metrics()
     ingest_eps = sum(m["edges_per_s_ewma"] for m in mid.values())
     runtime.join_pumps()
@@ -342,6 +433,7 @@ def sharded_main(args) -> None:
         "dropped_edges": cons["dropped_edges"],
         "stream_total_edges": cons["stream_total_edges"],
         "conservation_ok": cons["conservation_ok"],
+        **net_extras,
         **{f"engine_{k}": v for k, v in engine.stats.items()},
     }
     print(json.dumps(summary))

@@ -8,6 +8,13 @@ paper's own system (examples/quickstart.py is the 60-second version).
   python -m repro.launch.stream_ingest --dataset cit-HepPh --budget-kb 512 \
       --sketch kmatrix --steps-per-ckpt 16 --ckpt-dir /tmp/kmatrix_ckpt \
       [--resume] [--scale 0.25]
+
+Worker-host mode (DESIGN.md §Net): ``--listen HOST:PORT`` turns this
+process into a standing socket-ingest worker host — it serves ingest
+worker sessions for any parent running a ``socket``-backend Runtime
+pointed at this address (``--runtime-backend socket:HOST:PORT`` here or
+in query_serve / serve_bench).  All other pipeline flags are ignored in
+this mode: the tenant spec arrives over the wire in the hello frame.
 """
 from __future__ import annotations
 
@@ -93,6 +100,34 @@ def runtime_main(args) -> None:
                       "ARE": round(are, 4)}))
 
 
+def listen_main(args) -> None:
+    """Standing worker host: serve socket ingest sessions until signalled
+    (or until ``--max-sessions`` sessions completed, for scripted runs)."""
+    import signal as signal_mod
+
+    from repro.net import wire
+    from repro.net.ingest_server import WorkerServer
+
+    host, port = wire.parse_hostport(args.listen)
+    server = WorkerServer(host, port)
+    print(json.dumps({"listening": f"{server.address[0]}:{server.address[1]}",
+                      "max_sessions": args.max_sessions or None}), flush=True)
+
+    def _stop(signum, frame):
+        server.stop()
+
+    signal_mod.signal(signal_mod.SIGTERM, _stop)
+    signal_mod.signal(signal_mod.SIGINT, _stop)
+    server.serve_forever(
+        max_sessions=args.max_sessions or None,
+        idle_timeout_s=args.idle_timeout_s or None)
+    print(json.dumps({"sessions_served": server.sessions_served,
+                      "results": server.session_results}), flush=True)
+    if any(str(r).startswith("aborted") or r == "failed"
+           for r in server.session_results):
+        raise SystemExit(1)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--dataset", default="cit-HepPh")
@@ -116,14 +151,35 @@ def main() -> None:
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--eval-queries", type=int, default=10_000)
     ap.add_argument("--runtime-backend", default="inline",
-                    choices=["inline", "thread", "process"],
                     help="inline: this loop ingests directly (default). "
-                         "thread/process: drive ingest through the "
-                         "repro.runtime worker runtime on that execution "
-                         "backend (pump + bounded queue + conservation "
-                         "accounting; checkpoints use the runtime's "
-                         "worker-state schema under a per-tenant subdir)")
+                         "thread/process/socket[:HOST:PORT,...]: drive "
+                         "ingest through the repro.runtime worker runtime "
+                         "on that execution backend (pump + bounded queue "
+                         "+ conservation accounting; checkpoints use the "
+                         "runtime's worker-state schema under a per-tenant "
+                         "subdir). socket with no address self-hosts a "
+                         "loopback worker; with addresses it dials "
+                         "--listen worker hosts")
+    ap.add_argument("--listen", default="", metavar="HOST:PORT",
+                    help="worker-host mode: serve socket ingest worker "
+                         "sessions at this address instead of running a "
+                         "pipeline (DESIGN.md §Net)")
+    ap.add_argument("--max-sessions", type=int, default=0,
+                    help="with --listen: exit after N completed sessions "
+                         "(0 = serve until signalled)")
+    ap.add_argument("--idle-timeout-s", type=float, default=0.0,
+                    help="with --listen: exit after this long with no live "
+                         "session (0 = wait forever); keeps scripted runs "
+                         "from wedging on a lost parent")
     args = ap.parse_args()
+    valid = ("inline", "thread", "process", "socket")
+    if args.runtime_backend not in valid \
+            and not args.runtime_backend.startswith("socket:"):
+        ap.error(f"--runtime-backend must be one of {valid} or "
+                 f"socket:HOST:PORT[,...], got {args.runtime_backend!r}")
+    if args.listen:
+        listen_main(args)
+        return
     if args.runtime_backend != "inline":
         runtime_main(args)
         return

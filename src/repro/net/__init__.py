@@ -1,0 +1,64 @@
+"""repro.net — the network transport tier (DESIGN.md §Net).
+
+Lets the two serialized runtime seams (``QueueItem``s in, epoch-stamped
+snapshot publications out — see ``runtime/backend.py``) cross host
+boundaries, and puts a front-end query server with admission control in
+front of the batched ``QueryEngine``:
+
+  wire           versioned length-prefixed frames (magic + schema version +
+                 frame type + payload); ONE codec shared by the socket
+                 transport and the process backend's pipes
+  ingest_server  worker-host side: accept a parent connection, rebuild the
+                 tenant from the shipped spec, run the standard
+                 ``IngestWorker`` loop (``stream_ingest --listen``)
+  backend        parent side: ``SocketBackend``/``SocketWorker`` — a third
+                 ``ExecutionBackend`` whose workers live across a TCP
+                 connection (self-hosted loopback child by default)
+  query_server   front-end TCP query server: coalesces concurrent client
+                 requests into the pad-to-bucket batch planner, with a
+                 bounded in-flight budget (fast-reject + Retry-After hint)
+                 and per-tenant token-bucket rate limiting
+
+Heavy submodules are loaded lazily: ``repro.runtime`` imports ``net.wire``
+for the shared codec, and an eager import of ``net.backend`` here would
+close an import cycle back into ``repro.runtime``.
+"""
+from repro.net.wire import (  # noqa: F401  (re-export: the codec is light)
+    MAGIC,
+    WIRE_VERSION,
+    WireError,
+    decode_message,
+    encode_message,
+    recv_message,
+    send_message,
+)
+
+_LAZY = {
+    "SocketBackend": "repro.net.backend",
+    "SocketWorker": "repro.net.backend",
+    "WorkerServer": "repro.net.ingest_server",
+    "serve_worker_session": "repro.net.ingest_server",
+    "QueryServer": "repro.net.query_server",
+    "QueryClient": "repro.net.query_server",
+    "Rejected": "repro.net.query_server",
+}
+
+__all__ = [
+    "MAGIC",
+    "WIRE_VERSION",
+    "WireError",
+    "decode_message",
+    "encode_message",
+    "recv_message",
+    "send_message",
+    *sorted(_LAZY),
+]
+
+
+def __getattr__(name: str):
+    mod = _LAZY.get(name)
+    if mod is None:
+        raise AttributeError(f"module 'repro.net' has no attribute {name!r}")
+    import importlib
+
+    return getattr(importlib.import_module(mod), name)

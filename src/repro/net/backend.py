@@ -1,0 +1,499 @@
+"""Parent-side socket execution backend (DESIGN.md §Net).
+
+``SocketBackend`` is the third ``ExecutionBackend``: the same
+``run_ingest_worker`` loop the process backend runs in a spawn child, but
+across a TCP connection, framed by the shared ``repro.net.wire`` codec.
+Everything the runtime contract demands stays parent-side and
+transport-invariant: the ``BoundedEdgeQueue`` (ALL backpressure / drop /
+spill accounting), ``SnapshotBuffer.adopt_published`` (epoch ordering),
+checkpoint orchestration, and conservation reports.
+
+Two placements per worker:
+
+  self-hosted  (default, no addresses) the parent binds a loopback
+               listener on an ephemeral port and spawns a child process
+               that dials back and serves one worker session — one
+               command, real TCP end-to-end;
+  remote       (``SocketBackend(addresses=[...])`` or the
+               ``"socket:HOST:PORT,..."`` spec) the parent dials
+               ``stream_ingest --listen`` worker hosts, round-robin over
+               the address list.
+
+Lifecycle is hang-free by construction: accept/dial loops poll a cancel
+event (set by ``request_stop`` and ``SocketBackend.shutdown()``, which
+``Runtime.stop()`` invokes before joining), every read/write carries a
+frame deadline, and a dead TCP peer surfaces as a FAILED worker whose
+error carries the last-known accounting — so ``Runtime.stop()`` raises
+``WorkerFailure`` with the final report attached, mirroring the process
+backend's SIGKILL semantics.
+"""
+from __future__ import annotations
+
+import multiprocessing
+import socket
+import threading
+import time
+
+from repro.net import wire
+from repro.net.ingest_server import _selfhost_worker_main
+from repro.runtime.backend import (
+    ExecutionBackend,
+    build_child_spec,
+    dispatch_parent_message,
+)
+from repro.runtime.metrics import WorkerMetrics
+from repro.runtime.worker import CREATED, DRAINING, FAILED, RUNNING, STOPPED
+
+
+class SocketWorker:
+    """Parent-side handle for one ingest worker across a TCP connection.
+
+    Quacks like ``IngestWorker``/``ProcessWorker`` for everything the
+    supervisor touches.  Three parent threads cooperate, exactly as in the
+    process backend: a *starter* establishes the connection (accept or
+    dial) and sends the ``hello`` spec, the *forwarder* moves ``QueueItem``
+    frames from the parent's bounded queue onto the socket, and the
+    *receiver* adopts published epochs into the parent ``SnapshotBuffer``.
+    """
+
+    def __init__(self, tenant, queue, policy, *, address=None,
+                 reservoir=None, checkpoint_dir=None, checkpoint_every=0,
+                 on_publish=None, poll_s=0.05, coalesce_batches=1,
+                 coalesce_target=8192, queue_capacity=64, warm_shapes=True,
+                 child_env=None, ctx=None, connect_timeout_s=300.0,
+                 frame_deadline_s=120.0) -> None:
+        import jax
+
+        self.tenant = tenant
+        self.queue = queue
+        self.on_publish = on_publish
+        self.reservoir = reservoir  # kept live from shipped publish state
+        self.state = CREATED
+        self.error: BaseException | None = None
+        self.error_tb: str | None = None
+        self.base_edges = (tenant.snapshot.n_edges
+                          + tenant.buffer.pending_edges)
+        self.poll_s = poll_s
+        self.frame_deadline_s = frame_deadline_s
+        self.connect_timeout_s = connect_timeout_s
+        self._treedef = jax.tree_util.tree_structure(tenant.snapshot.sketch)
+        self._spec = build_child_spec(
+            tenant, policy, reservoir=reservoir,
+            checkpoint_dir=checkpoint_dir, checkpoint_every=checkpoint_every,
+            poll_s=poll_s, coalesce_batches=coalesce_batches,
+            coalesce_target=coalesce_target, queue_capacity=queue_capacity,
+            warm_shapes=warm_shapes, env=dict(child_env or {}))
+        self.address = address  # None ⇒ self-hosted loopback child
+        self._sock: socket.socket | None = None
+        self._send_lock = threading.Lock()  # forwarder vs checkpoint vs stop
+        self._listener: socket.socket | None = None
+        self.process = None
+        if address is None:
+            self._listener = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+            self._listener.bind(("127.0.0.1", 0))
+            self._listener.listen(1)
+            host, port = self._listener.getsockname()[:2]
+            ctx = ctx or multiprocessing.get_context("spawn")
+            self.process = ctx.Process(
+                target=_selfhost_worker_main,
+                args=(host, port, dict(child_env or {})),
+                daemon=True, name=f"ingest-sock-{tenant.key.tenant_id}")
+        self._ingested_offset = tenant.offset - 1
+        self._last_metrics: dict | None = None
+        self._fallback_metrics = WorkerMetrics()
+        self._ready = threading.Event()
+        self._connected = threading.Event()
+        self._done = threading.Event()
+        self._stop_event = threading.Event()
+        self._abort_connect = threading.Event()
+        self._fail_lock = threading.Lock()
+        self._drain = True
+        self._hard_stop = False
+        self._started = False
+        self._ckpt_lock = threading.Lock()
+        self._ckpt_event = threading.Event()
+        self._ckpt_result: dict | None = None
+
+    # -------------------------------------------------------------- lifecycle
+    def start(self) -> None:
+        """Non-blocking: connection establishment happens in a starter
+        thread so ``Runtime.start()`` brings K workers up concurrently."""
+        self._started = True
+        self.state = RUNNING
+        threading.Thread(target=self._connect_and_attach, daemon=True,
+                         name=f"sock-{self.tenant.key.tenant_id}-dial").start()
+
+    def _accept_selfhost(self) -> socket.socket:
+        self.process.start()
+        self._listener.settimeout(0.5)
+        deadline = time.monotonic() + self.connect_timeout_s
+        while time.monotonic() < deadline:
+            if self._abort_connect.is_set():
+                raise ConnectionAbortedError(
+                    "worker accept cancelled by stop/shutdown")
+            try:
+                conn, _ = self._listener.accept()
+            except socket.timeout:
+                if not self.process.is_alive():
+                    raise ConnectionError(
+                        "self-hosted socket worker died before dialing back "
+                        f"(exitcode={self.process.exitcode})") from None
+                continue
+            except OSError as exc:
+                raise ConnectionAbortedError(
+                    f"worker listener closed before the worker connected "
+                    f"({exc!r})") from exc
+            conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            return conn
+        raise TimeoutError(
+            f"self-hosted worker did not dial back within "
+            f"{self.connect_timeout_s}s")
+
+    def _connect_and_attach(self) -> None:
+        try:
+            if self.address is None:
+                sock = self._accept_selfhost()
+            else:
+                sock = wire.connect_with_retry(
+                    self.address, deadline_s=self.connect_timeout_s,
+                    stop=self._abort_connect)
+            self.close_listener()  # one peer per worker; stop accepting
+            with self._send_lock:
+                wire.send_message(sock, ("hello", self._spec),
+                                  deadline_s=self.frame_deadline_s)
+            self._sock = sock
+        except BaseException as exc:
+            import traceback
+
+            if self._hard_stop or (self._stop_event.is_set()
+                                   and self._abort_connect.is_set()):
+                self.state = STOPPED  # stop cancelled the dial; not a crash
+            else:
+                self.error = exc
+                self.error_tb = traceback.format_exc()
+                self.state = FAILED
+            self.close_transport()
+            self._ready.set()
+            self._ckpt_event.set()
+            self._done.set()
+            return
+        self._connected.set()
+        if self._hard_stop:  # killed while dialing; tear the link down
+            self.close_transport()
+            self._finalize_dead_peer(None)
+            return
+        threading.Thread(target=self._receive_loop, daemon=True,
+                         name=f"sock-{self.tenant.key.tenant_id}-rcv").start()
+        threading.Thread(target=self._forward_loop, daemon=True,
+                         name=f"sock-{self.tenant.key.tenant_id}-fwd").start()
+
+    def wait_ready(self, timeout: float = 300.0) -> bool:
+        ok = self._ready.wait(timeout)
+        if self.state == FAILED:
+            raise RuntimeError(
+                f"socket worker for {self.tenant.key.tenant_id} failed "
+                f"during startup: {self.error}\n{self.error_tb or ''}")
+        return ok
+
+    def request_stop(self, drain: bool = True) -> None:
+        self._drain = drain
+        self._stop_event.set()
+        if drain:
+            if self.state == RUNNING:
+                self.state = DRAINING
+        else:
+            # crash-like hard stop, PR 5 SIGKILL semantics: abandon
+            # in-queue and in-flight work; restore replays from checkpoint
+            self._hard_stop = True
+            self._abort_connect.set()
+            self.queue.close()
+            self.close_transport()
+            if self.process is not None and self.process.is_alive():
+                self.process.terminate()
+            if not self._connected.is_set():
+                self._done.set()  # starter owns the rest of the teardown
+
+    def join(self, timeout: float | None = None) -> None:
+        deadline = None if timeout is None else time.monotonic() + timeout
+
+        def remaining(default=None):
+            if deadline is None:
+                return default
+            return max(deadline - time.monotonic(), 0.01)
+
+        self._done.wait(timeout=remaining())
+        if self.process is not None and self.process.is_alive():
+            self.process.join(timeout=remaining(60.0))
+        self.close_transport()
+
+    def is_alive(self) -> bool:
+        return self._started and not self._done.is_set()
+
+    # -------------------------------------------------------- transport utils
+    def close_listener(self) -> None:
+        """Close the self-host accept listener (idempotent).  Called once a
+        peer is attached, by hard stops, and by ``SocketBackend.shutdown()``
+        so ``Runtime.stop()`` never joins against a worker stuck in
+        accept."""
+        if self._listener is not None:
+            try:
+                self._listener.close()
+            except OSError:
+                pass
+
+    def close_transport(self) -> None:
+        self.close_listener()
+        if self._sock is not None:
+            try:
+                self._sock.close()
+            except OSError:
+                pass
+
+    def abort_connect(self) -> None:
+        """Cancel a pending dial/accept (used by backend shutdown)."""
+        self._abort_connect.set()
+
+    def _accounting_tail(self) -> str:
+        m = self._last_metrics or {}
+        return ("last-known accounting: "
+                f"ingested_edges={m.get('ingested_edges', 0)}, "
+                f"ingested_batches={m.get('ingested_batches', 0)}, "
+                f"published_epochs={m.get('published_epochs', 0)}, "
+                f"epoch={self.tenant.epoch}, "
+                f"ingested_offset={self._ingested_offset}")
+
+    def _finalize_dead_peer(self, exc: BaseException | None) -> None:
+        """The TCP peer is gone without a terminal message (or we tore it
+        down).  Mirrors ``ProcessWorker._finalize_death``: hard stops read
+        as STOPPED, anything else is a FAILED worker whose error carries
+        the last-known accounting so ``WorkerFailure.report`` plus this
+        message tell the whole story."""
+        with self._fail_lock:
+            if self._done.is_set():
+                return
+            if self._hard_stop:
+                self.state = STOPPED
+            else:
+                detail = f" ({exc!r})" if exc is not None else ""
+                self.error = ConnectionError(
+                    f"socket worker for {self.tenant.key.tenant_id} lost its "
+                    f"TCP peer{detail}; {self._accounting_tail()}")
+                self.error_tb = None
+                self.state = FAILED
+            self.close_transport()
+            if self.process is not None and self.process.is_alive():
+                self.process.terminate()
+            self._ready.set()
+            self._ckpt_event.set()
+            self._done.set()
+
+    def _send(self, msg) -> None:
+        with self._send_lock:
+            wire.send_message(self._sock, msg,
+                              deadline_s=self.frame_deadline_s)
+
+    # -------------------------------------------------------------- transport
+    def _forward_loop(self) -> None:
+        while not self._ready.wait(timeout=0.1):
+            if self._done.is_set() or self._hard_stop:
+                return
+        try:
+            while True:
+                if self._done.is_set() or self._hard_stop:
+                    return
+                item = self.queue.get(timeout=self.poll_s)
+                if item is None:
+                    if (self._stop_event.is_set() and self._drain
+                            and self.queue.depth() == 0):
+                        break
+                    continue
+                self._send(("item", item.offset, item.src, item.dst,
+                            item.weight, item.n_edges))
+            # parent queue drained: graceful-stop sentinel; the terminal
+            # `stopped` reply (which the receiver turns into _done) is sent
+            # only after the remote worker joined, so every published epoch
+            # has already crossed back FIFO before join() returns
+            if not (self._done.is_set() or self._hard_stop):
+                self._send(("stop", True))
+        except (ConnectionError, TimeoutError, OSError) as exc:
+            self._finalize_dead_peer(exc)
+
+    def _receive_loop(self) -> None:
+        while True:
+            try:
+                msg = wire.recv_message(
+                    self._sock, poll_s=0.2,
+                    frame_deadline_s=self.frame_deadline_s)
+            except (ConnectionError, TimeoutError, OSError,
+                    wire.WireError) as exc:
+                # TCP delivers everything the peer flushed before dying, so
+                # unlike the process pipe there is no tail left to adopt
+                self._finalize_dead_peer(exc)
+                return
+            if msg is None:
+                if self._done.is_set():
+                    return
+                continue
+            if not self._handle_guarded(msg):
+                return
+            if self._done.is_set():
+                return
+
+    def _handle_guarded(self, msg) -> bool:
+        """Parent-side dispatch failure (e.g. on_publish raising) mirrors
+        ProcessWorker: fail the handle, tear the link down, ALWAYS set
+        ``_done`` so join() can never hang on a swallowed error."""
+        try:
+            dispatch_parent_message(self, msg)
+            return True
+        except BaseException as exc:
+            import traceback
+
+            with self._fail_lock:
+                if not self._done.is_set():
+                    self.error = exc
+                    self.error_tb = traceback.format_exc()
+                    self.state = FAILED
+                    self.close_transport()
+                    if self.process is not None and self.process.is_alive():
+                        self.process.terminate()
+                    self._ready.set()
+                    self._ckpt_event.set()
+                    self._done.set()
+            return False
+
+    # ------------------------------------------------------------- checkpoint
+    def checkpoint(self, timeout: float = 300.0) -> str:
+        """Ask the remote worker for a synchronous checkpoint; returns its
+        path (which is only meaningful on a shared filesystem — for the
+        loopback self-host placement it always is)."""
+        with self._ckpt_lock:
+            if self._done.is_set() or not self._connected.is_set():
+                raise RuntimeError(
+                    f"socket worker for {self.tenant.key.tenant_id} is not "
+                    "connected; cannot checkpoint")
+            self._ckpt_event.clear()
+            self._ckpt_result = None
+            try:
+                self._send(("checkpoint",))
+            except (ConnectionError, TimeoutError, OSError) as exc:
+                self._finalize_dead_peer(exc)
+                raise RuntimeError(
+                    f"socket worker for {self.tenant.key.tenant_id} lost "
+                    "its peer; cannot checkpoint") from exc
+            if not self._ckpt_event.wait(timeout):
+                raise TimeoutError(
+                    "remote worker did not acknowledge checkpoint")
+            res = self._ckpt_result
+        if res is None:  # terminal state raced the request
+            raise RuntimeError(
+                f"socket worker for {self.tenant.key.tenant_id} stopped "
+                f"before checkpointing (state={self.state})")
+        if "error" in res:
+            raise RuntimeError(f"remote checkpoint failed: {res['error']}")
+        return res["path"]
+
+    # ---------------------------------------------------------------- reports
+    @property
+    def ingested_edges(self) -> int:
+        return int((self._last_metrics or {}).get("ingested_edges", 0))
+
+    def health(self) -> dict:
+        return {
+            "state": self.state,
+            "alive": self.is_alive(),
+            "error": repr(self.error) if self.error else None,
+            "epoch": self.tenant.epoch,
+            "ingested_offset": self._ingested_offset,
+            "queue_depth": self.queue.depth(),
+            "peer": (self.address if self.address is not None
+                     else ("self-host",
+                           self.process.pid if self.process else None)),
+        }
+
+    def metrics_snapshot(self) -> dict:
+        qstats = self.queue.stats()
+        if self._last_metrics is None:
+            m = self._fallback_metrics.snapshot(
+                queue_stats=qstats, state=self.state,
+                epoch=self.tenant.epoch)
+            child_depth = 0
+        else:
+            m = dict(self._last_metrics)
+            child_depth = int(m.get("queue_depth", 0))
+        # queue accounting is parent-authoritative, same as every backend
+        m["state"] = self.state
+        m["epoch"] = self.tenant.epoch
+        m["queue_depth"] = qstats["depth"] + child_depth
+        m["ingest_lag_batches"] = m["queue_depth"]
+        m["dropped_batches"] = qstats["dropped_batches"]
+        m["dropped_edges"] = qstats["dropped_edges"]
+        m["spilled_batches"] = qstats["spilled_batches"]
+        m["max_queue_depth"] = qstats["max_depth_seen"]
+        m["peer"] = (f"{self.address[0]}:{self.address[1]}"
+                     if self.address is not None else "self-host")
+        return m
+
+
+class SocketBackend(ExecutionBackend):
+    """Workers across TCP: self-hosted loopback children by default, or
+    ``stream_ingest --listen`` hosts via ``addresses``."""
+
+    name = "socket"
+    remote = True
+
+    def __init__(self, *, addresses=None, warm_shapes: bool = True,
+                 child_env: dict | None = None, mp_context: str = "spawn",
+                 connect_timeout_s: float = 300.0,
+                 frame_deadline_s: float = 120.0) -> None:
+        self.addresses = list(addresses) if addresses else None
+        self._next_addr = 0
+        self.warm_shapes = warm_shapes
+        self.child_env = dict(child_env or {})
+        self._ctx = multiprocessing.get_context(mp_context)
+        self.connect_timeout_s = connect_timeout_s
+        self.frame_deadline_s = frame_deadline_s
+        self._workers: list[SocketWorker] = []
+
+    @classmethod
+    def from_spec(cls, spec: str) -> "SocketBackend":
+        """``"socket"`` (self-host) or ``"socket:HOST:PORT[,HOST:PORT...]"``."""
+        if spec == "socket":
+            return cls()
+        body = spec[len("socket:"):]
+        addresses = [wire.parse_hostport(part)
+                     for part in body.split(",") if part]
+        if not addresses:
+            raise ValueError(f"no worker addresses in backend spec {spec!r}")
+        return cls(addresses=addresses)
+
+    def make_worker(self, tenant, queue, policy, *, reservoir=None,
+                    checkpoint_dir=None, checkpoint_every=0, on_publish=None,
+                    poll_s=0.05, coalesce_batches=1, coalesce_target=8192,
+                    queue_capacity=64):
+        address = None
+        if self.addresses is not None:
+            address = self.addresses[self._next_addr % len(self.addresses)]
+            self._next_addr += 1
+        worker = SocketWorker(
+            tenant, queue, policy, address=address, reservoir=reservoir,
+            checkpoint_dir=checkpoint_dir, checkpoint_every=checkpoint_every,
+            on_publish=on_publish, poll_s=poll_s,
+            coalesce_batches=coalesce_batches,
+            coalesce_target=coalesce_target, queue_capacity=queue_capacity,
+            warm_shapes=self.warm_shapes, child_env=self.child_env,
+            ctx=self._ctx, connect_timeout_s=self.connect_timeout_s,
+            frame_deadline_s=self.frame_deadline_s)
+        self._workers.append(worker)
+        return worker
+
+    def shutdown(self) -> None:
+        """Close listeners and cancel pending dials so no worker can sit in
+        accept/connect while ``Runtime.stop()`` waits on joins.  Established
+        connections are left alone — draining workers still need them."""
+        for w in self._workers:
+            w.abort_connect()
+            if w._connected.is_set():
+                w.close_listener()
+            # not yet connected: the starter thread observes the cancel and
+            # finalizes the handle itself (listener close included)

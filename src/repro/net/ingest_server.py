@@ -1,0 +1,161 @@
+"""Worker-host side of the socket ingest transport (DESIGN.md §Net).
+
+A worker session is the parent's ``run_ingest_worker`` loop driven over a
+TCP connection instead of a multiprocessing pipe: the parent dials in (or
+a self-hosted child dials back), sends a ``hello`` frame carrying the
+picklable ``_ChildSpec``, and from then on the stream carries exactly the
+process-backend message kinds (``item`` in; ``ready`` / ``publish`` /
+``metrics`` / ``checkpointed`` / ``stopped`` / ``failed`` out).
+
+``WorkerServer`` is the standing flavour (``stream_ingest --listen
+HOST:PORT``): it accepts any number of parent connections, one worker
+session per connection, each in its own thread — so one worker host can
+hold several shards of one parent, or shards of several parents.
+``_selfhost_worker_main`` is the loopback flavour the default
+``SocketBackend`` uses so a single command still exercises the full TCP
+path end-to-end.
+
+Deadline discipline (no hangs by construction): the accept loop polls so
+``stop()`` lands within a poll tick, a connection that never says hello is
+dropped after ``hello_timeout_s``, and every in-session read/write carries
+the wire layer's frame deadline.
+"""
+from __future__ import annotations
+
+import signal
+import socket
+import threading
+import time
+
+from repro.net import wire
+
+
+def serve_worker_session(conn: socket.socket, *,
+                         hello_timeout_s: float = 300.0,
+                         frame_deadline_s: float = 120.0) -> str:
+    """Run one ingest-worker session over an established connection.
+
+    Blocks until the parent stops the worker (returns ``"stopped"``), the
+    worker fails (``"failed"``), or the transport dies.  The jax runtime
+    (and the tenant) is built lazily inside ``run_ingest_worker`` from the
+    spec the ``hello`` frame ships.
+    """
+    from repro.runtime.backend import run_ingest_worker
+
+    conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+    send_lock = threading.Lock()  # publish callback vs loop share the socket
+
+    def recv(timeout_s: float):
+        return wire.recv_message(conn, poll_s=timeout_s,
+                                 frame_deadline_s=frame_deadline_s)
+
+    def send(msg) -> None:
+        with send_lock:
+            wire.send_message(conn, msg, deadline_s=frame_deadline_s)
+
+    deadline = time.monotonic() + hello_timeout_s
+    hello = None
+    while hello is None:
+        if time.monotonic() > deadline:
+            raise TimeoutError(
+                f"no hello frame within {hello_timeout_s}s; dropping peer")
+        hello = recv(0.5)
+    if hello[0] != "hello":
+        raise wire.WireError(
+            f"expected a hello frame to open a worker session, got {hello[0]!r}")
+    return run_ingest_worker(hello[1], recv, send)
+
+
+def _selfhost_worker_main(host: str, port: int, env: dict) -> None:
+    """Child entry for the self-hosted (loopback) socket worker: dial the
+    parent's per-worker listener and serve one session.  Spawn-safe."""
+    signal.signal(signal.SIGINT, signal.SIG_IGN)  # parent orchestrates drains
+    import os
+
+    os.environ.update(env)  # before jax initializes (spec.env re-applies)
+    sock = wire.connect_with_retry((host, port), deadline_s=60.0)
+    try:
+        serve_worker_session(sock)
+    finally:
+        try:
+            sock.close()
+        except OSError:
+            pass
+
+
+class WorkerServer:
+    """Standing worker host: accept parent connections, one session each."""
+
+    def __init__(self, host: str = "127.0.0.1", port: int = 0, *,
+                 hello_timeout_s: float = 300.0,
+                 frame_deadline_s: float = 120.0) -> None:
+        self._listener = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        self._listener.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        self._listener.bind((host, port))
+        self._listener.listen(64)
+        self.address: tuple[str, int] = self._listener.getsockname()[:2]
+        self.hello_timeout_s = hello_timeout_s
+        self.frame_deadline_s = frame_deadline_s
+        self._stop = threading.Event()
+        self._sessions: list[threading.Thread] = []
+        self.sessions_served = 0
+        self.session_results: list[str] = []
+        self._lock = threading.Lock()
+
+    def _run_session(self, conn: socket.socket, peer) -> None:
+        try:
+            status = serve_worker_session(
+                conn, hello_timeout_s=self.hello_timeout_s,
+                frame_deadline_s=self.frame_deadline_s)
+        except (ConnectionError, TimeoutError, OSError, wire.WireError) as exc:
+            # a dead/misbehaving parent ends its own session only; the
+            # parent side is where it surfaces as WorkerFailure
+            status = f"aborted: {exc!r}"
+        finally:
+            try:
+                conn.close()
+            except OSError:
+                pass
+        with self._lock:
+            self.sessions_served += 1
+            self.session_results.append(status)
+
+    def serve_forever(self, *, max_sessions: int | None = None,
+                      idle_timeout_s: float | None = None) -> None:
+        """Accept until ``stop()``; optionally exit after ``max_sessions``
+        sessions COMPLETE or after ``idle_timeout_s`` with no live session
+        (both for scripted/CI runs so a lost parent can't wedge the host)."""
+        self._listener.settimeout(0.25)
+        idle_since = time.monotonic()
+        while not self._stop.is_set():
+            self._sessions = [t for t in self._sessions if t.is_alive()]
+            if max_sessions is not None and not self._sessions \
+                    and self.sessions_served >= max_sessions:
+                break
+            if self._sessions:
+                idle_since = time.monotonic()
+            elif idle_timeout_s is not None \
+                    and time.monotonic() - idle_since > idle_timeout_s:
+                break
+            try:
+                conn, peer = self._listener.accept()
+            except socket.timeout:
+                continue
+            except OSError:
+                break  # listener closed under us by stop()
+            t = threading.Thread(target=self._run_session, args=(conn, peer),
+                                 daemon=True,
+                                 name=f"worker-session-{peer[0]}:{peer[1]}")
+            self._sessions.append(t)
+            t.start()
+        self.close()
+
+    def stop(self) -> None:
+        self._stop.set()
+        self.close()
+
+    def close(self) -> None:
+        try:
+            self._listener.close()
+        except OSError:
+            pass

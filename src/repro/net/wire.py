@@ -1,0 +1,211 @@
+"""Versioned length-prefixed wire protocol (DESIGN.md §Net).
+
+One codec, two transports.  Every message that crosses a worker boundary —
+whether over the process backend's multiprocessing pipe or a TCP socket —
+is framed as::
+
+    MAGIC(4) | WIRE_VERSION(u16) | FRAME_TYPE(u16) | LENGTH(u32) | PAYLOAD
+
+with the payload a pickled message tuple ``(kind, ...)`` using exactly the
+serialization the process backend has always shipped (numpy leaves for
+``QueueItem`` batches and snapshot publications).  The header exists so a
+version skew or a torn stream fails as a loud :class:`WireError` naming the
+mismatch instead of a pickle-level crash deep inside a worker.
+
+Deadline discipline (satellite: no hangs by construction): the socket
+receive path separates *idle* from *mid-frame* waiting.  ``recv_message``
+polls up to ``poll_s`` for the first byte and returns ``None`` if the peer
+is merely quiet, but once a frame has started the remainder must arrive
+within ``frame_deadline_s`` or the read raises — a peer that wedges halfway
+through a frame can never hang its reader.
+"""
+from __future__ import annotations
+
+import pickle
+import socket
+import struct
+import time
+
+MAGIC = b"KMTX"
+WIRE_VERSION = 1
+
+_HEADER = struct.Struct(">4sHHI")
+HEADER_SIZE = _HEADER.size
+
+# A 256 KB sketch budget times a handful of leaves plus pickling overhead is
+# well under a megabyte; 1 GiB is a generous ceiling that still catches a
+# corrupt length field before it turns into an absurd allocation.
+MAX_PAYLOAD = 1 << 30
+
+# Frame types are part of the protocol: an unknown kind fails at encode time
+# on the sender, and a type/kind disagreement fails at decode time on the
+# receiver (it means the stream is torn or the peer speaks another schema).
+FRAME_TYPES: dict[str, int] = {
+    # worker ingest transport (same kinds the process backend uses)
+    "hello": 1,
+    "ready": 2,
+    "item": 3,
+    "publish": 4,
+    "metrics": 5,
+    "checkpoint": 6,
+    "checkpointed": 7,
+    "stop": 8,
+    "stopped": 9,
+    "failed": 10,
+    # query front-end
+    "info_req": 20,
+    "info": 21,
+    "query": 22,
+    "result": 23,
+    "reject": 24,
+    "error": 25,
+    # liveness
+    "ping": 30,
+    "pong": 31,
+}
+_KIND_BY_TYPE = {v: k for k, v in FRAME_TYPES.items()}
+
+
+class WireError(ValueError):
+    """A frame violated the protocol (bad magic/version/type/length)."""
+
+
+def encode_message(msg: tuple) -> bytes:
+    """Frame a ``(kind, ...)`` message tuple as header + pickled payload."""
+    if not isinstance(msg, tuple) or not msg or not isinstance(msg[0], str):
+        raise WireError(f"wire messages are ('kind', ...) tuples, got {type(msg).__name__}")
+    ftype = FRAME_TYPES.get(msg[0])
+    if ftype is None:
+        raise WireError(f"unknown wire message kind {msg[0]!r}; known kinds: {sorted(FRAME_TYPES)}")
+    payload = pickle.dumps(msg, protocol=pickle.HIGHEST_PROTOCOL)
+    if len(payload) > MAX_PAYLOAD:
+        raise WireError(f"payload of {len(payload)} bytes exceeds MAX_PAYLOAD={MAX_PAYLOAD}")
+    return _HEADER.pack(MAGIC, WIRE_VERSION, ftype, len(payload)) + payload
+
+
+def decode_header(header: bytes) -> tuple[str, int]:
+    """Validate a frame header; returns ``(kind, payload_length)``."""
+    if len(header) != HEADER_SIZE:
+        raise WireError(f"short frame header: got {len(header)} bytes, need {HEADER_SIZE}")
+    magic, version, ftype, length = _HEADER.unpack(header)
+    if magic != MAGIC:
+        raise WireError(f"bad magic {magic!r} (expected {MAGIC!r}): not a kmatrix wire stream")
+    if version != WIRE_VERSION:
+        raise WireError(
+            f"wire schema version mismatch: peer speaks v{version}, this build speaks v{WIRE_VERSION}")
+    kind = _KIND_BY_TYPE.get(ftype)
+    if kind is None:
+        raise WireError(f"unknown frame type {ftype}")
+    if length > MAX_PAYLOAD:
+        raise WireError(f"frame length {length} exceeds MAX_PAYLOAD={MAX_PAYLOAD}")
+    return kind, length
+
+
+def decode_message(buf: bytes) -> tuple:
+    """Inverse of :func:`encode_message`; loud on any header/body mismatch."""
+    kind, length = decode_header(buf[:HEADER_SIZE])
+    body = buf[HEADER_SIZE:]
+    if len(body) != length:
+        raise WireError(
+            f"truncated frame: header promises {length} payload bytes, got {len(body)}")
+    try:
+        msg = pickle.loads(body)
+    except Exception as exc:  # noqa: BLE001 — surface as protocol error
+        raise WireError(f"undecodable {kind!r} payload: {exc!r}") from exc
+    if not isinstance(msg, tuple) or not msg or msg[0] != kind:
+        got = msg[0] if isinstance(msg, tuple) and msg else type(msg).__name__
+        raise WireError(f"frame type says {kind!r} but payload says {got!r}")
+    return msg
+
+
+# ---------------------------------------------------------------------------
+# socket transport
+
+
+def send_message(sock: socket.socket, msg: tuple, *,
+                 deadline_s: float = 120.0) -> None:
+    """Frame and send ``msg``; raises ``TimeoutError`` past ``deadline_s``."""
+    sock.settimeout(deadline_s)
+    try:
+        sock.sendall(encode_message(msg))
+    except socket.timeout as exc:
+        raise TimeoutError(
+            f"send of {msg[0]!r} frame did not complete within {deadline_s}s") from exc
+
+
+def _recv_exact(sock: socket.socket, n: int, deadline: float,
+                what: str) -> bytes:
+    chunks: list[bytes] = []
+    got = 0
+    while got < n:
+        remaining = deadline - time.monotonic()
+        if remaining <= 0:
+            raise TimeoutError(
+                f"frame deadline expired mid-{what}: got {got}/{n} bytes")
+        sock.settimeout(min(remaining, 1.0))
+        try:
+            chunk = sock.recv(n - got)
+        except socket.timeout:
+            continue
+        if not chunk:
+            raise ConnectionError(
+                f"connection closed mid-{what} (short read: {got}/{n} bytes)")
+        chunks.append(chunk)
+        got += len(chunk)
+    return b"".join(chunks)
+
+
+def recv_message(sock: socket.socket, *, poll_s: float = 0.2,
+                 frame_deadline_s: float = 120.0) -> tuple | None:
+    """Receive one frame.
+
+    Returns ``None`` if no frame *starts* within ``poll_s`` (idle peer — the
+    caller's poll loop decides what idleness means).  Once the first byte
+    arrives the whole frame must land within ``frame_deadline_s``.  A closed
+    peer raises ``ConnectionError``; protocol violations raise
+    :class:`WireError`.
+    """
+    sock.settimeout(poll_s)
+    try:
+        first = sock.recv(1)
+    except socket.timeout:
+        return None
+    if not first:
+        raise ConnectionError("connection closed by peer")
+    deadline = time.monotonic() + frame_deadline_s
+    header = first + _recv_exact(sock, HEADER_SIZE - 1, deadline, "header")
+    kind, length = decode_header(header)
+    body = _recv_exact(sock, length, deadline, f"{kind!r} payload")
+    return decode_message(header + body)
+
+
+def connect_with_retry(address: tuple[str, int], *, deadline_s: float,
+                       stop: "object | None" = None) -> socket.socket:
+    """Dial ``address``, retrying refusals until ``deadline_s`` elapses.
+
+    ``stop`` is an optional ``threading.Event``-like object; setting it
+    aborts the dial loop (used so ``Runtime.stop()`` can cancel a connect
+    that would otherwise spin out its full deadline).
+    """
+    deadline = time.monotonic() + deadline_s
+    last: Exception | None = None
+    while time.monotonic() < deadline:
+        if stop is not None and stop.is_set():
+            raise ConnectionAbortedError(f"dial of {address} cancelled by stop")
+        try:
+            sock = socket.create_connection(address, timeout=min(2.0, deadline_s))
+            sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            return sock
+        except OSError as exc:
+            last = exc
+            time.sleep(0.05)
+    raise ConnectionError(
+        f"could not connect to {address} within {deadline_s}s: {last!r}")
+
+
+def parse_hostport(spec: str) -> tuple[str, int]:
+    """``"host:port"`` → ``(host, port)`` with a loud error on junk."""
+    host, sep, port = spec.rpartition(":")
+    if not sep or not host or not port.isdigit():
+        raise ValueError(f"expected HOST:PORT, got {spec!r}")
+    return host, int(port)

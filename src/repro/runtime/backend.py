@@ -33,6 +33,12 @@ pipe are both FIFO, publishes are emitted in epoch order from a single
 writer thread, and the terminal ``stopped`` message is sent only after the
 child worker joined — so when ``join()`` returns, every published epoch
 (including the final drain publish) has been adopted.
+
+``SocketBackend`` (``repro.net.backend``, resolved via ``"socket"``) runs
+the exact same worker loop — ``run_ingest_worker`` below — across a TCP
+connection instead of a multiprocessing pipe; both transports frame every
+message with the shared ``repro.net.wire`` codec, so a version skew or a
+torn stream fails loudly instead of as a pickle crash.
 """
 from __future__ import annotations
 
@@ -47,6 +53,7 @@ import time
 
 import numpy as np
 
+from repro.net import wire
 from repro.runtime.metrics import WorkerMetrics
 from repro.runtime.queueing import BoundedEdgeQueue, QueueItem
 from repro.runtime.worker import (
@@ -58,7 +65,7 @@ from repro.runtime.worker import (
     IngestWorker,
 )
 
-_BACKEND_NAMES = ("thread", "process")
+_BACKEND_NAMES = ("thread", "process", "socket")
 
 
 class WorkerFailure(RuntimeError):
@@ -103,6 +110,15 @@ class ExecutionBackend:
                     coalesce_target: int = 8192, queue_capacity: int = 64):
         raise NotImplementedError
 
+    def shutdown(self) -> None:
+        """Release backend-owned transport resources (listeners, dialers).
+
+        ``Runtime.stop()``/``kill()`` call this BEFORE joining workers so a
+        worker wedged in accept/connect (a peer that never dialed back, a
+        host that never came up) is cut loose instead of hanging the join.
+        Idempotent; the default backends own no transport state.
+        """
+
 
 class ThreadBackend(ExecutionBackend):
     """In-process worker threads over the shared snapshot buffer (PR 2)."""
@@ -125,13 +141,20 @@ class ThreadBackend(ExecutionBackend):
 
 
 def resolve_backend(spec) -> ExecutionBackend:
-    """``"thread"`` | ``"process"`` | a ready ``ExecutionBackend``."""
+    """``"thread"`` | ``"process"`` | ``"socket[:HOST:PORT,...]"`` | a ready
+    ``ExecutionBackend``."""
     if isinstance(spec, ExecutionBackend):
         return spec
     if spec == "thread" or spec is None:
         return ThreadBackend()
     if spec == "process":
         return ProcessBackend()
+    if isinstance(spec, str) and (spec == "socket"
+                                  or spec.startswith("socket:")):
+        # lazy: repro.net.backend imports back into this module
+        from repro.net.backend import SocketBackend
+
+        return SocketBackend.from_spec(spec)
     raise ValueError(f"unknown runtime backend {spec!r}; "
                      f"choose from {_BACKEND_NAMES}")
 
@@ -185,12 +208,62 @@ def _warm_child_shapes(tenant) -> None:
     tenant.buffer.publish()
 
 
-def _child_main(spec: _ChildSpec, in_q, out_q) -> None:
-    """Entry point of a process-backend worker child (spawn-safe: top-level
-    function, rebuilds everything from the picklable spec)."""
-    # the parent orchestrates graceful drains; a terminal Ctrl-C must not
-    # kill children mid-drain before the parent can flush checkpoints
-    signal.signal(signal.SIGINT, signal.SIG_IGN)
+def build_child_spec(tenant, policy, *, reservoir=None, checkpoint_dir=None,
+                     checkpoint_every=0, poll_s=0.05, coalesce_batches=1,
+                     coalesce_target=8192, queue_capacity=64,
+                     warm_shapes=True, env=None) -> _ChildSpec:
+    """Snapshot everything a remote worker needs into a picklable spec.
+
+    Shared by the process backend (ships it via ``Process`` args) and the
+    socket backend (ships it in the ``hello`` frame), so both transports
+    rebuild a worker from the exact same state."""
+    if not isinstance(policy, str):
+        raise TypeError(
+            "the process backend needs a publish-policy SPEC string "
+            f"(e.g. 'every:4'), not {type(policy).__name__}: the policy "
+            "object lives in the child and is rebuilt there")
+    origin = getattr(tenant, "origin", None)
+    if origin is None:
+        raise ValueError(
+            "process backend requires a registry-opened tenant (its "
+            "TenantOrigin rebuild spec is how the child reproduces the "
+            "sketch layout); hand-built tenants can only run on the "
+            "thread backend")
+    buf = tenant.buffer.state()
+    init = {
+        "front": _tree_leaves_np(buf["front"]),
+        "delta": _tree_leaves_np(buf["delta"]),
+        "pending": int(np.asarray(buf["pending"])),
+        "epoch": int(buf["epoch"]),
+        "n_edges": int(buf["n_edges"]),
+        "offset": int(tenant.offset),
+    }
+    res = None
+    if reservoir is not None:
+        res = {"k": reservoir.k, "state": reservoir.state_dict()}
+    return _ChildSpec(
+        origin=origin, policy=policy, init=init, reservoir=res,
+        checkpoint_dir=checkpoint_dir, checkpoint_every=checkpoint_every,
+        poll_s=poll_s, coalesce_batches=coalesce_batches,
+        coalesce_target=coalesce_target, queue_capacity=queue_capacity,
+        warm_shapes=warm_shapes, env=dict(env or {}))
+
+
+def run_ingest_worker(spec: _ChildSpec, recv, send) -> str:
+    """Transport-neutral body of a remote ingest worker.
+
+    ``recv(timeout_s)`` yields the next decoded message tuple (or ``None``
+    on timeout); ``send(msg)`` ships one message tuple back to the parent
+    and must be thread-safe (the publish callback fires from the worker
+    thread).  Both the process child (``_child_main``) and the socket
+    worker server (``repro.net.ingest_server``) drive this loop; message
+    kinds are the wire-protocol kinds (``repro.net.wire.FRAME_TYPES``).
+
+    Returns ``"stopped"`` after a graceful stop, ``"failed"`` after a
+    terminal ``failed`` message.  Whatever happens, the local ingest
+    thread is stopped on the way out — a dead transport can never leave an
+    orphan worker folding edges nobody will ever adopt.
+    """
     worker = None
     try:
         os.environ.update(spec.env)  # must land before jax initializes
@@ -234,7 +307,7 @@ def _child_main(spec: _ChildSpec, in_q, out_q) -> None:
             coalesce_target=spec.coalesce_target)
 
         def ship(snap):  # runs in the worker thread, post-publish
-            out_q.put(("publish", {
+            send(("publish", {
                 "epoch": snap.epoch,
                 "n_edges": snap.n_edges,
                 "leaves": _tree_leaves_np(snap.sketch),
@@ -246,22 +319,19 @@ def _child_main(spec: _ChildSpec, in_q, out_q) -> None:
 
         worker.on_publish = ship
         worker.start()
-        out_q.put(("ready", {"pid": os.getpid(), "offset": tenant.offset,
-                             "epoch": tenant.epoch}))
+        send(("ready", {"pid": os.getpid(), "offset": tenant.offset,
+                        "epoch": tenant.epoch}))
 
         last_beat = time.monotonic()
         while True:
             if worker.state == FAILED:
-                out_q.put(("failed", repr(worker.error),
-                           worker.error_tb or "", worker.metrics_snapshot()))
-                sys.exit(1)
-            try:
-                msg = in_q.get(timeout=0.1)
-            except queue_mod.Empty:
-                msg = None
+                send(("failed", repr(worker.error),
+                      worker.error_tb or "", worker.metrics_snapshot()))
+                return "failed"
+            msg = recv(0.1)
             now = time.monotonic()
             if now - last_beat >= 0.25:
-                out_q.put(("metrics", worker.metrics_snapshot()))
+                send(("metrics", worker.metrics_snapshot()))
                 last_beat = now
             if msg is None:
                 continue
@@ -274,29 +344,113 @@ def _child_main(spec: _ChildSpec, in_q, out_q) -> None:
                         break  # surfaced at the top of the loop
             elif kind == "checkpoint":
                 try:
-                    out_q.put(("checkpointed", {"path": worker.checkpoint()}))
+                    send(("checkpointed", {"path": worker.checkpoint()}))
                 except BaseException as exc:  # keep serving; caller decides
-                    out_q.put(("checkpointed", {"error": repr(exc)}))
+                    send(("checkpointed", {"error": repr(exc)}))
             elif kind == "stop":
                 worker.request_stop(drain=bool(msg[1]))
                 worker.join()
                 if worker.state == FAILED:
-                    out_q.put(("failed", repr(worker.error),
-                               worker.error_tb or "",
-                               worker.metrics_snapshot()))
-                    sys.exit(1)
-                out_q.put(("stopped", worker.metrics_snapshot()))
-                return
+                    send(("failed", repr(worker.error),
+                          worker.error_tb or "",
+                          worker.metrics_snapshot()))
+                    return "failed"
+                send(("stopped", worker.metrics_snapshot()))
+                return "stopped"
+            elif kind == "ping":
+                send(("pong",))
             else:
                 raise ValueError(f"unknown transport message {kind!r}")
-    except SystemExit:
-        raise
     except BaseException as exc:
         import traceback
 
-        out_q.put(("failed", repr(exc), traceback.format_exc(),
-                   worker.metrics_snapshot() if worker is not None else None))
+        try:
+            send(("failed", repr(exc), traceback.format_exc(),
+                  worker.metrics_snapshot() if worker is not None else None))
+        except BaseException:
+            pass  # the transport itself is dead; nobody left to tell
+        return "failed"
+    finally:
+        if worker is not None and worker.state in (RUNNING, DRAINING):
+            # hard-stop semantics, same as a SIGKILLed process child: the
+            # parent re-offers unacknowledged work on restore
+            worker.request_stop(drain=False)
+            worker.join(timeout=30.0)
+
+
+def _child_main(spec: _ChildSpec, in_q, out_q) -> None:
+    """Entry point of a process-backend worker child (spawn-safe: top-level
+    function, rebuilds everything from the picklable spec).  Thin transport
+    shim: frames every message with the shared wire codec so the process
+    pipe and the socket transport speak byte-identical payloads."""
+    # the parent orchestrates graceful drains; a terminal Ctrl-C must not
+    # kill children mid-drain before the parent can flush checkpoints
+    signal.signal(signal.SIGINT, signal.SIG_IGN)
+
+    def recv(timeout_s: float):
+        try:
+            raw = in_q.get(timeout=timeout_s)
+        except queue_mod.Empty:
+            return None
+        return wire.decode_message(raw)
+
+    def send(msg) -> None:
+        out_q.put(wire.encode_message(msg))
+
+    if run_ingest_worker(spec, recv, send) != "stopped":
         sys.exit(1)
+
+
+def dispatch_parent_message(h, msg) -> None:
+    """Parent-side dispatch of one worker→parent message, shared by every
+    remote transport (``ProcessWorker`` and ``repro.net``'s
+    ``SocketWorker``).  ``h`` is the worker handle; this is where remote
+    publishes become parent state via ``SnapshotBuffer.adopt_published``,
+    so epoch ordering stays single-sourced no matter the transport."""
+    import jax
+    import jax.numpy as jnp
+
+    kind = msg[0]
+    if kind == "ready":
+        h._ready.set()
+    elif kind == "metrics":
+        h._last_metrics = msg[1]
+    elif kind == "publish":
+        payload = msg[1]
+        sketch = jax.tree_util.tree_unflatten(
+            h._treedef, [jnp.asarray(x) for x in payload["leaves"]])
+        snap = h.tenant.buffer.adopt_published(
+            sketch, payload["epoch"], payload["n_edges"])
+        h._ingested_offset = payload["next_offset"] - 1
+        h.tenant.offset = payload["next_offset"]
+        h._last_metrics = payload["metrics"]
+        if h.reservoir is not None and payload["reservoir"] is not None:
+            h.reservoir.load_state_dict(payload["reservoir"])
+        if h.on_publish is not None:
+            h.on_publish(snap)
+    elif kind == "checkpointed":
+        h._ckpt_result = msg[1]
+        h._ckpt_event.set()
+    elif kind == "stopped":
+        h._last_metrics = msg[1]
+        h.state = STOPPED
+        h._ready.set()
+        h._ckpt_event.set()
+        h._done.set()
+    elif kind == "failed":
+        _, err, tb, metrics = msg
+        h.error = RuntimeError(err)
+        h.error_tb = tb
+        if metrics:
+            h._last_metrics = metrics
+        h.state = FAILED
+        h._ready.set()
+        h._ckpt_event.set()
+        h._done.set()
+    elif kind == "pong":
+        pass  # liveness ack; receipt alone resets the peer's idle clock
+    else:
+        raise ValueError(f"unexpected worker→parent message {kind!r}")
 
 
 class ProcessWorker:
@@ -317,18 +471,6 @@ class ProcessWorker:
                  warm_shapes=True, child_env=None, ctx=None) -> None:
         import jax
 
-        if not isinstance(policy, str):
-            raise TypeError(
-                "the process backend needs a publish-policy SPEC string "
-                f"(e.g. 'every:4'), not {type(policy).__name__}: the policy "
-                "object lives in the child and is rebuilt there")
-        origin = getattr(tenant, "origin", None)
-        if origin is None:
-            raise ValueError(
-                "process backend requires a registry-opened tenant (its "
-                "TenantOrigin rebuild spec is how the child reproduces the "
-                "sketch layout); hand-built tenants can only run on the "
-                "thread backend")
         self.tenant = tenant
         self.queue = queue
         self.on_publish = on_publish
@@ -343,24 +485,12 @@ class ProcessWorker:
                           + tenant.buffer.pending_edges)
         self.poll_s = poll_s
         self._treedef = jax.tree_util.tree_structure(tenant.snapshot.sketch)
-        buf = tenant.buffer.state()
-        init = {
-            "front": _tree_leaves_np(buf["front"]),
-            "delta": _tree_leaves_np(buf["delta"]),
-            "pending": int(np.asarray(buf["pending"])),
-            "epoch": int(buf["epoch"]),
-            "n_edges": int(buf["n_edges"]),
-            "offset": int(tenant.offset),
-        }
-        res = None
-        if reservoir is not None:
-            res = {"k": reservoir.k, "state": reservoir.state_dict()}
-        spec = _ChildSpec(
-            origin=origin, policy=policy, init=init, reservoir=res,
+        spec = build_child_spec(
+            tenant, policy, reservoir=reservoir,
             checkpoint_dir=checkpoint_dir, checkpoint_every=checkpoint_every,
             poll_s=poll_s, coalesce_batches=coalesce_batches,
             coalesce_target=coalesce_target, queue_capacity=queue_capacity,
-            warm_shapes=warm_shapes, env=dict(child_env or {}))
+            warm_shapes=warm_shapes, env=child_env)
         ctx = ctx or multiprocessing.get_context("spawn")
         # small transit pipe: backpressure cascades child -> pipe ->
         # parent queue -> pump, so the parent queue's policy stays the
@@ -489,8 +619,9 @@ class ProcessWorker:
                         and self.queue.depth() == 0):
                     break
                 continue
-            msg = ("item", item.offset, item.src, item.dst, item.weight,
-                   item.n_edges)
+            msg = wire.encode_message(
+                ("item", item.offset, item.src, item.dst, item.weight,
+                 item.n_edges))
             placed = False
             while not placed:
                 try:
@@ -505,7 +636,8 @@ class ProcessWorker:
         # which the receiver surfaces)
         while not (self._done.is_set() or self._hard_stop):
             try:
-                self._in_q.put(("stop", True), timeout=0.5)
+                self._in_q.put(wire.encode_message(("stop", True)),
+                               timeout=0.5)
                 return
             except queue_mod.Full:
                 continue
@@ -538,16 +670,17 @@ class ProcessWorker:
             if self._done.is_set():
                 return
 
-    def _handle_guarded(self, msg) -> bool:
-        """Dispatch one child message; on a parent-side failure (e.g. an
-        on_publish callback raising, or a torn payload) mark the handle
-        failed, take the child down with us (it knows nothing and would
-        keep ingesting until its result pipe wedged), and finalize — the
-        receiver must NEVER die without setting ``_done``, or ``join()``
-        would hang for its full timeout with the failure swallowed.
+    def _handle_guarded(self, raw) -> bool:
+        """Decode and dispatch one framed child message; on a parent-side
+        failure (an on_publish callback raising, a torn/mismatched frame
+        surfacing as ``WireError``) mark the handle failed, take the child
+        down with us (it knows nothing and would keep ingesting until its
+        result pipe wedged), and finalize — the receiver must NEVER die
+        without setting ``_done``, or ``join()`` would hang for its full
+        timeout with the failure swallowed.
         Returns False when the receiver should exit."""
         try:
-            self._handle(msg)
+            dispatch_parent_message(self, wire.decode_message(raw))
             return True
         except BaseException as exc:
             import traceback
@@ -561,48 +694,6 @@ class ProcessWorker:
             self._ckpt_event.set()
             self._done.set()
             return False
-
-    def _handle(self, msg) -> None:
-        import jax
-        import jax.numpy as jnp
-
-        kind = msg[0]
-        if kind == "ready":
-            self._ready.set()
-        elif kind == "metrics":
-            self._last_metrics = msg[1]
-        elif kind == "publish":
-            payload = msg[1]
-            sketch = jax.tree_util.tree_unflatten(
-                self._treedef, [jnp.asarray(x) for x in payload["leaves"]])
-            snap = self.tenant.buffer.adopt_published(
-                sketch, payload["epoch"], payload["n_edges"])
-            self._ingested_offset = payload["next_offset"] - 1
-            self.tenant.offset = payload["next_offset"]
-            self._last_metrics = payload["metrics"]
-            if self.reservoir is not None and payload["reservoir"] is not None:
-                self.reservoir.load_state_dict(payload["reservoir"])
-            if self.on_publish is not None:
-                self.on_publish(snap)
-        elif kind == "checkpointed":
-            self._ckpt_result = msg[1]
-            self._ckpt_event.set()
-        elif kind == "stopped":
-            self._last_metrics = msg[1]
-            self.state = STOPPED
-            self._ready.set()
-            self._ckpt_event.set()
-            self._done.set()
-        elif kind == "failed":
-            _, err, tb, metrics = msg
-            self.error = RuntimeError(err)
-            self.error_tb = tb
-            if metrics:
-                self._last_metrics = metrics
-            self.state = FAILED
-            self._ready.set()
-            self._ckpt_event.set()
-            self._done.set()
 
     def _finalize_death(self) -> None:
         """The child exited without a terminal message."""
@@ -632,7 +723,7 @@ class ProcessWorker:
                     "running; cannot checkpoint")
             self._ckpt_event.clear()
             self._ckpt_result = None
-            self._in_q.put(("checkpoint",), timeout=60.0)
+            self._in_q.put(wire.encode_message(("checkpoint",)), timeout=60.0)
             if not self._ckpt_event.wait(timeout):
                 raise TimeoutError("child did not acknowledge checkpoint")
             res = self._ckpt_result

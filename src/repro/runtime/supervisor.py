@@ -130,9 +130,10 @@ class Runtime:
                  coalesce_batches: int = 1,
                  coalesce_target: int = 8192,
                  backend: str = "thread") -> None:
-        # execution backend: where workers run ("thread" | "process" | an
-        # ExecutionBackend instance) — everything below is written against
-        # the runtime/backend.py contract, not a concrete worker class
+        # execution backend: where workers run ("thread" | "process" |
+        # "socket[:HOST:PORT,...]" | an ExecutionBackend instance) —
+        # everything below is written against the runtime/backend.py
+        # contract, not a concrete worker class
         self.backend = resolve_backend(backend)
         self.queue_capacity = queue_capacity
         self.backpressure = backpressure
@@ -277,6 +278,10 @@ class Runtime:
                 h.pump.join(timeout=max(deadline - time.monotonic(), 0.01))
         for h in self.handles():
             h.worker.request_stop(drain=drain)
+        # cut transport-level waits loose (close listeners / cancel dials)
+        # BEFORE joining: a socket worker whose peer never connected must
+        # fail fast here, not ride out the join timeout
+        self.backend.shutdown()
         for h in self.handles():
             if h.worker.is_alive():
                 h.worker.join(timeout=max(deadline - time.monotonic(), 0.01))
@@ -304,6 +309,7 @@ class Runtime:
             if h.pump is not None:
                 h.pump.request_stop()
             h.worker.request_stop(drain=False)
+        self.backend.shutdown()
         for h in self.handles():
             if h.pump is not None and h.pump.is_alive():
                 h.pump.join(timeout=10.0)

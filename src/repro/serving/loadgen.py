@@ -10,11 +10,22 @@ The generator synthesizes a Zipf-skewed workload over the tenant's node
 universe (matching the graph-stream setting: hot vertices are queried more),
 batches whatever has arrived each time the engine frees up (up to
 ``batch_max``) and reports achieved QPS plus p50/p99/mean/max latency.
+
+``NetLoadGen`` is the same open-loop discipline pointed at a
+``repro.net.query_server.QueryServer`` over real TCP: ``connections``
+client connections share one global arrival schedule round-robin, each
+batching its own arrived-but-unsent requests per frame, and admission
+rejections are counted as *shed* (with the server's retry-after hints
+recorded) rather than folded into latency — overload shows up as an
+accounted shed rate with bounded tail latency for admitted work, which is
+exactly the claim the admission controller makes.  Runnable as a CLI:
+``python -m repro.serving.loadgen --connect HOST:PORT``.
 """
 from __future__ import annotations
 
 import dataclasses
 import json
+import threading
 import time
 from typing import Callable
 
@@ -181,3 +192,176 @@ class OpenLoopLoadGen:
             n_batches=n_batches,
             family_counts=family_counts,
         )
+
+
+# ------------------------------------------------------------ network mode --
+
+
+@dataclasses.dataclass
+class NetLoadReport:
+    """Open-loop report for a run against a network query server."""
+
+    n_requests: int
+    accepted: int
+    shed: int
+    shed_rate: float  # shed / offered — the accounted overload signal
+    errors: int
+    connections: int
+    duration_s: float
+    offered_qps: float
+    achieved_qps: float  # accepted / duration
+    p50_ms: float
+    p99_ms: float
+    mean_ms: float
+    max_ms: float
+    n_batches: int
+    mean_retry_after_ms: float
+    last_epoch: int | None  # freshest epoch stamped on any answer
+
+    def to_json(self) -> str:
+        d = dataclasses.asdict(self)
+        d = {k: (round(v, 4) if isinstance(v, float) else v)
+             for k, v in d.items()}
+        return json.dumps(d)
+
+
+class NetLoadGen:
+    """Multi-connection open-loop load against a TCP query server.
+
+    One global arrival clock, ``connections`` concurrent client
+    connections taking requests round-robin — so the *offered* load is
+    connection-count-invariant and connection count only changes how much
+    concurrency the server sees.  Latency (arrival→answer, queueing
+    included) is measured for ACCEPTED requests; rejections count as shed.
+    """
+
+    def __init__(self, *, target_qps: float = 500.0, connections: int = 4,
+                 batch_max: int = 64, tenant: str = "default") -> None:
+        assert connections >= 1
+        self.target_qps = target_qps
+        self.connections = connections
+        self.batch_max = batch_max
+        self.tenant = tenant
+
+    def run(self, address: tuple[str, int],
+            requests: list[eng.Request]) -> NetLoadReport:
+        from repro.net.query_server import QueryClient
+
+        n = len(requests)
+        interval = 1.0 / self.target_qps
+        arrivals = np.arange(n) * interval
+        lat_ms = np.full(n, np.nan)
+        accepted = np.zeros(n, dtype=bool)
+        errored = np.zeros(n, dtype=bool)
+        retry_hints: list[float] = []
+        batches = [0]
+        last_epoch: list[int | None] = [None]
+        lock = threading.Lock()
+        t0 = [0.0]
+
+        def connection_loop(conn_idx: int) -> None:
+            mine = list(range(conn_idx, n, self.connections))
+            client = QueryClient(address, tenant=self.tenant)
+            try:
+                served = 0
+                while served < len(mine):
+                    now = time.perf_counter() - t0[0]
+                    first = arrivals[mine[served]]
+                    if first > now:
+                        time.sleep(min(first - now, 0.02))
+                        continue
+                    hi = served
+                    while (hi < len(mine) and arrivals[mine[hi]] <= now
+                           and hi - served < self.batch_max):
+                        hi += 1
+                    idx = mine[served:hi]
+                    payload = client.call([requests[i] for i in idx])
+                    done = time.perf_counter() - t0[0]
+                    with lock:
+                        batches[0] += 1
+                        if payload["kind"] == "result":
+                            accepted[idx] = True
+                            lat_ms[idx] = (done - arrivals[idx]) * 1e3
+                            if payload["epoch"] is not None:
+                                last_epoch[0] = max(
+                                    last_epoch[0] or 0, payload["epoch"])
+                        elif payload["kind"] == "reject":
+                            retry_hints.append(payload["retry_after_ms"])
+                        else:  # server-side error: accounted, not shed
+                            errored[idx] = True
+                    served = hi
+            finally:
+                client.close()
+
+        threads = [threading.Thread(target=connection_loop, args=(c,),
+                                    daemon=True, name=f"loadgen-conn-{c}")
+                   for c in range(self.connections)]
+        t0[0] = time.perf_counter()
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        duration = time.perf_counter() - t0[0]
+
+        ok = lat_ms[accepted]
+        n_acc = int(accepted.sum())
+        n_err = int(errored.sum())
+        shed = n - n_acc - n_err
+        return NetLoadReport(
+            n_requests=n,
+            accepted=n_acc,
+            shed=shed,
+            shed_rate=shed / n if n else 0.0,
+            errors=n_err,
+            connections=self.connections,
+            duration_s=duration,
+            offered_qps=self.target_qps,
+            achieved_qps=n_acc / duration if duration > 0 else 0.0,
+            p50_ms=float(np.percentile(ok, 50)) if n_acc else float("nan"),
+            p99_ms=float(np.percentile(ok, 99)) if n_acc else float("nan"),
+            mean_ms=float(ok.mean()) if n_acc else float("nan"),
+            max_ms=float(ok.max()) if n_acc else float("nan"),
+            n_batches=batches[0],
+            mean_retry_after_ms=(float(np.mean(retry_hints))
+                                 if retry_hints else 0.0),
+            last_epoch=last_epoch[0],
+        )
+
+
+def main(argv: list[str] | None = None) -> int:
+    """CLI client: load a remote query server (README §Network quickstart)."""
+    import argparse
+
+    from repro.net import wire
+
+    p = argparse.ArgumentParser(
+        description="open-loop load generator for a repro.net query server")
+    p.add_argument("--connect", required=True, metavar="HOST:PORT")
+    p.add_argument("--qps", type=float, default=500.0)
+    p.add_argument("--n-requests", type=int, default=2000)
+    p.add_argument("--connections", type=int, default=4)
+    p.add_argument("--batch-max", type=int, default=64)
+    p.add_argument("--tenant", default="default")
+    p.add_argument("--seed", type=int, default=0)
+    args = p.parse_args(argv)
+
+    from repro.net.query_server import QueryClient
+
+    address = wire.parse_hostport(args.connect)
+    probe = QueryClient(address, tenant=args.tenant)
+    info = probe.info()
+    probe.close()
+    n_nodes = int(info.get("n_nodes", 0)) or 1024
+    mix = mix_for_sketch(str(info.get("kind", "kmatrix")))
+    requests = synth_requests(args.n_requests, mix, n_nodes=n_nodes,
+                              seed=args.seed, heavy_universe=256,
+                              heavy_threshold=5.0)
+    gen = NetLoadGen(target_qps=args.qps, connections=args.connections,
+                     batch_max=args.batch_max, tenant=args.tenant)
+    report = gen.run(address, requests)
+    print(report.to_json())
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

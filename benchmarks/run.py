@@ -669,6 +669,10 @@ def serve_net(scale: float, quick: bool,
                 raise RuntimeError(
                     f"serve_net conns={conns}: {rep.errors} server-side "
                     "errors — QPS for failed answers is meaningless")
+            if rep.aborted:
+                raise RuntimeError(
+                    f"serve_net conns={conns}: {rep.aborted} requests "
+                    f"aborted on a dead transport ({rep.transport_error})")
             if rep.accepted != rep.n_requests:
                 raise RuntimeError(
                     f"serve_net conns={conns}: {rep.shed} requests shed "
@@ -714,13 +718,19 @@ def serve_net(scale: float, quick: bool,
             "serve_net overload: offered 10x nominal against "
             "max_inflight=64 and nothing was shed — admission control "
             "is not engaging")
+    if rep.aborted:
+        raise RuntimeError(
+            f"serve_net overload: {rep.aborted} requests aborted on a "
+            f"dead transport ({rep.transport_error}) — overload must shed "
+            "at admission, not kill connections")
     if rep.accepted + rep.shed != rep.n_requests:
         raise RuntimeError(
             f"serve_net overload: client accounting leak ({rep.accepted} "
             f"accepted + {rep.shed} shed != {rep.n_requests} offered)")
     if stats["offered_requests"] != (stats["admitted_requests"]
                                      + stats["shed_overload"]
-                                     + stats["shed_rate_limited"]):
+                                     + stats["shed_rate_limited"]
+                                     + stats["shed_too_large"]):
         raise RuntimeError(
             f"serve_net overload: server admission ledger does not "
             f"balance ({stats})")

@@ -148,6 +148,11 @@ def parse_args(argv=None) -> argparse.Namespace:
     ap.add_argument("--tenant-qps", type=float, default=0.0,
                     help="with --serve: per-tenant token-bucket rate limit "
                          "(0 = off)")
+    ap.add_argument("--auth-token", default="",
+                    help="with --serve: shared connection token (default: "
+                         "$KMATRIX_NET_TOKEN); REQUIRED to serve on a "
+                         "non-loopback address — clients present it via "
+                         "loadgen --auth-token / the same env var")
     args = ap.parse_args(argv)
     _valid_backends = ("thread", "process", "socket")
     if args.runtime_backend not in _valid_backends \
@@ -173,7 +178,8 @@ def parse_args(argv=None) -> argparse.Namespace:
     if not args.serve:
         for flag, is_set in [("--connections", args.connections != 4),
                              ("--max-inflight", args.max_inflight != 4096),
-                             ("--tenant-qps", args.tenant_qps != 0.0)]:
+                             ("--tenant-qps", args.tenant_qps != 0.0),
+                             ("--auth-token", bool(args.auth_token))]:
             if is_set:
                 ap.error(f"{flag} requires --serve")
     if args.shards < 1:
@@ -250,12 +256,16 @@ def run_load(args, engine, snapshot_fn, requests, *, n_nodes: int) -> tuple:
     from repro.serving.loadgen import NetLoadGen
 
     host, port = wire.parse_hostport(args.serve)
-    server = QueryServer(
-        engine, snapshot_fn, host=host, port=port,
-        max_inflight=args.max_inflight, batch_max=args.batch_max,
-        tenant_qps=args.tenant_qps,
-        info={"n_nodes": n_nodes, "kind": args.sketch,
-              "dataset": args.dataset}).start()
+    try:
+        server = QueryServer(
+            engine, snapshot_fn, host=host, port=port,
+            max_inflight=args.max_inflight, batch_max=args.batch_max,
+            tenant_qps=args.tenant_qps,
+            auth_token=args.auth_token or None,
+            info={"n_nodes": n_nodes, "kind": args.sketch,
+                  "dataset": args.dataset}).start()
+    except ValueError as exc:  # non-loopback --serve without a token
+        raise SystemExit(str(exc)) from exc
     print(json.dumps({"serving":
                       f"{server.address[0]}:{server.address[1]}"}),
           file=sys.stderr, flush=True)
@@ -266,7 +276,8 @@ def run_load(args, engine, snapshot_fn, requests, *, n_nodes: int) -> tuple:
             while True:
                 time.sleep(3600)
         gen = NetLoadGen(target_qps=args.qps, connections=args.connections,
-                         batch_max=args.batch_max)
+                         batch_max=args.batch_max,
+                         auth_token=args.auth_token or None)
         report = gen.run(server.address, requests)
         stats = server.stats()
         return report, {
@@ -274,6 +285,7 @@ def run_load(args, engine, snapshot_fn, requests, *, n_nodes: int) -> tuple:
             "connections": args.connections,
             "shed": report.shed,
             "shed_rate": round(report.shed_rate, 4),
+            "aborted": report.aborted,
             "mean_retry_after_ms": round(report.mean_retry_after_ms, 3),
             "answer_epoch": report.last_epoch,
             "server_stats": stats,

@@ -109,7 +109,11 @@ def listen_main(args) -> None:
     from repro.net.ingest_server import WorkerServer
 
     host, port = wire.parse_hostport(args.listen)
-    server = WorkerServer(host, port)
+    try:
+        server = WorkerServer(host, port,
+                              auth_token=args.auth_token or None)
+    except ValueError as exc:  # non-loopback bind without a token
+        raise SystemExit(str(exc)) from exc
     print(json.dumps({"listening": f"{server.address[0]}:{server.address[1]}",
                       "max_sessions": args.max_sessions or None}), flush=True)
 
@@ -171,6 +175,11 @@ def main() -> None:
                     help="with --listen: exit after this long with no live "
                          "session (0 = wait forever); keeps scripted runs "
                          "from wedging on a lost parent")
+    ap.add_argument("--auth-token", default="",
+                    help="shared connection token (default: "
+                         "$KMATRIX_NET_TOKEN); REQUIRED to --listen on a "
+                         "non-loopback address — parents present it via "
+                         "the same flag/env on their socket backend")
     args = ap.parse_args()
     valid = ("inline", "thread", "process", "socket")
     if args.runtime_backend not in valid \

@@ -61,7 +61,7 @@ class SocketWorker:
                  on_publish=None, poll_s=0.05, coalesce_batches=1,
                  coalesce_target=8192, queue_capacity=64, warm_shapes=True,
                  child_env=None, ctx=None, connect_timeout_s=300.0,
-                 frame_deadline_s=120.0) -> None:
+                 frame_deadline_s=120.0, auth_token=None) -> None:
         import jax
 
         self.tenant = tenant
@@ -83,6 +83,7 @@ class SocketWorker:
             poll_s=poll_s, coalesce_batches=coalesce_batches,
             coalesce_target=coalesce_target, queue_capacity=queue_capacity,
             warm_shapes=warm_shapes, env=dict(child_env or {}))
+        self.auth_token = wire.resolve_auth_token(auth_token)
         self.address = address  # None ⇒ self-hosted loopback child
         self._sock: socket.socket | None = None
         self._send_lock = threading.Lock()  # forwarder vs checkpoint vs stop
@@ -159,6 +160,11 @@ class SocketWorker:
                     stop=self._abort_connect)
             self.close_listener()  # one peer per worker; stop accepting
             with self._send_lock:
+                if self.address is not None and self.auth_token:
+                    # remote worker host: present the shared token before
+                    # the hello (hosts without one ignore the frame)
+                    wire.send_message(sock, ("auth", self.auth_token),
+                                      deadline_s=self.frame_deadline_s)
                 wire.send_message(sock, ("hello", self._spec),
                                   deadline_s=self.frame_deadline_s)
             self._sock = sock
@@ -445,7 +451,9 @@ class SocketBackend(ExecutionBackend):
     def __init__(self, *, addresses=None, warm_shapes: bool = True,
                  child_env: dict | None = None, mp_context: str = "spawn",
                  connect_timeout_s: float = 300.0,
-                 frame_deadline_s: float = 120.0) -> None:
+                 frame_deadline_s: float = 120.0,
+                 auth_token: str | None = None) -> None:
+        self.auth_token = wire.resolve_auth_token(auth_token)
         self.addresses = list(addresses) if addresses else None
         self._next_addr = 0
         self.warm_shapes = warm_shapes
@@ -483,7 +491,8 @@ class SocketBackend(ExecutionBackend):
             coalesce_target=coalesce_target, queue_capacity=queue_capacity,
             warm_shapes=self.warm_shapes, child_env=self.child_env,
             ctx=self._ctx, connect_timeout_s=self.connect_timeout_s,
-            frame_deadline_s=self.frame_deadline_s)
+            frame_deadline_s=self.frame_deadline_s,
+            auth_token=self.auth_token)
         self._workers.append(worker)
         return worker
 

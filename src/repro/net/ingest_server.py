@@ -32,13 +32,17 @@ from repro.net import wire
 
 def serve_worker_session(conn: socket.socket, *,
                          hello_timeout_s: float = 300.0,
-                         frame_deadline_s: float = 120.0) -> str:
+                         frame_deadline_s: float = 120.0,
+                         auth_token: str = "") -> str:
     """Run one ingest-worker session over an established connection.
 
     Blocks until the parent stops the worker (returns ``"stopped"``), the
     worker fails (``"failed"``), or the transport dies.  The jax runtime
     (and the tenant) is built lazily inside ``run_ingest_worker`` from the
-    spec the ``hello`` frame ships.
+    spec the ``hello`` frame ships.  With ``auth_token`` set, the peer
+    must present it in an ``auth`` frame before the hello is honoured
+    (without one, stray ``auth`` frames are ignored — clients may always
+    send their token).
     """
     from repro.runtime.backend import run_ingest_worker
 
@@ -54,12 +58,25 @@ def serve_worker_session(conn: socket.socket, *,
             wire.send_message(conn, msg, deadline_s=frame_deadline_s)
 
     deadline = time.monotonic() + hello_timeout_s
+    authed = not auth_token
     hello = None
     while hello is None:
         if time.monotonic() > deadline:
             raise TimeoutError(
                 f"no hello frame within {hello_timeout_s}s; dropping peer")
-        hello = recv(0.5)
+        msg = recv(0.5)
+        if msg is None:
+            continue
+        if msg[0] == "auth":
+            if auth_token and not wire.auth_matches(
+                    auth_token, msg[1] if len(msg) > 1 else None):
+                raise wire.WireError("auth failed; dropping peer")
+            authed = True
+            continue
+        hello = msg
+    if not authed:
+        raise wire.WireError(
+            "auth token required before a worker session; dropping peer")
     if hello[0] != "hello":
         raise wire.WireError(
             f"expected a hello frame to open a worker session, got {hello[0]!r}")
@@ -88,7 +105,10 @@ class WorkerServer:
 
     def __init__(self, host: str = "127.0.0.1", port: int = 0, *,
                  hello_timeout_s: float = 300.0,
-                 frame_deadline_s: float = 120.0) -> None:
+                 frame_deadline_s: float = 120.0,
+                 auth_token: str | None = None) -> None:
+        self.auth_token = wire.resolve_auth_token(auth_token)
+        wire.check_bind_allowed(host, self.auth_token, "WorkerServer")
         self._listener = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
         self._listener.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
         self._listener.bind((host, port))
@@ -106,7 +126,8 @@ class WorkerServer:
         try:
             status = serve_worker_session(
                 conn, hello_timeout_s=self.hello_timeout_s,
-                frame_deadline_s=self.frame_deadline_s)
+                frame_deadline_s=self.frame_deadline_s,
+                auth_token=self.auth_token)
         except (ConnectionError, TimeoutError, OSError, wire.WireError) as exc:
             # a dead/misbehaving parent ends its own session only; the
             # parent side is where it surfaces as WorkerFailure

@@ -6,9 +6,18 @@ lists.  A single executor thread coalesces everything that arrived across
 ALL connections into one ``QueryEngine.execute`` call (the pad-to-bucket
 planner was built for exactly this: heterogeneous batches, few shapes), so
 concurrency raises batch occupancy instead of contending on the engine.
+The executor never touches a socket: replies are handed to per-connection
+bounded writer queues, each drained by its own thread — a client that
+stops reading its socket stalls (and eventually loses) only its OWN
+connection, never the shared executor or other tenants' replies.
 
 Admission control happens BEFORE a request can queue:
 
+  too-large      a frame carrying more requests than could EVER be
+                 admitted (``> max_inflight``, or ``> tenant_burst`` when
+                 rate limiting is on) is rejected as ``too_large`` with
+                 the applicable limit — not with a retry hint that could
+                 never come true;
   token bucket   per-tenant rate limit (``tenant_qps``/``tenant_burst``):
                  a tenant above its rate is rejected with
                  ``rate_limited`` + a retry-after hint sized to when its
@@ -21,8 +30,14 @@ Admission control happens BEFORE a request can queue:
                  work, never into an unbounded queue.
 
 Every shed is counted in ``stats()`` (``shed_overload`` /
-``shed_rate_limited``); ``offered == admitted + shed`` always — a request
-is either answered, errored, or visibly rejected, never silently dropped.
+``shed_rate_limited`` / ``shed_too_large``); ``offered == admitted +
+shed`` always — a request is either answered, errored, or visibly
+rejected, never silently dropped.
+
+Security: the wire decodes through the restricted unpickler, non-loopback
+binds require a shared auth token (``wire.check_bind_allowed``), and with
+a token configured every connection must open with an ``auth`` frame
+before anything else is honoured.
 
 Answers are epoch-stamped (the snapshot epoch they were computed against)
 so a client can detect staleness against the ingest frontier it expects.
@@ -30,6 +45,7 @@ so a client can detect staleness against the ingest frontier it expects.
 from __future__ import annotations
 
 import dataclasses
+import queue as queue_mod
 import socket
 import threading
 import time
@@ -69,6 +85,69 @@ class _Call:
     requests: list
 
 
+class _ConnWriter:
+    """Bounded per-connection reply writer.
+
+    ``send`` enqueues and returns immediately; a dedicated thread does the
+    actual socket writes under the frame deadline.  If the queue overflows
+    (client stopped reading) or a write stalls past its deadline, the
+    connection is torn down and every later ``send`` raises
+    ``ConnectionError`` — the slow client pays, nobody else waits.
+    """
+
+    def __init__(self, conn: socket.socket, *, deadline_s: float,
+                 max_pending: int, name: str) -> None:
+        self._conn = conn
+        self._deadline_s = deadline_s
+        self._q: queue_mod.Queue = queue_mod.Queue(maxsize=max_pending)
+        self._dead = threading.Event()
+        self._thread = threading.Thread(target=self._loop, daemon=True,
+                                        name=name)
+        self._thread.start()
+
+    def send(self, msg: tuple) -> None:
+        if self._dead.is_set():
+            raise ConnectionError("reply writer closed")
+        try:
+            self._q.put_nowait(msg)
+        except queue_mod.Full:
+            self.kill()
+            raise ConnectionError(
+                "client stopped reading: reply queue overflowed, "
+                "connection dropped") from None
+
+    def kill(self) -> None:
+        """Tear the connection down; also unblocks the connection's reader."""
+        self._dead.set()
+        try:
+            self._conn.shutdown(socket.SHUT_RDWR)
+        except OSError:
+            pass
+        try:
+            self._conn.close()
+        except OSError:
+            pass
+
+    def close(self) -> None:
+        """Stop the writer (pending replies to a gone client are dropped)."""
+        self._dead.set()
+
+    def _loop(self) -> None:
+        while True:
+            try:
+                msg = self._q.get(timeout=0.2)
+            except queue_mod.Empty:
+                if self._dead.is_set():
+                    return
+                continue
+            try:
+                wire.send_message(self._conn, msg,
+                                  deadline_s=self._deadline_s)
+            except (ConnectionError, TimeoutError, OSError):
+                self.kill()
+                return
+
+
 class Rejected(RuntimeError):
     """Client-side view of an admission rejection."""
 
@@ -93,7 +172,9 @@ class QueryServer:
                  batch_max: int = 1024, tenant_qps: float = 0.0,
                  tenant_burst: float | None = None,
                  info: dict | None = None,
-                 frame_deadline_s: float = 60.0) -> None:
+                 frame_deadline_s: float = 60.0,
+                 auth_token: str | None = None,
+                 reply_queue_max: int = 256) -> None:
         self.engine = engine
         self.snapshot_fn = snapshot_fn
         self.max_inflight = int(max_inflight)
@@ -103,6 +184,9 @@ class QueryServer:
                                   else max(1.0, tenant_qps))
         self.info = dict(info or {})
         self.frame_deadline_s = frame_deadline_s
+        self.auth_token = wire.resolve_auth_token(auth_token)
+        self.reply_queue_max = int(reply_queue_max)
+        wire.check_bind_allowed(host, self.auth_token, "QueryServer")
         self._listener = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
         self._listener.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
         self._listener.bind((host, port))
@@ -120,6 +204,8 @@ class QueryServer:
             "errored_requests": 0,
             "shed_overload": 0,
             "shed_rate_limited": 0,
+            "shed_too_large": 0,
+            "auth_failures": 0,
             "batches": 0,
             "max_batch": 0,
             "connections": 0,
@@ -157,10 +243,13 @@ class QueryServer:
             t.join(timeout=max(deadline - time.monotonic(), 0.01))
 
     def stats(self) -> dict:
+        # everything — counters, inflight AND the ewma — reads under the
+        # lock the executor writes them under, so a stats() snapshot is
+        # internally consistent, never torn against the counters
         with self._cv:
             s = dict(self._stats)
-        s["inflight"] = self._inflight
-        s["service_ewma_ms"] = round(self._service_ewma_ms, 4)
+            s["inflight"] = self._inflight
+            s["service_ewma_ms"] = round(self._service_ewma_ms, 4)
         return s
 
     # ----------------------------------------------------------- connections
@@ -184,13 +273,15 @@ class QueryServer:
             t.start()
 
     def _client_loop(self, conn: socket.socket) -> None:
-        send_lock = threading.Lock()  # handler replies vs executor results
-
-        def send(msg: tuple) -> None:
-            with send_lock:
-                wire.send_message(conn, msg,
-                                  deadline_s=self.frame_deadline_s)
-
+        try:
+            peer = conn.getpeername()
+        except OSError:
+            peer = ("?", 0)
+        writer = _ConnWriter(conn, deadline_s=self.frame_deadline_s,
+                             max_pending=self.reply_queue_max,
+                             name=f"query-write-{peer[0]}:{peer[1]}")
+        send = writer.send
+        authed = not self.auth_token
         try:
             while not self._stop.is_set():
                 msg = wire.recv_message(conn, poll_s=0.2,
@@ -198,6 +289,16 @@ class QueryServer:
                 if msg is None:
                     continue
                 kind = msg[0]
+                if kind == "auth":
+                    # tolerated (and ignored) when no token is configured,
+                    # so clients may always present their token
+                    if self.auth_token and not wire.auth_matches(
+                            self.auth_token, msg[1] if len(msg) > 1 else None):
+                        break  # counted below; never name which part failed
+                    authed = True
+                    continue
+                if not authed:
+                    break
                 if kind == "query":
                     self._admit(send, msg[1])
                 elif kind == "info_req":
@@ -209,9 +310,19 @@ class QueryServer:
                     send(("pong",))
                 else:
                     send(("error", {"error": f"unexpected frame {kind!r}"}))
+            else:
+                authed = True  # server stop, not an auth problem
+            if not authed:
+                with self._cv:
+                    self._stats["auth_failures"] += 1
+                try:
+                    send(("error", {"error": "auth required"}))
+                except (ConnectionError, TimeoutError, OSError):
+                    pass
         except (ConnectionError, TimeoutError, OSError, wire.WireError):
             pass  # client went away (or spoke junk); its session only
         finally:
+            writer.close()
             try:
                 conn.close()
             except OSError:
@@ -228,9 +339,21 @@ class QueryServer:
         tenant = str(payload.get("tenant", "default"))
         requests = list(payload.get("requests", ()))
         n = len(requests)
+        # a frame bigger than the smallest applicable admission ceiling can
+        # NEVER succeed: a finite retry-after would be a lie (the token
+        # bucket caps at burst; inflight can only reach max_inflight), so
+        # it gets a distinct verdict naming the limit instead
+        limit = self.max_inflight
+        if self.tenant_qps > 0:
+            limit = min(limit, int(self.tenant_burst))
         with self._cv:
             self._stats["offered_requests"] += n
-            if self.tenant_qps > 0:
+            if n > limit:
+                self._stats["shed_too_large"] += n
+                send_now = ("reject", {"id": req_id, "reason": "too_large",
+                                       "retry_after_ms": 0.0,
+                                       "max_requests": limit})
+            elif self.tenant_qps > 0:
                 bucket = self._buckets.get(tenant)
                 if bucket is None:
                     bucket = TokenBucket(self.tenant_qps, self.tenant_burst)
@@ -292,9 +415,6 @@ class QueryServer:
             except Exception as exc:  # noqa: BLE001 — answer sick, stay up
                 results, err = None, repr(exc)
             dt_ms = (time.perf_counter() - t0) * 1e3
-            if flat and err is None:
-                per_req = dt_ms / len(flat)
-                self._service_ewma_ms += 0.3 * (per_req - self._service_ewma_ms)
             cursor = 0
             for call in calls:
                 k = len(call.requests)
@@ -309,6 +429,9 @@ class QueryServer:
                 else:
                     reply = ("error", {"id": call.req_id, "error": err})
                 try:
+                    # hands off to the connection's writer queue — never a
+                    # socket write, so a stalled client cannot block this
+                    # loop (it loses its own connection instead)
                     call.send(reply)
                 except (ConnectionError, TimeoutError, OSError):
                     pass  # client vanished mid-flight; accounting still runs
@@ -316,6 +439,10 @@ class QueryServer:
                 self._inflight -= len(flat)
                 if err is None:
                     self._stats["served_requests"] += len(flat)
+                    if flat:
+                        per_req = dt_ms / len(flat)
+                        self._service_ewma_ms += 0.3 * (
+                            per_req - self._service_ewma_ms)
                 else:
                     self._stats["errored_requests"] += len(flat)
                 self._stats["batches"] += 1
@@ -332,13 +459,18 @@ class QueryClient:
 
     def __init__(self, address: tuple[str, int], *, tenant: str = "default",
                  connect_timeout_s: float = 30.0,
-                 frame_deadline_s: float = 60.0) -> None:
+                 frame_deadline_s: float = 60.0,
+                 auth_token: str | None = None) -> None:
         self.address = tuple(address)
         self.tenant = tenant
         self.frame_deadline_s = frame_deadline_s
         self._sock = wire.connect_with_retry(self.address,
                                              deadline_s=connect_timeout_s)
         self._next_id = 0
+        token = wire.resolve_auth_token(auth_token)
+        if token:  # must be the first frame; servers without a token ignore it
+            wire.send_message(self._sock, ("auth", token),
+                              deadline_s=frame_deadline_s)
 
     def _rpc(self, msg: tuple, *, timeout_s: float | None = None) -> tuple:
         wire.send_message(self._sock, msg, deadline_s=self.frame_deadline_s)

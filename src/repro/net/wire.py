@@ -18,9 +18,22 @@ polls up to ``poll_s`` for the first byte and returns ``None`` if the peer
 is merely quiet, but once a frame has started the remainder must arrive
 within ``frame_deadline_s`` or the read raises — a peer that wedges halfway
 through a frame can never hang its reader.
+
+Payload trust: frames are decoded with a RESTRICTED unpickler.  Only
+``repro.*`` dataclasses, numpy array/scalar reconstruction, and a short
+builtins/collections allowlist may appear as pickle globals; anything else
+(``os.system``, ``builtins.eval``, ...) raises :class:`WireError` instead
+of executing — a crafted frame from a hostile peer cannot become remote
+code execution.  On top of that, listeners refuse to bind non-loopback
+addresses unless a shared auth token is configured
+(:func:`check_bind_allowed`); with a token set, every connection must open
+with an ``auth`` frame carrying it before any other traffic is honoured.
 """
 from __future__ import annotations
 
+import hmac
+import io
+import os
 import pickle
 import socket
 import struct
@@ -62,12 +75,102 @@ FRAME_TYPES: dict[str, int] = {
     # liveness
     "ping": 30,
     "pong": 31,
+    # connection auth (first frame when a shared token is configured)
+    "auth": 40,
 }
 _KIND_BY_TYPE = {v: k for k, v in FRAME_TYPES.items()}
 
 
 class WireError(ValueError):
     """A frame violated the protocol (bad magic/version/type/length)."""
+
+
+# ---------------------------------------------------------------------------
+# restricted payload decoding
+#
+# pickle.loads on bytes from a TCP peer is remote code execution by design
+# (any global reachable by name can be called during load).  Wire payloads
+# only ever carry our own dataclasses plus numpy leaves and plain
+# containers, so the unpickler allowlists exactly that surface and treats
+# every other global as a torn/hostile stream.
+
+_SAFE_BUILTINS = frozenset({
+    "complex", "bytearray", "set", "frozenset", "range", "slice"})
+_SAFE_COLLECTIONS = frozenset({"deque", "OrderedDict"})
+# numpy's own pickle machinery (1.x uses numpy.core.*, 2.x numpy._core.*)
+_NUMPY_RECONSTRUCT_MODULES = frozenset({
+    "numpy.core.multiarray", "numpy._core.multiarray",
+    "numpy.core.numeric", "numpy._core.numeric"})
+_NUMPY_RECONSTRUCT_NAMES = frozenset({
+    "_reconstruct", "scalar", "_frombuffer"})
+_NUMPY_TOPLEVEL_NAMES = frozenset({
+    "ndarray", "dtype", "bool_", "int8", "int16", "int32", "int64",
+    "uint8", "uint16", "uint32", "uint64", "float16", "float32",
+    "float64", "complex64", "complex128", "intc", "uintc", "intp",
+    "uintp", "longlong", "ulonglong", "half", "single", "double",
+    "longdouble", "csingle", "cdouble", "clongdouble", "str_", "bytes_"})
+
+
+class _RestrictedUnpickler(pickle.Unpickler):
+    def find_class(self, module: str, name: str):
+        allowed = (
+            (module == "builtins" and name in _SAFE_BUILTINS)
+            or (module == "collections" and name in _SAFE_COLLECTIONS)
+            or (module in _NUMPY_RECONSTRUCT_MODULES
+                and name in _NUMPY_RECONSTRUCT_NAMES)
+            or (module == "numpy" and name in _NUMPY_TOPLEVEL_NAMES)
+            or (module == "numpy.dtypes" and name.endswith("DType"))
+            or module == "repro" or module.startswith("repro.")
+        )
+        if not allowed:
+            raise pickle.UnpicklingError(
+                f"global {module}.{name} is not allowed in a wire payload")
+        return super().find_class(module, name)
+
+
+def restricted_loads(data: bytes):
+    """``pickle.loads`` limited to the wire's allowlisted globals."""
+    return _RestrictedUnpickler(io.BytesIO(data)).load()
+
+
+# ---------------------------------------------------------------------------
+# bind policy + connection auth
+
+AUTH_TOKEN_ENV = "KMATRIX_NET_TOKEN"
+
+
+def resolve_auth_token(explicit: str | None = None) -> str:
+    """Explicit token, else ``$KMATRIX_NET_TOKEN``, else ``""`` (off)."""
+    if explicit:
+        return str(explicit)
+    return os.environ.get(AUTH_TOKEN_ENV, "")
+
+
+def is_loopback_host(host: str) -> bool:
+    return host == "localhost" or host == "::1" or host.startswith("127.")
+
+
+def check_bind_allowed(host: str, auth_token: str, what: str) -> None:
+    """Refuse a non-loopback listener with no auth configured.
+
+    The wire carries pickled payloads; even with the restricted unpickler
+    an open port is an ingest/query surface for anyone who can reach it.
+    Loopback binds are the default and always allowed; binding a routable
+    address is an explicit opt-in that requires a shared token
+    (``--auth-token`` / ``$KMATRIX_NET_TOKEN``) every peer must present in
+    an ``auth`` frame before any other traffic.
+    """
+    if auth_token or is_loopback_host(host):
+        return
+    raise ValueError(
+        f"{what} refuses to bind non-loopback address {host!r} without an "
+        f"auth token: pass auth_token=/--auth-token or set "
+        f"${AUTH_TOKEN_ENV}, or bind 127.0.0.1")
+
+
+def auth_matches(expected: str, presented: object) -> bool:
+    return isinstance(presented, str) and hmac.compare_digest(
+        expected, presented)
 
 
 def encode_message(msg: tuple) -> bytes:
@@ -109,7 +212,7 @@ def decode_message(buf: bytes) -> tuple:
         raise WireError(
             f"truncated frame: header promises {length} payload bytes, got {len(body)}")
     try:
-        msg = pickle.loads(body)
+        msg = restricted_loads(body)
     except Exception as exc:  # noqa: BLE001 — surface as protocol error
         raise WireError(f"undecodable {kind!r} payload: {exc!r}") from exc
     if not isinstance(msg, tuple) or not msg or msg[0] != kind:

@@ -18,7 +18,10 @@ batching its own arrived-but-unsent requests per frame, and admission
 rejections are counted as *shed* (with the server's retry-after hints
 recorded) rather than folded into latency — overload shows up as an
 accounted shed rate with bounded tail latency for admitted work, which is
-exactly the claim the admission controller makes.  Runnable as a CLI:
+exactly the claim the admission controller makes.  A connection whose
+transport dies (reset, timeout) aborts its remainder into a separate
+``aborted`` count with the exception surfaced in the report — client
+failures never masquerade as server sheds.  Runnable as a CLI:
 ``python -m repro.serving.loadgen --connect HOST:PORT``.
 """
 from __future__ import annotations
@@ -206,6 +209,11 @@ class NetLoadReport:
     shed: int
     shed_rate: float  # shed / offered — the accounted overload signal
     errors: int
+    # transport casualties are NOT sheds: a connection that died (reset,
+    # timeout) aborts its unsent/unanswered remainder, accounted here so a
+    # client-side failure can't masquerade as server admission control
+    aborted: int
+    transport_error: str | None
     connections: int
     duration_s: float
     offered_qps: float
@@ -236,15 +244,18 @@ class NetLoadGen:
     """
 
     def __init__(self, *, target_qps: float = 500.0, connections: int = 4,
-                 batch_max: int = 64, tenant: str = "default") -> None:
+                 batch_max: int = 64, tenant: str = "default",
+                 auth_token: str | None = None) -> None:
         assert connections >= 1
         self.target_qps = target_qps
         self.connections = connections
         self.batch_max = batch_max
         self.tenant = tenant
+        self.auth_token = auth_token
 
     def run(self, address: tuple[str, int],
             requests: list[eng.Request]) -> NetLoadReport:
+        from repro.net import wire
         from repro.net.query_server import QueryClient
 
         n = len(requests)
@@ -253,7 +264,9 @@ class NetLoadGen:
         lat_ms = np.full(n, np.nan)
         accepted = np.zeros(n, dtype=bool)
         errored = np.zeros(n, dtype=bool)
+        aborted = np.zeros(n, dtype=bool)
         retry_hints: list[float] = []
+        transport_errors: list[str] = []
         batches = [0]
         last_epoch: list[int | None] = [None]
         lock = threading.Lock()
@@ -261,9 +274,11 @@ class NetLoadGen:
 
         def connection_loop(conn_idx: int) -> None:
             mine = list(range(conn_idx, n, self.connections))
-            client = QueryClient(address, tenant=self.tenant)
+            served = 0
+            client = None
             try:
-                served = 0
+                client = QueryClient(address, tenant=self.tenant,
+                                     auth_token=self.auth_token)
                 while served < len(mine):
                     now = time.perf_counter() - t0[0]
                     first = arrivals[mine[served]]
@@ -290,8 +305,18 @@ class NetLoadGen:
                         else:  # server-side error: accounted, not shed
                             errored[idx] = True
                     served = hi
+            except (ConnectionError, TimeoutError, OSError,
+                    wire.WireError) as exc:
+                # the transport died, not the server's admission control:
+                # the in-flight batch and the unsent remainder are aborted,
+                # never folded into the shed count
+                with lock:
+                    transport_errors.append(repr(exc))
+                    if mine[served:]:
+                        aborted[mine[served:]] = True
             finally:
-                client.close()
+                if client is not None:
+                    client.close()
 
         threads = [threading.Thread(target=connection_loop, args=(c,),
                                     daemon=True, name=f"loadgen-conn-{c}")
@@ -306,13 +331,16 @@ class NetLoadGen:
         ok = lat_ms[accepted]
         n_acc = int(accepted.sum())
         n_err = int(errored.sum())
-        shed = n - n_acc - n_err
+        n_abort = int(aborted.sum())
+        shed = n - n_acc - n_err - n_abort
         return NetLoadReport(
             n_requests=n,
             accepted=n_acc,
             shed=shed,
             shed_rate=shed / n if n else 0.0,
             errors=n_err,
+            aborted=n_abort,
+            transport_error=transport_errors[0] if transport_errors else None,
             connections=self.connections,
             duration_s=duration,
             offered_qps=self.target_qps,
@@ -343,12 +371,16 @@ def main(argv: list[str] | None = None) -> int:
     p.add_argument("--batch-max", type=int, default=64)
     p.add_argument("--tenant", default="default")
     p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--auth-token", default="",
+                   help="shared token for a remote server "
+                        "(default: $KMATRIX_NET_TOKEN)")
     args = p.parse_args(argv)
 
     from repro.net.query_server import QueryClient
 
     address = wire.parse_hostport(args.connect)
-    probe = QueryClient(address, tenant=args.tenant)
+    probe = QueryClient(address, tenant=args.tenant,
+                        auth_token=args.auth_token or None)
     info = probe.info()
     probe.close()
     n_nodes = int(info.get("n_nodes", 0)) or 1024
@@ -357,7 +389,8 @@ def main(argv: list[str] | None = None) -> int:
                               seed=args.seed, heavy_universe=256,
                               heavy_threshold=5.0)
     gen = NetLoadGen(target_qps=args.qps, connections=args.connections,
-                     batch_max=args.batch_max, tenant=args.tenant)
+                     batch_max=args.batch_max, tenant=args.tenant,
+                     auth_token=args.auth_token or None)
     report = gen.run(address, requests)
     print(report.to_json())
     return 0

@@ -157,6 +157,134 @@ def test_parse_hostport():
             wire.parse_hostport(junk)
 
 
+# --------------------------------------------------------- wire security
+def test_wire_restricted_unpickler_blocks_code_execution():
+    """A crafted frame whose pickle names an executable global (the classic
+    ``__reduce__`` RCE gadget) must die as a WireError at decode — never
+    reach the interpreter — while every legitimate payload shape (repro
+    dataclasses, numpy arrays AND scalars, containers) still round-trips."""
+    import subprocess
+
+    class Evil:
+        def __reduce__(self):
+            return (subprocess.check_output, (["true"],))
+
+    frame = wire.encode_message(("query", {"requests": [Evil()]}))
+    with pytest.raises(wire.WireError, match="not allowed"):
+        wire.decode_message(frame)
+
+    class EvilEval:
+        def __reduce__(self):
+            return (eval, ("1+1",))
+
+    with pytest.raises(wire.WireError, match="not allowed"):
+        wire.decode_message(wire.encode_message(("query", EvilEval())))
+
+    # the allowlist still admits everything the protocol actually ships
+    from repro.serving import engine as eng
+
+    legit = ("query", {"id": 1, "tenant": "t", "requests": [
+        eng.edge_freq(1, 2), eng.heavy_nodes(16, 2.0)]})
+    out = wire.decode_message(wire.encode_message(legit))
+    assert out[1]["requests"][0].family == "edge_freq"
+    npy = ("publish", 3, [np.arange(4, dtype=np.int32)], np.int64(7),
+           {"m": np.float64(1.5), "d": collections_roundtrip()})
+    got = wire.decode_message(wire.encode_message(npy))
+    np.testing.assert_array_equal(got[2][0], np.arange(4, dtype=np.int32))
+    assert int(got[3]) == 7
+
+
+def collections_roundtrip():
+    from collections import OrderedDict
+
+    return OrderedDict(a=1)
+
+
+def test_listeners_refuse_non_loopback_bind_without_token(monkeypatch):
+    """REVIEW fix: an open, unauthenticated pickle-speaking port must never
+    happen by accident — non-loopback binds are an explicit opt-in that
+    requires a shared token."""
+    from repro.net.ingest_server import WorkerServer
+    from repro.net.query_server import QueryServer
+
+    monkeypatch.delenv(wire.AUTH_TOKEN_ENV, raising=False)
+    with pytest.raises(ValueError, match="auth token"):
+        WorkerServer("0.0.0.0", 0)
+    with pytest.raises(ValueError, match="auth token"):
+        QueryServer(_StubEngine(), _stub_snapshot, host="0.0.0.0")
+    # loopback stays the no-ceremony default
+    s = WorkerServer("127.0.0.1", 0)
+    s.close()
+    # with a token, a routable bind is allowed
+    s2 = WorkerServer("0.0.0.0", 0, auth_token="sekrit")
+    s2.close()
+    # the env var is an equivalent opt-in (deploys set it on both ends)
+    monkeypatch.setenv(wire.AUTH_TOKEN_ENV, "sekrit")
+    s3 = WorkerServer("0.0.0.0", 0)
+    assert s3.auth_token == "sekrit"
+    s3.close()
+
+
+def test_query_server_auth_token_enforced(monkeypatch):
+    """With a token configured, an unauthenticated (or wrong-token) client
+    gets its connection refused and counted; the right token works."""
+    from repro.net.query_server import QueryClient, QueryServer
+
+    monkeypatch.delenv(wire.AUTH_TOKEN_ENV, raising=False)
+    server = QueryServer(_StubEngine(), _stub_snapshot,
+                         auth_token="sekrit").start()
+    try:
+        bad = QueryClient(server.address)  # never presents the token
+        with pytest.raises((RuntimeError, ConnectionError, TimeoutError,
+                            OSError)):
+            bad.query(["a"], timeout_s=15)
+        bad.close()
+        wrong = QueryClient(server.address, auth_token="not-it")
+        with pytest.raises((RuntimeError, ConnectionError, TimeoutError,
+                            OSError)):
+            wrong.query(["a"], timeout_s=15)
+        wrong.close()
+        good = QueryClient(server.address, auth_token="sekrit")
+        assert good.query(["a"])[0] == [0.0]
+        good.close()
+        stats = server.stats()
+        assert stats["auth_failures"] >= 1
+        assert stats["served_requests"] == 1
+    finally:
+        server.stop()
+
+
+def test_worker_server_auth_token_enforced(monkeypatch):
+    """A worker host with a token aborts sessions that skip or flub auth,
+    and lets an authed peer through to the hello validation."""
+    from repro.net.ingest_server import WorkerServer
+
+    monkeypatch.delenv(wire.AUTH_TOKEN_ENV, raising=False)
+    server = WorkerServer("127.0.0.1", 0, auth_token="sekrit",
+                          hello_timeout_s=10.0)
+    host, port = server.address
+    srv_thread = threading.Thread(
+        target=lambda: server.serve_forever(max_sessions=2), daemon=True)
+    srv_thread.start()
+    try:
+        # no auth: the hello is refused
+        conn = socket.create_connection((host, port), timeout=10)
+        wire.send_message(conn, ("hello", {"nope": True}))
+        conn.close()
+        _wait(lambda: server.sessions_served >= 1, timeout_s=60)
+        assert "auth" in server.session_results[0]
+        # authed peer reaches hello validation (junk hello, but PAST auth)
+        conn2 = socket.create_connection((host, port), timeout=10)
+        wire.send_message(conn2, ("auth", "sekrit"))
+        wire.send_message(conn2, ("ping",))
+        conn2.close()
+        _wait(lambda: server.sessions_served >= 2, timeout_s=60)
+        assert "expected a hello" in server.session_results[1]
+    finally:
+        server.stop()
+        srv_thread.join(timeout=30)
+
+
 # ----------------------------------------------------------- socket drain
 def test_socket_backend_drain_conserves_and_matches_single_shot():
     """Tentpole gate over real TCP: a self-hosted socket worker drains the
@@ -443,7 +571,8 @@ def test_query_server_admission_shed_is_accounted():
             assert p["retry_after_ms"] > 0
     assert stats["offered_requests"] == (stats["admitted_requests"]
                                          + stats["shed_overload"]
-                                         + stats["shed_rate_limited"])
+                                         + stats["shed_rate_limited"]
+                                         + stats["shed_too_large"])
     assert stats["offered_requests"] == 2 * len(outcomes)
     assert stats["served_requests"] == stats["admitted_requests"]
     assert 2 * kinds.count("result") == stats["served_requests"]
@@ -469,6 +598,132 @@ def test_query_server_per_tenant_rate_limit():
         assert server.stats()["shed_rate_limited"] == 1
     finally:
         server.stop()
+
+
+def test_query_server_rejects_never_admittable_frames_as_too_large():
+    """REVIEW fix: a frame bigger than the smallest admission ceiling can
+    never succeed, so it must be rejected with a distinct ``too_large``
+    verdict (naming the limit, no lying retry-after) — and counted."""
+    from repro.net.query_server import QueryClient, QueryServer, Rejected
+
+    # bigger than tenant_burst: the token bucket caps at burst forever
+    server = QueryServer(_StubEngine(), _stub_snapshot,
+                         tenant_qps=5.0, tenant_burst=2.0).start()
+    try:
+        client = QueryClient(server.address)
+        with pytest.raises(Rejected) as excinfo:
+            client.query(["a", "b", "c"])
+        assert excinfo.value.reason == "too_large"
+        assert client.query(["a", "b"])[0] == [0.0, 1.0]  # burst-sized: fine
+        client.close()
+        stats = server.stats()
+        assert stats["shed_too_large"] == 3
+        assert stats["offered_requests"] == (stats["admitted_requests"]
+                                             + stats["shed_overload"]
+                                             + stats["shed_rate_limited"]
+                                             + stats["shed_too_large"])
+    finally:
+        server.stop()
+    # bigger than max_inflight: inflight + n > cap for every inflight >= 0
+    server = QueryServer(_StubEngine(), _stub_snapshot,
+                         max_inflight=2).start()
+    try:
+        client = QueryClient(server.address)
+        payload = client.call(["a", "b", "c"])
+        assert payload["kind"] == "reject"
+        assert payload["reason"] == "too_large"
+        assert payload["max_requests"] == 2
+        client.close()
+    finally:
+        server.stop()
+
+
+def test_slow_reader_stalls_only_its_own_connection():
+    """REVIEW fix (head-of-line blocking): replies go through bounded
+    per-connection writer queues, so a client that never reads its socket
+    cannot stall the shared executor — concurrent well-behaved clients
+    keep getting answers immediately while the stalled connection alone
+    overflows and is dropped."""
+    from repro.net.query_server import QueryClient, QueryServer
+
+    class BigEngine:
+        def execute(self, snapshot, requests):
+            # ~1 MB per reply so a handful overfills any socket buffer
+            return [types.SimpleNamespace(epoch=snapshot.epoch,
+                                          value="x" * (1 << 20))
+                    for _ in requests]
+
+    server = QueryServer(BigEngine(), _stub_snapshot,
+                         frame_deadline_s=2.0, reply_queue_max=4).start()
+    try:
+        stall = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        stall.setsockopt(socket.SOL_SOCKET, socket.SO_RCVBUF, 4096)
+        stall.connect(server.address)
+        for i in range(16):  # ~16 MB of replies nobody will ever read
+            wire.send_message(stall, ("query", {"id": i, "tenant": "stall",
+                                                "requests": ["q"]}))
+        fast = QueryClient(server.address, frame_deadline_s=30.0)
+        t0 = time.monotonic()
+        values, _ = fast.query(["a"], timeout_s=30)
+        fast_latency = time.monotonic() - t0
+        assert values == ["x" * (1 << 20)]
+        # without per-connection writers the executor would be wedged in
+        # 2 s-deadline sends to the stalled socket and this would take
+        # many seconds; with them it's immediate
+        assert fast_latency < 2.0, \
+            f"well-behaved client waited {fast_latency:.1f}s behind a " \
+            "stalled one — executor is blocking on slow-client sends"
+        fast.close()
+        stall.close()
+        # nothing silently lost: everything offered is accounted admitted
+        # (the stalled client's replies were executed then dropped at ITS
+        # dead connection, which is a delivery failure, not a shed)
+        stats = server.stats()
+        assert stats["offered_requests"] == (stats["admitted_requests"]
+                                             + stats["shed_overload"]
+                                             + stats["shed_rate_limited"]
+                                             + stats["shed_too_large"])
+    finally:
+        server.stop()
+
+
+def test_netloadgen_counts_transport_death_as_aborted_not_shed():
+    """REVIEW fix: a connection that dies mid-run (reset/timeout) must
+    surface as ``aborted`` + ``transport_error`` in the report, never be
+    folded into ``shed`` — sheds are the server's accounted admission
+    decisions, not client-side casualties."""
+    from repro.serving.loadgen import NetLoadGen
+
+    listener = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+    listener.bind(("127.0.0.1", 0))
+    listener.listen(1)
+    address = listener.getsockname()[:2]
+
+    def half_server():
+        conn, _ = listener.accept()
+        try:
+            msg = wire.recv_message(conn, poll_s=30.0)
+            wire.send_message(conn, ("result", {
+                "id": msg[1]["id"], "epoch": 1,
+                "values": [0.0] * len(msg[1]["requests"])}))
+        finally:
+            conn.close()  # dies after one answer
+
+    srv = threading.Thread(target=half_server, daemon=True)
+    srv.start()
+    try:
+        gen = NetLoadGen(target_qps=100000.0, connections=1, batch_max=4)
+        rep = gen.run(address, list(range(40)))
+    finally:
+        srv.join(timeout=30)
+        listener.close()
+    assert rep.accepted == 4  # the one answered batch
+    assert rep.aborted == 36  # in-flight + unsent remainder
+    assert rep.shed == 0, "transport death was misaccounted as shed"
+    assert rep.errors == 0
+    assert rep.transport_error is not None
+    assert (rep.accepted + rep.shed + rep.errors + rep.aborted
+            == rep.n_requests)
 
 
 def test_query_server_engine_error_answered_not_fatal():
@@ -548,4 +803,5 @@ def test_multi_connection_soak_live_ingest():
     stats = server.stats()
     assert stats["offered_requests"] == (stats["admitted_requests"]
                                          + stats["shed_overload"]
-                                         + stats["shed_rate_limited"])
+                                         + stats["shed_rate_limited"]
+                                         + stats["shed_too_large"])

@@ -22,6 +22,9 @@ Prints ``name,us_per_call,derived`` CSV rows (plus figure tables to stderr).
                       sharded hard gates, TCP query front-end QPS/p50/p99
                       at 1/2/4 connections, and an overload cell gated on
                       nonzero accounted shed with bounded accepted-p99
+  obs               — telemetry overhead (emits BENCH_obs.json): metrics-on
+                      vs metrics-off ingest edges/s + query p99, gated on
+                      metrics-on staying within 5% of metrics-off
 
 Usage: PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig7_are]
 """
@@ -779,6 +782,118 @@ def serve_net(scale: float, quick: bool,
          f"{record['socket_over_process']}x)")
 
 
+def obs_overhead(scale: float, quick: bool,
+                 out_path: str = "BENCH_obs.json") -> None:
+    """Telemetry overhead -> BENCH_obs.json (DESIGN.md §Observability).
+
+    Two arms over identical work, toggled with ``repro.obs.set_disabled``
+    (the global instrument kill-switch): a thread-backend runtime ingest
+    drain (edges/s) and an in-process open-loop query run (p99 ms).  Each
+    arm takes the best of ``reps`` walls, alternating on/off so drift
+    hits both arms equally.  Hard gate: metrics-on ingest throughput must
+    stay within 5% of metrics-off — typed instruments are per-batch work
+    (two counter incs, two histogram buckets, one span emit against
+    ~8k-edge batches), so a bigger gap means someone put telemetry on the
+    per-edge path.
+    """
+    import json as _json
+
+    from repro.obs import reset_hub, reset_trace_log, set_disabled
+    from repro.runtime import Runtime
+    from repro.serving import (
+        QueryEngine,
+        SketchRegistry,
+        mix_for_sketch,
+        synth_requests,
+        warm_bucket_ladder,
+    )
+    from repro.serving.loadgen import OpenLoopLoadGen
+
+    _log("\n== obs (telemetry overhead: metrics on vs off) ==")
+    reps = 2 if quick else 3
+
+    def ingest_eps() -> float:
+        reset_hub()
+        reset_trace_log()
+        registry = SketchRegistry(depth=5, scale=scale)
+        tenant = registry.open("cit-HepPh", "kmatrix", 256, seed=0)
+        runtime = Runtime(publish_policy="drain:0", reservoir_k=0,
+                          backend="thread")
+        runtime.attach(tenant)
+        runtime.start(pumps=False)
+        runtime.wait_ready()
+        t0 = time.time()
+        runtime.start_pumps()
+        runtime.join_pumps()
+        rep = runtime.stop(drain=True)[tenant.key.tenant_id]
+        dt = time.time() - t0
+        if rep["unaccounted_edges"]:
+            raise RuntimeError("obs bench: ingest drain lost edges")
+        return rep["ingested_edges"] / max(dt, 1e-9)
+
+    def query_p99() -> float:
+        reset_hub()
+        registry = SketchRegistry(depth=5, scale=scale)
+        tenant = registry.open("cit-HepPh", "kmatrix", 256, seed=0)
+        tenant.step(min(4, max(1, tenant.stream.num_batches // 2)))
+        tenant.publish()
+        n_nodes = tenant.stream.spec.n_nodes
+        engine = QueryEngine()
+        mix = mix_for_sketch("kmatrix")
+        kw = dict(n_nodes=n_nodes, heavy_universe=min(n_nodes, 1 << 14),
+                  heavy_threshold=100.0)
+        warm_bucket_ladder(engine, tenant.snapshot,
+                           synth_requests(128, mix, seed=99, **kw))
+        requests = synth_requests(400 if quick else 1500, mix, seed=11, **kw)
+        report = OpenLoopLoadGen(
+            target_qps=1000.0 if quick else 2000.0,
+            batch_max=256).run(engine, lambda: tenant.snapshot, requests)
+        return report.p99_ms
+
+    arms = {"on": {"eps": 0.0, "p99_ms": float("inf")},
+            "off": {"eps": 0.0, "p99_ms": float("inf")}}
+    try:
+        for _ in range(reps):
+            for arm in ("off", "on"):  # alternate so drift hits both
+                set_disabled(arm == "off")
+                arms[arm]["eps"] = max(arms[arm]["eps"], ingest_eps())
+                arms[arm]["p99_ms"] = min(arms[arm]["p99_ms"], query_p99())
+    finally:
+        set_disabled(False)
+        reset_hub()
+        reset_trace_log()
+
+    ratio = arms["on"]["eps"] / max(arms["off"]["eps"], 1e-9)
+    for arm in ("off", "on"):
+        _log(f"metrics {arm:3s}: {arms[arm]['eps']:,.0f} ingest edges/s, "
+             f"query p99 {arms[arm]['p99_ms']:.2f} ms")
+        _emit(f"obs/metrics_{arm}", 1e6 / max(arms[arm]["eps"], 1e-9),
+              f"ingest_eps={arms[arm]['eps']:.0f};"
+              f"p99_ms={arms[arm]['p99_ms']:.3f}")
+    _log(f"metrics-on/off ingest ratio: {ratio:.3f}")
+    if ratio < 0.95:
+        raise RuntimeError(
+            f"obs bench: metrics-on ingest throughput is {ratio:.1%} of "
+            "metrics-off (gate: within 5%) — telemetry has leaked onto "
+            "the per-edge hot path")
+
+    record = {
+        "bench": "obs",
+        "dataset": "cit-HepPh",
+        "scale": scale,
+        "budget_kb": 256,
+        "depth": 5,
+        "reps": reps,
+        "metrics_on": {k: round(v, 3) for k, v in arms["on"].items()},
+        "metrics_off": {k: round(v, 3) for k, v in arms["off"].items()},
+        "on_over_off_ingest": round(ratio, 4),
+        "gate_within": 0.05,
+    }
+    with open(out_path, "w") as f:
+        _json.dump(record, f, indent=2)
+    _log(f"wrote {out_path} (on/off ingest = {record['on_over_off_ingest']})")
+
+
 BENCHES = {
     "fig6_build_time": lambda a: fig6_build_time(a.scale),
     "fig7_are": lambda a: fig7_fig8_accuracy(a.scale, a.quick),
@@ -790,6 +905,7 @@ BENCHES = {
     "serve_sharded": lambda a: serve_sharded(a.scale, a.quick),
     "serve_process": lambda a: serve_process(a.scale, a.quick),
     "serve_net": lambda a: serve_net(a.scale, a.quick),
+    "obs": lambda a: obs_overhead(a.scale, a.quick),
 }
 
 

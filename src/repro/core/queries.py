@@ -98,13 +98,16 @@ def build_closure(adj_layers: jax.Array, max_hops: int | None = None, *,
     the identical boolean fixpoint — squarings of a 0/1 float matrix are
     exact in f32 for w < 2^24 — and are parity-tested in tests/test_kernels.
     """
+    from repro.obs.profile import profile_call
+
     if closure_backend(backend) == "jnp":
-        return _build_closure_jnp(adj_layers, max_hops)
+        return profile_call("closure:jnp", _build_closure_jnp,
+                            adj_layers, max_hops)
     w = adj_layers.shape[-1]
     # pow-of-two tile <= 128 that covers small widths without overpadding
     block = min(128, 1 << max(3, (max(w, 2) - 1).bit_length()))
-    return _build_closure_pallas(adj_layers, _closure_steps(w, max_hops),
-                                 block)
+    return profile_call("closure:pallas", _build_closure_pallas, adj_layers,
+                        _closure_steps(w, max_hops), block)
 
 
 def reachability_from_closure(closure: jax.Array, hi: jax.Array,

@@ -153,6 +153,17 @@ def parse_args(argv=None) -> argparse.Namespace:
                          "$KMATRIX_NET_TOKEN); REQUIRED to serve on a "
                          "non-loopback address — clients present it via "
                          "loadgen --auth-token / the same env var")
+    # ---- telemetry exposition (repro.obs) ----
+    ap.add_argument("--metrics-json", default="", metavar="PATH",
+                    help="periodically dump the merged metrics hub to PATH "
+                         "as JSON (atomic replace; same payload as the "
+                         "'metrics' wire frame — dashboard/CI food)")
+    ap.add_argument("--metrics-interval-s", type=float, default=1.0,
+                    help="with --metrics-json: seconds between dumps")
+    ap.add_argument("--span-log", default="", metavar="PATH",
+                    help="on exit, append the bounded trace-span ring "
+                         "(ingest enqueue->adopt, query accept->reply) to "
+                         "PATH as JSONL")
     args = ap.parse_args(argv)
     _valid_backends = ("thread", "process", "socket")
     if args.runtime_backend not in _valid_backends \
@@ -436,7 +447,10 @@ def sharded_main(args) -> None:
         "achieved_qps": round(report.achieved_qps, 1),
         "offered_qps": args.qps,
         "p50_ms": round(report.p50_ms, 3),
+        "p90_ms": round(report.p90_ms, 3),
         "p99_ms": round(report.p99_ms, 3),
+        "p999_ms": round(report.p999_ms, 3),
+        "latency_hist": report.latency_hist,
         "n_requests": report.n_requests,
         "final_epochs": list(tenant.epochs),
         "total_edges": tenant.snapshot.n_edges,
@@ -455,6 +469,26 @@ def sharded_main(args) -> None:
 
 def main() -> None:
     args = parse_args()
+    dumper = None
+    if args.metrics_json:
+        from repro.obs import MetricsJsonDumper
+
+        dumper = MetricsJsonDumper(args.metrics_json,
+                                   interval_s=args.metrics_interval_s).start()
+    try:
+        _run(args)
+    finally:
+        if dumper is not None:
+            dumper.stop()
+        if args.span_log:
+            from repro.obs import get_trace_log
+
+            n = get_trace_log().dump_jsonl(args.span_log)
+            print(f"span log: {n} events -> {args.span_log}",
+                  file=sys.stderr)
+
+
+def _run(args) -> None:
     if args.shards > 1:
         sharded_main(args)
         return
@@ -499,7 +533,10 @@ def main() -> None:
         "achieved_qps": round(report.achieved_qps, 1),
         "offered_qps": args.qps,
         "p50_ms": round(report.p50_ms, 3),
+        "p90_ms": round(report.p90_ms, 3),
         "p99_ms": round(report.p99_ms, 3),
+        "p999_ms": round(report.p999_ms, 3),
+        "latency_hist": report.latency_hist,
         "n_requests": report.n_requests,
         "final_epoch": final.epoch,
         "total_edges": final.n_edges,

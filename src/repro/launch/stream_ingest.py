@@ -180,19 +180,39 @@ def main() -> None:
                          "$KMATRIX_NET_TOKEN); REQUIRED to --listen on a "
                          "non-loopback address — parents present it via "
                          "the same flag/env on their socket backend")
+    ap.add_argument("--metrics-json", default="", metavar="PATH",
+                    help="periodically dump the merged metrics hub to PATH "
+                         "as JSON (atomic replace; same payload as the "
+                         "'metrics' wire frame); works in every mode, "
+                         "including --listen worker hosts")
+    ap.add_argument("--metrics-interval-s", type=float, default=1.0,
+                    help="with --metrics-json: seconds between dumps")
     args = ap.parse_args()
     valid = ("inline", "thread", "process", "socket")
     if args.runtime_backend not in valid \
             and not args.runtime_backend.startswith("socket:"):
         ap.error(f"--runtime-backend must be one of {valid} or "
                  f"socket:HOST:PORT[,...], got {args.runtime_backend!r}")
-    if args.listen:
-        listen_main(args)
-        return
-    if args.runtime_backend != "inline":
-        runtime_main(args)
-        return
+    dumper = None
+    if args.metrics_json:
+        from repro.obs import MetricsJsonDumper
 
+        dumper = MetricsJsonDumper(args.metrics_json,
+                                   interval_s=args.metrics_interval_s).start()
+    try:
+        if args.listen:
+            listen_main(args)
+        elif args.runtime_backend != "inline":
+            runtime_main(args)
+        else:
+            inline_main(args)
+    finally:
+        if dumper is not None:
+            dumper.stop()
+
+
+def inline_main(args) -> None:
+    """The original single-loop pipeline: jit ingest in this thread."""
     stream = make_stream(args.dataset, batch_size=args.batch_size,
                          seed=args.seed, scale=args.scale)
     print(f"stream: {stream.spec.name} nodes={stream.spec.n_nodes} "

@@ -314,7 +314,7 @@ class SocketWorker:
                         break
                     continue
                 self._send(("item", item.offset, item.src, item.dst,
-                            item.weight, item.n_edges))
+                            item.weight, item.n_edges, item.trace_id))
             # parent queue drained: graceful-stop sentinel; the terminal
             # `stopped` reply (which the receiver turns into _done) is sent
             # only after the remote worker joined, so every published epoch

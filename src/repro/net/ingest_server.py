@@ -60,11 +60,17 @@ def serve_worker_session(conn: socket.socket, *,
     deadline = time.monotonic() + hello_timeout_s
     authed = not auth_token
     hello = None
+    scraped = False
     while hello is None:
         if time.monotonic() > deadline:
             raise TimeoutError(
                 f"no hello frame within {hello_timeout_s}s; dropping peer")
-        msg = recv(0.5)
+        try:
+            msg = recv(0.5)
+        except ConnectionError:
+            if scraped:
+                return "scraped"  # scrape-only peer hung up cleanly
+            raise
         if msg is None:
             continue
         if msg[0] == "auth":
@@ -72,6 +78,16 @@ def serve_worker_session(conn: socket.socket, *,
                     auth_token, msg[1] if len(msg) > 1 else None):
                 raise wire.WireError("auth failed; dropping peer")
             authed = True
+            continue
+        if msg[0] == "metrics_req":
+            # scrape surface: same auth gate as a worker session — the hub
+            # exposes tenant ids and throughput, not public data
+            if not authed:
+                raise wire.WireError(
+                    "auth token required before a metrics scrape; "
+                    "dropping peer")
+            send(("metrics", scrape_payload()))
+            scraped = True
             continue
         hello = msg
     if not authed:
@@ -81,6 +97,15 @@ def serve_worker_session(conn: socket.socket, *,
         raise wire.WireError(
             f"expected a hello frame to open a worker session, got {hello[0]!r}")
     return run_ingest_worker(hello[1], recv, send)
+
+
+def scrape_payload() -> dict:
+    """One ``metrics`` scrape reply (see ``repro.obs.dump`` — the wire
+    frame, the ``--metrics-json`` file and the dashboard poll all carry
+    this exact shape)."""
+    from repro.obs.dump import scrape_payload as _payload
+
+    return _payload()
 
 
 def _selfhost_worker_main(host: str, port: int, env: dict) -> None:

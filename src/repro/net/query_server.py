@@ -53,6 +53,9 @@ from collections import deque
 from typing import Callable
 
 from repro.net import wire
+from repro.net.ingest_server import scrape_payload
+from repro.obs.hub import get_hub
+from repro.obs.trace import get_trace_log, new_trace_id
 
 
 class TokenBucket:
@@ -83,6 +86,8 @@ class _Call:
     send: Callable[[tuple], None]
     req_id: int
     requests: list
+    trace_id: str = ""       # span minted at accept (repro.obs.trace)
+    accepted_at: float = 0.0  # perf_counter at admission
 
 
 class _ConnWriter:
@@ -213,9 +218,39 @@ class QueryServer:
         self._stop = threading.Event()
         self._threads: list[threading.Thread] = []
         self._conns: list[socket.socket] = []
+        self._trace = get_trace_log()
+        # typed instruments: per-request accept->reply latency and batch
+        # occupancy live in mergeable histograms; the admission ledger is
+        # mirrored into hub counters by a scrape-time collector so the
+        # admission hot path pays nothing extra
+        hub = get_hub()
+        self._hub_latency = hub.histogram(
+            "repro_query_latency_seconds",
+            "per-request accept->reply latency")
+        self._hub_batch = hub.histogram(
+            "repro_query_batch_requests",
+            "requests coalesced per executor batch", ladder="size")
+
+    def _collect_hub(self) -> None:
+        """Scrape-time mirror of the admission ledger into hub counters —
+        exact parity with ``stats()`` at every scrape."""
+        s = self.stats()
+        hub = get_hub()
+        for key in ("offered_requests", "admitted_requests",
+                    "served_requests", "errored_requests", "shed_overload",
+                    "shed_rate_limited", "shed_too_large", "auth_failures",
+                    "batches", "connections"):
+            hub.counter(f"repro_query_{key}_total",
+                        f"query server ledger: {key}").set(s[key])
+        hub.gauge("repro_query_inflight",
+                  "admitted requests not yet answered").set(s["inflight"])
+        hub.gauge("repro_query_service_ewma_ms",
+                  "per-request service time estimate"
+                  ).set(s["service_ewma_ms"])
 
     # -------------------------------------------------------------- lifecycle
     def start(self) -> "QueryServer":
+        get_hub().add_collector(self._collect_hub)
         acceptor = threading.Thread(target=self._accept_loop, daemon=True,
                                     name="query-accept")
         executor = threading.Thread(target=self._execute_loop, daemon=True,
@@ -226,6 +261,8 @@ class QueryServer:
         return self
 
     def stop(self, timeout: float = 30.0) -> None:
+        self._collect_hub()  # freeze final ledger values, then detach
+        get_hub().remove_collector(self._collect_hub)
         self._stop.set()
         try:
             self._listener.close()
@@ -301,6 +338,10 @@ class QueryServer:
                     break
                 if kind == "query":
                     self._admit(send, msg[1])
+                elif kind == "metrics_req":
+                    # scrape surface; sits behind the same auth gate as
+                    # query frames (the `authed` check above)
+                    send(("metrics", scrape_payload()))
                 elif kind == "info_req":
                     snap = self.snapshot_fn()
                     send(("info", {**self.info, "epoch": snap.epoch,
@@ -346,6 +387,7 @@ class QueryServer:
         limit = self.max_inflight
         if self.tenant_qps > 0:
             limit = min(limit, int(self.tenant_burst))
+        call = None
         with self._cv:
             self._stats["offered_requests"] += n
             if n > limit:
@@ -379,10 +421,16 @@ class QueryServer:
                 else:
                     self._inflight += n
                     self._stats["admitted_requests"] += n
-                    self._pending.append(_Call(send, req_id, requests))
+                    call = _Call(send, req_id, requests,
+                                 trace_id=new_trace_id(),
+                                 accepted_at=time.perf_counter())
+                    self._pending.append(call)
                     self._cv.notify()
         if send_now is not None:
             send(send_now)
+        elif call is not None:
+            self._trace.emit(call.trace_id, "query", "accept",
+                             tenant=tenant, n_requests=n)
 
     # --------------------------------------------------------------- executor
     def _take_batch(self) -> list[_Call]:
@@ -408,13 +456,21 @@ class QueryServer:
                     return
                 calls = self._take_batch()
             flat = [r for c in calls for r in c.requests]
+            for call in calls:
+                self._trace.emit(call.trace_id, "query", "plan",
+                                 batch=len(flat))
+            self._hub_batch.observe(len(flat))
             t0 = time.perf_counter()
             try:
                 results = self.engine.execute(self.snapshot_fn(), flat)
                 err = None
             except Exception as exc:  # noqa: BLE001 — answer sick, stay up
                 results, err = None, repr(exc)
-            dt_ms = (time.perf_counter() - t0) * 1e3
+            t1 = time.perf_counter()
+            dt_ms = (t1 - t0) * 1e3
+            for call in calls:
+                self._trace.emit(call.trace_id, "query", "execute",
+                                 ms=round(dt_ms, 3), ok=err is None)
             cursor = 0
             for call in calls:
                 k = len(call.requests)
@@ -435,6 +491,10 @@ class QueryServer:
                     call.send(reply)
                 except (ConnectionError, TimeoutError, OSError):
                     pass  # client vanished mid-flight; accounting still runs
+                lat_s = time.perf_counter() - call.accepted_at
+                self._hub_latency.observe_n(lat_s, k)
+                self._trace.emit(call.trace_id, "query", "reply",
+                                 ms=round(lat_s * 1e3, 3))
             with self._cv:
                 self._inflight -= len(flat)
                 if err is None:
@@ -488,6 +548,14 @@ class QueryClient:
         reply = self._rpc(("info_req",))
         if reply[0] != "info":
             raise wire.WireError(f"expected info, got {reply[0]!r}")
+        return reply[1]
+
+    def metrics(self) -> dict:
+        """Scrape the server's telemetry hub: ``{"prometheus": text,
+        "state": merged_state, "ts": ...}``."""
+        reply = self._rpc(("metrics_req",))
+        if reply[0] != "metrics":
+            raise wire.WireError(f"expected metrics, got {reply[0]!r}")
         return reply[1]
 
     def call(self, requests: list, *, timeout_s: float | None = None) -> dict:

@@ -40,7 +40,12 @@ import struct
 import time
 
 MAGIC = b"KMTX"
-WIRE_VERSION = 1
+# Version history (DESIGN.md §Observability: bump on ANY schema change a
+# v(N-1) peer could misread — new frame types, new positional fields):
+#   1  PR 6 baseline
+#   2  `item` frames append trace_id; metrics_req scrape frame; publish/
+#      metrics/stopped payloads may carry an "obs" telemetry member
+WIRE_VERSION = 2
 
 _HEADER = struct.Struct(">4sHHI")
 HEADER_SIZE = _HEADER.size
@@ -65,6 +70,10 @@ FRAME_TYPES: dict[str, int] = {
     "stop": 8,
     "stopped": 9,
     "failed": 10,
+    # telemetry scrape: reply is a "metrics" frame carrying the hub's
+    # Prometheus text + merged state (served by BOTH the ingest worker
+    # host and the query front-end; requires auth when a token is set)
+    "metrics_req": 11,
     # query front-end
     "info_req": 20,
     "info": 21,

@@ -1,0 +1,23 @@
+"""Unified telemetry tier (DESIGN.md §Observability).
+
+- ``hub``: mergeable counters/gauges/log-bucketed histograms + Prometheus
+  text exposition
+- ``trace``: bounded span log with IDs propagated through queues, the
+  wire codec, and publish adoption
+- ``profile``: REPRO_PROFILE=1 timing hooks around kernel call sites
+- ``dashboard``: live terminal poller (``python -m repro.obs.dashboard``)
+"""
+from repro.obs.hub import (  # noqa: F401
+    Counter, Gauge, Histogram, MetricsHub, LADDERS,
+    get_hub, reset_hub, set_disabled, metrics_disabled,
+    render_prometheus, quantile_from_state, merge_hist_states, hist_summary,
+)
+from repro.obs.trace import (  # noqa: F401
+    TraceLog, get_trace_log, reset_trace_log, new_trace_id,
+)
+from repro.obs.profile import (  # noqa: F401
+    profiling_enabled, profile_call, profile_span,
+)
+from repro.obs.dump import (  # noqa: F401
+    MetricsJsonDumper, scrape_payload,
+)

@@ -1,0 +1,71 @@
+"""Opt-in kernel timing hooks (``REPRO_PROFILE=1``).
+
+Wraps *eager* call sites around the Pallas ingest and closure kernels —
+never code inside a jit trace, where wall timing is meaningless and
+``block_until_ready`` would poison tracing.  When enabled, each hooked
+call runs under a ``jax.profiler.TraceAnnotation`` (visible in TPU/XLA
+profiles), is blocked until ready, and its wall time lands in the hub
+histogram ``repro_profile_seconds{site=...}``.
+
+Off by default: the disabled path is a single env-cached bool check.
+"""
+from __future__ import annotations
+
+import os
+import time
+from contextlib import contextmanager
+
+__all__ = ["profiling_enabled", "profile_call", "profile_span"]
+
+_ENABLED: bool | None = None
+
+
+def profiling_enabled() -> bool:
+    global _ENABLED
+    if _ENABLED is None:
+        _ENABLED = os.environ.get("REPRO_PROFILE", "") == "1"
+    return _ENABLED
+
+
+def _reset_for_tests() -> None:
+    global _ENABLED
+    _ENABLED = None
+
+
+def _record(site: str, dt_s: float) -> None:
+    from repro.obs.hub import get_hub
+    get_hub().histogram(
+        "repro_profile_seconds",
+        "wall time of profiled kernel call sites (REPRO_PROFILE=1)",
+        site=site).observe(dt_s)
+
+
+@contextmanager
+def profile_span(site: str):
+    """Context manager form for multi-statement regions."""
+    if not profiling_enabled():
+        yield
+        return
+    import jax
+    with jax.profiler.TraceAnnotation(site):
+        t0 = time.perf_counter()
+        yield
+    _record(site, time.perf_counter() - t0)
+
+
+def profile_call(site: str, fn, *args, **kwargs):
+    """Call ``fn`` and, when profiling, block on its result and record
+    the wall time.  The result is returned either way."""
+    if not profiling_enabled():
+        return fn(*args, **kwargs)
+    import jax
+    with jax.profiler.TraceAnnotation(site):
+        t0 = time.perf_counter()
+        out = fn(*args, **kwargs)
+        try:
+            jax.block_until_ready(out)
+        except Exception:
+            pass  # non-array outputs time the dispatch only
+        dt = time.perf_counter() - t0
+    _record(site, dt)
+    return out

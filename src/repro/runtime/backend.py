@@ -54,6 +54,8 @@ import time
 import numpy as np
 
 from repro.net import wire
+from repro.obs.hub import get_hub
+from repro.obs.trace import get_trace_log
 from repro.runtime.metrics import WorkerMetrics
 from repro.runtime.queueing import BoundedEdgeQueue, QueueItem
 from repro.runtime.worker import (
@@ -315,6 +317,10 @@ def run_ingest_worker(spec: _ChildSpec, recv, send) -> str:
                 "reservoir": (reservoir.state_dict()
                               if reservoir is not None else None),
                 "metrics": worker.metrics_snapshot(),
+                # telemetry rides the beat it already has: cumulative hub
+                # state (parent adopts = replace-then-sum) + drained spans
+                "obs": {"hub": get_hub().state(),
+                        "trace": get_trace_log().drain()},
             }))
 
         worker.on_publish = ship
@@ -331,14 +337,19 @@ def run_ingest_worker(spec: _ChildSpec, recv, send) -> str:
             msg = recv(0.1)
             now = time.monotonic()
             if now - last_beat >= 0.25:
-                send(("metrics", worker.metrics_snapshot()))
+                send(("metrics", worker.metrics_snapshot(),
+                      {"hub": get_hub().state(),
+                       "trace": get_trace_log().drain()}))
                 last_beat = now
             if msg is None:
                 continue
             kind = msg[0]
             if kind == "item":
-                _, offset, src, dst, weight, n_edges = msg
-                item = QueueItem(offset, src, dst, weight, n_edges)
+                # v2 frames append trace_id; *rest keeps v1-shaped tuples
+                # (e.g. replayed captures) parseable rather than a crash
+                _, offset, src, dst, weight, n_edges, *rest = msg
+                item = QueueItem(offset, src, dst, weight, n_edges,
+                                 trace_id=rest[0] if rest else "")
                 while not local_queue.put(item, timeout=0.2):
                     if worker.state == FAILED:
                         break  # surfaced at the top of the loop
@@ -355,7 +366,9 @@ def run_ingest_worker(spec: _ChildSpec, recv, send) -> str:
                           worker.error_tb or "",
                           worker.metrics_snapshot()))
                     return "failed"
-                send(("stopped", worker.metrics_snapshot()))
+                send(("stopped", worker.metrics_snapshot(),
+                      {"hub": get_hub().state(),
+                       "trace": get_trace_log().drain()}))
                 return "stopped"
             elif kind == "ping":
                 send(("pong",))
@@ -401,6 +414,27 @@ def _child_main(spec: _ChildSpec, in_q, out_q) -> None:
         sys.exit(1)
 
 
+def _absorb_worker_obs(h, obs: dict | None, epoch: int | None = None) -> None:
+    """Fold a remote worker's shipped telemetry into the parent: adopt its
+    cumulative hub state (replace-then-sum keyed by tenant, so later beats
+    supersede earlier ones) and absorb its drained span events.  A span the
+    child marked ``publish`` becomes visible parent-side now — close the
+    chain with an ``adopt`` event carrying the adopted epoch."""
+    if not obs:
+        return
+    tid = h.tenant.key.tenant_id
+    if obs.get("hub"):
+        get_hub().adopt(f"worker:{tid}", obs["hub"])
+    events = obs.get("trace") or []
+    log = get_trace_log()
+    log.absorb(events)
+    if epoch is not None:
+        for ev in events:
+            if ev.get("event") == "publish" and ev.get("epoch") == epoch:
+                log.emit(ev["trace"], "ingest", "adopt", epoch=epoch,
+                         tenant=tid)
+
+
 def dispatch_parent_message(h, msg) -> None:
     """Parent-side dispatch of one worker→parent message, shared by every
     remote transport (``ProcessWorker`` and ``repro.net``'s
@@ -415,6 +449,8 @@ def dispatch_parent_message(h, msg) -> None:
         h._ready.set()
     elif kind == "metrics":
         h._last_metrics = msg[1]
+        if len(msg) > 2:
+            _absorb_worker_obs(h, msg[2])
     elif kind == "publish":
         payload = msg[1]
         sketch = jax.tree_util.tree_unflatten(
@@ -426,6 +462,7 @@ def dispatch_parent_message(h, msg) -> None:
         h._last_metrics = payload["metrics"]
         if h.reservoir is not None and payload["reservoir"] is not None:
             h.reservoir.load_state_dict(payload["reservoir"])
+        _absorb_worker_obs(h, payload.get("obs"), epoch=payload["epoch"])
         if h.on_publish is not None:
             h.on_publish(snap)
     elif kind == "checkpointed":
@@ -433,6 +470,8 @@ def dispatch_parent_message(h, msg) -> None:
         h._ckpt_event.set()
     elif kind == "stopped":
         h._last_metrics = msg[1]
+        if len(msg) > 2:
+            _absorb_worker_obs(h, msg[2])
         h.state = STOPPED
         h._ready.set()
         h._ckpt_event.set()
@@ -621,7 +660,7 @@ class ProcessWorker:
                 continue
             msg = wire.encode_message(
                 ("item", item.offset, item.src, item.dst, item.weight,
-                 item.n_edges))
+                 item.n_edges, item.trace_id))
             placed = False
             while not placed:
                 try:

@@ -19,14 +19,20 @@ class RateEWMA:
         self.halflife_s = halflife_s
         self._rate = 0.0
         self._last: float | None = None
+        self._carry = 0.0
 
     def update(self, n: float, now: float | None = None) -> None:
         now = time.monotonic() if now is None else now
         if self._last is None:
+            # First sample defines the interval start; its count can't be
+            # turned into a rate yet, so carry it into the next interval
+            # instead of dropping it (which understated early rates).
             self._last = now
+            self._carry = n
             return
         dt = max(now - self._last, 1e-9)
-        inst = n / dt
+        inst = (n + self._carry) / dt
+        self._carry = 0.0
         alpha = 1.0 - 0.5 ** (dt / self.halflife_s)
         self._rate += alpha * (inst - self._rate)
         self._last = now
@@ -60,6 +66,32 @@ class WorkerMetrics:
 
     def __post_init__(self) -> None:
         self.edge_rate = RateEWMA()
+        self._hub_edges = None
+        self._hub_batches = None
+        self._hub_batch_hist = None
+        self._hub_publishes = None
+        self._hub_publish_hist = None
+
+    def bind_hub(self, tenant_id: str, backend: str = "") -> None:
+        """Mirror this worker's counters into typed hub instruments
+        (repro.obs), labeled by tenant/backend.  In remote workers the hub
+        is child-local; its state reaches the parent via metrics beats."""
+        from repro.obs.hub import get_hub
+        hub = get_hub()
+        labels = {"tenant": tenant_id}
+        if backend:
+            labels["backend"] = backend
+        self._hub_edges = hub.counter(
+            "repro_ingest_edges_total", "edges ingested", **labels)
+        self._hub_batches = hub.counter(
+            "repro_ingest_batches_total", "batches ingested", **labels)
+        self._hub_batch_hist = hub.histogram(
+            "repro_ingest_batch_edges", "edges per ingested batch",
+            ladder="size", **labels)
+        self._hub_publishes = hub.counter(
+            "repro_publish_total", "snapshot publishes", **labels)
+        self._hub_publish_hist = hub.histogram(
+            "repro_publish_latency_seconds", "publish latency", **labels)
 
     def note_ingest(self, n_edges: int, now: float) -> None:
         if not self.first_ingest_at:
@@ -69,6 +101,10 @@ class WorkerMetrics:
         self.ingested_edges += n_edges
         self.batches_since_publish += 1
         self.edge_rate.update(n_edges, now)
+        if self._hub_edges is not None:
+            self._hub_edges.inc(n_edges)
+            self._hub_batches.inc()
+            self._hub_batch_hist.observe(n_edges)
 
     def note_publish(self, latency_s: float, now: float) -> None:
         self.publishes += 1
@@ -76,6 +112,9 @@ class WorkerMetrics:
         self.last_publish_at = now
         self.last_publish_latency_s = latency_s
         self.publish_latency_sum_s += latency_s
+        if self._hub_publishes is not None:
+            self._hub_publishes.inc()
+            self._hub_publish_hist.observe(latency_s)
 
     def note_checkpoint(self, now: float) -> None:
         self.checkpoints += 1
@@ -85,7 +124,11 @@ class WorkerMetrics:
                  overflow_edges: int = 0, now: float | None = None) -> dict:
         """One JSON-able metrics view; ``queue_stats`` from the worker's queue."""
         now = time.monotonic() if now is None else now
-        elapsed = max(now - self.started_at, 1e-9) if self.started_at else 0.0
+        # Lifetime throughput walls at the FIRST INGEST, not worker start:
+        # billing spawn/compile warmup understated the rate and contradicted
+        # the bench wall in runtime/backend.py (which uses first_ingest_at).
+        elapsed = max(now - self.first_ingest_at, 1e-9) \
+            if self.first_ingest_at else 0.0
         return {
             "state": state,
             "epoch": epoch,

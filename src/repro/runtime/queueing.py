@@ -46,12 +46,17 @@ class QueueItem:
     dst: np.ndarray
     weight: np.ndarray
     n_edges: int  # non-padding updates (weight > 0), precomputed once
+    # span ID minted at enqueue (repro.obs.trace); rides queues, spills,
+    # and v2 wire `item` frames so the batch's enqueue -> dispatch ->
+    # publish -> adopt chain is reconstructable on any backend
+    trace_id: str = ""
 
     @staticmethod
     def from_arrays(offset: int, src: np.ndarray, dst: np.ndarray,
-                    weight: np.ndarray) -> "QueueItem":
+                    weight: np.ndarray, trace_id: str = "") -> "QueueItem":
         return QueueItem(offset, src, dst, weight,
-                         n_edges=int(np.count_nonzero(weight > 0)))
+                         n_edges=int(np.count_nonzero(weight > 0)),
+                         trace_id=trace_id)
 
 
 class BoundedEdgeQueue:
@@ -116,16 +121,18 @@ class BoundedEdgeQueue:
         with open(tmp, "wb") as f:
             np.savez(f, offset=np.int64(item.offset), src=item.src,
                      dst=item.dst, weight=item.weight,
-                     n_edges=np.int64(item.n_edges))
+                     n_edges=np.int64(item.n_edges),
+                     trace_id=np.str_(item.trace_id))
         os.replace(tmp, path)
 
     def _spill_read(self, idx: int) -> QueueItem:
         """File I/O for claimed slot ``idx`` — called OUTSIDE the lock."""
         path = self._spill_path(idx)
         with np.load(path) as data:
+            trace_id = str(data["trace_id"]) if "trace_id" in data else ""
             item = QueueItem(int(data["offset"]), data["src"].copy(),
                              data["dst"].copy(), data["weight"].copy(),
-                             int(data["n_edges"]))
+                             int(data["n_edges"]), trace_id=trace_id)
         os.remove(path)
         return item
 

@@ -26,6 +26,8 @@ import os
 import threading
 import time
 
+from repro.obs.hub import get_hub
+from repro.obs.trace import get_trace_log, new_trace_id
 from repro.runtime.backend import WorkerFailure, resolve_backend
 from repro.runtime.queueing import BLOCK, SPILL, BoundedEdgeQueue, QueueItem
 from repro.runtime.worker import FAILED, restore_worker_state
@@ -57,13 +59,17 @@ class StreamPump(threading.Thread):
         end = self.stream.num_batches
         if self.max_batches is not None:
             end = min(end, self.start_offset + self.max_batches)
+        trace = get_trace_log()
         while i < end and not self._stop_event.is_set():
             src, dst, w = self.stream.batch_numpy(i)
-            item = QueueItem.from_arrays(i, src, dst, w)
+            item = QueueItem.from_arrays(i, src, dst, w,
+                                         trace_id=new_trace_id())
             while not self._stop_event.is_set():
                 if self.queue.put(item, timeout=0.2):
                     self.offered_batches += 1
                     self.offered_edges += item.n_edges
+                    trace.emit(item.trace_id, "ingest", "enqueue",
+                               offset=i, n_edges=item.n_edges)
                     break
                 if self.queue.closed:
                     return  # killed under us; offered stays = accepted
@@ -93,10 +99,14 @@ class TenantRuntime:
     def submit(self, src, dst, weight, timeout: float | None = None) -> bool:
         """Enqueue an external (non-pump) batch; offsets are synthetic (-1)
         so checkpoint replay does not apply to externally-submitted edges."""
-        item = QueueItem.from_arrays(-1, src, dst, weight)
+        item = QueueItem.from_arrays(-1, src, dst, weight,
+                                     trace_id=new_trace_id())
         ok = self.queue.put(item, timeout=timeout)
         if ok:
             self._external_edges += item.n_edges
+            get_trace_log().emit(item.trace_id, "ingest", "enqueue",
+                                 offset=-1, n_edges=item.n_edges,
+                                 tenant=self.tenant_id)
         return ok
 
     def conservation(self) -> dict:
@@ -149,6 +159,33 @@ class Runtime:
         self._handles: dict[str, TenantRuntime] = {}
         self._started = False
         self._lock = threading.Lock()
+        self._hub_collector = None
+
+    # --------------------------------------------------------------- telemetry
+    def _collect_hub(self) -> None:
+        """Hub collector (runs on every scrape/state): refresh per-tenant
+        gauges from the authoritative snapshot dicts.  Remote workers'
+        hub states are adopted as their beats arrive (see
+        ``backend._absorb_worker_obs``), not here."""
+        hub = get_hub()
+        backend = self.backend.name
+        for h in self.handles():
+            try:
+                snap = h.worker.metrics_snapshot()
+            except Exception:
+                continue
+            labels = {"tenant": h.tenant_id, "backend": backend}
+            hub.gauge("repro_queue_depth",
+                      "batches waiting in the bounded ingest queue",
+                      **labels).set(snap.get("queue_depth") or 0)
+            hub.gauge("repro_epoch", "published snapshot epoch",
+                      **labels).set(snap.get("epoch") or 0)
+            hub.gauge("repro_ingest_edges_per_s",
+                      "recent ingest rate (EWMA)",
+                      **labels).set(snap.get("edges_per_s_ewma") or 0.0)
+            hub.counter("repro_queue_dropped_edges_total",
+                        "edges dropped by backpressure", **labels
+                        ).set(snap.get("dropped_edges") or 0)
 
     # ------------------------------------------------------------ composition
     def _tenant_dir(self, base: str | None, tenant) -> str | None:
@@ -230,6 +267,9 @@ class Runtime:
             if self._started:
                 return
             self._started = True
+        if self._hub_collector is None:
+            self._hub_collector = self._collect_hub
+            get_hub().add_collector(self._hub_collector)
         for h in self.handles():
             h.worker.start()
         if pumps:
@@ -286,6 +326,12 @@ class Runtime:
             if h.worker.is_alive():
                 h.worker.join(timeout=max(deadline - time.monotonic(), 0.01))
             h.queue.close()
+        if self._hub_collector is not None:
+            # final refresh, then detach: a stopped runtime must not keep
+            # running collector callbacks on later scrapes
+            self._collect_hub()
+            get_hub().remove_collector(self._hub_collector)
+            self._hub_collector = None
         report = self.report()
         if raise_on_failure:
             failures = [
@@ -305,6 +351,9 @@ class Runtime:
         Pending deltas and queued batches are lost exactly as they would be
         in a process kill; a later ``attach(restore=True)`` replays from the
         last checkpoint (see tests/test_runtime.py conservation-on-resume)."""
+        if self._hub_collector is not None:
+            get_hub().remove_collector(self._hub_collector)
+            self._hub_collector = None
         for h in self.handles():
             if h.pump is not None:
                 h.pump.request_stop()

@@ -31,6 +31,8 @@ import numpy as np
 
 from repro.checkpoint import store
 from repro.core.types import EdgeBatch
+from repro.obs.profile import profile_span
+from repro.obs.trace import get_trace_log
 from repro.runtime.metrics import WorkerMetrics
 from repro.runtime.policies import PublishPolicy
 from repro.runtime.queueing import BoundedEdgeQueue, QueueItem
@@ -73,6 +75,12 @@ class IngestWorker(threading.Thread):
         self.coalesce_batches = max(1, coalesce_batches)
         self.coalesce_target = coalesce_target
         self.metrics = WorkerMetrics()
+        self.metrics.bind_hub(tenant.key.tenant_id)
+        self._trace = get_trace_log()
+        # trace IDs ingested since the last publish; the publish event
+        # closes them all with the epoch they became visible in (bounded:
+        # a pathological publish policy must not grow this without limit)
+        self._pending_traces: list[str] = []
         self.state = CREATED
         self.error: BaseException | None = None
         self.error_tb: str | None = None  # formatted traceback, for callers
@@ -162,10 +170,21 @@ class IngestWorker(threading.Thread):
             self.state = FAILED
 
     # ----------------------------------------------------------------- ingest
+    def _note_dispatch(self, item: QueueItem) -> None:
+        if not item.trace_id:
+            return
+        self._trace.emit(item.trace_id, "ingest", "dispatch",
+                         offset=item.offset, n_edges=item.n_edges,
+                         tenant=self.tenant.key.tenant_id)
+        if len(self._pending_traces) < 256:
+            self._pending_traces.append(item.trace_id)
+
     def _ingest(self, item: QueueItem, now: float) -> None:
         batch = EdgeBatch.from_numpy(item.src, item.dst, item.weight)
+        self._note_dispatch(item)
         with self._state_lock:
-            self.tenant.buffer.ingest(batch)
+            with profile_span("ingest"):
+                self.tenant.buffer.ingest(batch)
             if self.reservoir is not None:
                 self.reservoir.offer_batch(item.src, item.dst, item.weight)
             if item.offset >= 0:
@@ -195,8 +214,11 @@ class IngestWorker(threading.Thread):
         granule = max(256, self.coalesce_target // 4)
         bucket = max(granule, -(-n // granule) * granule)
         batch = EdgeBatch.pad_to(src, dst, weight, bucket)
+        for it in items:
+            self._note_dispatch(it)
         with self._state_lock:
-            self.tenant.buffer.ingest(batch)
+            with profile_span("ingest"):
+                self.tenant.buffer.ingest(batch)
             if self.reservoir is not None:
                 for it in items:
                     self.reservoir.offer_batch(it.src, it.dst, it.weight)
@@ -219,6 +241,10 @@ class IngestWorker(threading.Thread):
         now = time.monotonic()
         self.metrics.note_publish(now - t0, now)
         self.policy.note_published(now)
+        for tid in self._pending_traces:
+            self._trace.emit(tid, "ingest", "publish", epoch=snap.epoch,
+                             tenant=self.tenant.key.tenant_id)
+        self._pending_traces.clear()
         if self.on_publish is not None:
             self.on_publish(snap)
         return snap

@@ -19,6 +19,7 @@ answers every group with one dense jitted call.  Two properties matter:
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import OrderedDict
 from typing import Any, Callable
 
@@ -215,15 +216,27 @@ class QueryEngine:
         for i, r in enumerate(requests):
             groups.setdefault(self._group_key(r), []).append(i)
 
+        from repro.obs.hub import get_hub
+        hub = get_hub()
         for key, idxs in groups.items():
             family = key[0]
             handler = self._HANDLERS[family]
+            t0 = time.perf_counter()
             # a group can exceed the largest bucket; split it rather than
             # overflowing the padded arrays
             for lo in range(0, len(idxs), self.max_bucket):
                 handler(self, snapshot, sk, mod, key,
                         idxs[lo:lo + self.max_bucket], requests, values)
                 self.batches_planned += 1
+            # per-query-class telemetry (gSketch frames sketch quality per
+            # query class; latency gets the same treatment)
+            hub.counter("repro_engine_requests_total",
+                        "requests planned, by query class",
+                        family=family).inc(len(idxs))
+            hub.histogram("repro_engine_group_seconds",
+                          "handler wall time per planned group, "
+                          "by query class",
+                          family=family).observe(time.perf_counter() - t0)
 
         return [Result(requests[i].family, snapshot.epoch, values[i])
                 for i in range(len(requests))]

@@ -34,8 +34,17 @@ from typing import Callable
 
 import numpy as np
 
+from repro.obs.hub import Histogram, hist_summary, merge_hist_states
 from repro.serving import engine as eng
 from repro.serving.snapshot import Snapshot
+
+
+def _latency_summary_ms(hstate: dict) -> dict:
+    """``hist_summary`` of a seconds-ladder state, rescaled to ms for the
+    JSON report (counts stay counts; every value field becomes *_ms)."""
+    s = hist_summary(hstate)
+    return {k: (v if k == "count" else round(v * 1e3, 4))
+            for k, v in s.items()}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -120,17 +129,28 @@ class LoadReport:
     offered_qps: float
     achieved_qps: float
     p50_ms: float
+    p90_ms: float
     p99_ms: float
+    p999_ms: float
     mean_ms: float
     max_ms: float
     n_batches: int
     family_counts: dict[str, int]
+    # summary of the mergeable log-bucket histogram the latencies were also
+    # fed through (repro.obs.hub ladder "latency"); p* here are bucket-
+    # interpolated, the raw-array percentiles above stay exact
+    latency_hist: dict = dataclasses.field(default_factory=dict)
 
     def to_json(self) -> str:
-        d = dataclasses.asdict(self)
-        d = {k: (round(v, 4) if isinstance(v, float) else v)
-             for k, v in d.items()}
-        return json.dumps(d)
+        return json.dumps(_round_floats(dataclasses.asdict(self)))
+
+
+def _round_floats(d):
+    if isinstance(d, float):
+        return round(d, 4)
+    if isinstance(d, dict):
+        return {k: _round_floats(v) for k, v in d.items()}
+    return d
 
 
 class OpenLoopLoadGen:
@@ -182,6 +202,12 @@ class OpenLoopLoadGen:
                 between_batches()
         duration = time.perf_counter() - t0
 
+        # feed the same latencies (seconds) through a mergeable log-bucket
+        # histogram so the report carries a state other runs can sum with
+        hist = Histogram("loadgen_latency_seconds", {})
+        hist.observe_many(latencies)
+        hstate = hist.state()
+
         lat_ms = latencies * 1e3
         return LoadReport(
             n_requests=n,
@@ -189,11 +215,14 @@ class OpenLoopLoadGen:
             offered_qps=self.target_qps,
             achieved_qps=n / duration,
             p50_ms=float(np.percentile(lat_ms, 50)),
+            p90_ms=float(np.percentile(lat_ms, 90)),
             p99_ms=float(np.percentile(lat_ms, 99)),
+            p999_ms=float(np.percentile(lat_ms, 99.9)),
             mean_ms=float(lat_ms.mean()),
             max_ms=float(lat_ms.max()),
             n_batches=n_batches,
             family_counts=family_counts,
+            latency_hist=_latency_summary_ms(hstate),
         )
 
 
@@ -219,18 +248,21 @@ class NetLoadReport:
     offered_qps: float
     achieved_qps: float  # accepted / duration
     p50_ms: float
+    p90_ms: float
     p99_ms: float
+    p999_ms: float
     mean_ms: float
     max_ms: float
     n_batches: int
     mean_retry_after_ms: float
     last_epoch: int | None  # freshest epoch stamped on any answer
+    # per-connection log-bucket histograms merged parent-side — the same
+    # exact-sum merge the obs tier uses across workers, so per-connection
+    # latency distributions compose without shipping raw samples
+    latency_hist: dict = dataclasses.field(default_factory=dict)
 
     def to_json(self) -> str:
-        d = dataclasses.asdict(self)
-        d = {k: (round(v, 4) if isinstance(v, float) else v)
-             for k, v in d.items()}
-        return json.dumps(d)
+        return json.dumps(_round_floats(dataclasses.asdict(self)))
 
 
 class NetLoadGen:
@@ -271,9 +303,14 @@ class NetLoadGen:
         last_epoch: list[int | None] = [None]
         lock = threading.Lock()
         t0 = [0.0]
+        # one mergeable histogram per connection; merged after the join so
+        # the report's distribution is the exact sum of per-connection ones
+        conn_hists = [Histogram(f"conn{c}_latency_seconds", {})
+                      for c in range(self.connections)]
 
         def connection_loop(conn_idx: int) -> None:
             mine = list(range(conn_idx, n, self.connections))
+            hist = conn_hists[conn_idx]
             served = 0
             client = None
             try:
@@ -297,6 +334,7 @@ class NetLoadGen:
                         if payload["kind"] == "result":
                             accepted[idx] = True
                             lat_ms[idx] = (done - arrivals[idx]) * 1e3
+                            hist.observe_many(done - arrivals[idx])
                             if payload["epoch"] is not None:
                                 last_epoch[0] = max(
                                     last_epoch[0] or 0, payload["epoch"])
@@ -333,6 +371,9 @@ class NetLoadGen:
         n_err = int(errored.sum())
         n_abort = int(aborted.sum())
         shed = n - n_acc - n_err - n_abort
+        merged = conn_hists[0].state()
+        for h in conn_hists[1:]:
+            merged = merge_hist_states(merged, h.state())
         return NetLoadReport(
             n_requests=n,
             accepted=n_acc,
@@ -346,13 +387,17 @@ class NetLoadGen:
             offered_qps=self.target_qps,
             achieved_qps=n_acc / duration if duration > 0 else 0.0,
             p50_ms=float(np.percentile(ok, 50)) if n_acc else float("nan"),
+            p90_ms=float(np.percentile(ok, 90)) if n_acc else float("nan"),
             p99_ms=float(np.percentile(ok, 99)) if n_acc else float("nan"),
+            p999_ms=(float(np.percentile(ok, 99.9))
+                     if n_acc else float("nan")),
             mean_ms=float(ok.mean()) if n_acc else float("nan"),
             max_ms=float(ok.max()) if n_acc else float("nan"),
             n_batches=batches[0],
             mean_retry_after_ms=(float(np.mean(retry_hints))
                                  if retry_hints else 0.0),
             last_epoch=last_epoch[0],
+            latency_hist=_latency_summary_ms(merged),
         )
 
 

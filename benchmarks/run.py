@@ -589,6 +589,7 @@ def serve_net(scale: float, quick: bool,
 
     from benchmarks.serve_bench import run_serve_bench_sharded
     from repro.net.query_server import QueryServer
+    from repro.obs.hub import get_hub, reset_hub
     from repro.serving import (
         QueryEngine,
         SketchRegistry,
@@ -600,13 +601,33 @@ def serve_net(scale: float, quick: bool,
 
     _log("\n== serve_net (socket ingest transport + TCP query front-end) ==")
 
+    def _wire_bytes() -> dict:
+        """Parent-LOCAL wire byte counters (repro.net.wire instruments).
+
+        Read ``state()``, never ``merged_state()``: the workers' shipped
+        hub states are adopted alongside, and every frame is counted on
+        both ends — merging would double the totals."""
+        sent: dict[str, int] = {}
+        recv: dict[str, int] = {}
+        publish_bytes = 0
+        for name, labels, value in get_hub().state()["counters"]:
+            kind = labels.get("kind", "?")
+            if name == "wire_bytes_sent":
+                sent[kind] = sent.get(kind, 0) + int(value)
+            elif name == "wire_bytes_recv":
+                recv[kind] = recv.get(kind, 0) + int(value)
+            elif name == "publish_bytes":
+                publish_bytes += int(value)
+        return {"sent": sent, "recv": recv, "publish_bytes": publish_bytes}
+
     # ---- cell 1: socket vs process ingest transport, gates on -------------
     transports: dict[str, dict] = {}
     for backend in ("process", "socket"):
+        reset_hub()  # per-cell wire accounting (parent-local)
         rec = run_serve_bench_sharded(
             scale=scale, n_requests=400 if quick else 1500,
             target_qps=1000.0 if quick else 2000.0, n_shards=2,
-            runtime_backend=backend)
+            runtime_backend=backend, ingest_repeats=3)
         if not rec["conservation_ok"]:
             raise RuntimeError(
                 f"serve_net {backend} transport: cross-shard conservation "
@@ -626,6 +647,7 @@ def serve_net(scale: float, quick: bool,
             raise RuntimeError(
                 f"serve_net {backend} transport: dedicated ingest drain "
                 "lost edges")
+        wire_bytes = _wire_bytes()
         transports[backend] = {
             "ingest_edges_per_s": rec["ingest_edges_per_s_dedicated"],
             "ingest_edges_per_s_during_serve":
@@ -634,14 +656,75 @@ def serve_net(scale: float, quick: bool,
             "p99_ms": rec["p99_ms"],
             "conservation_ok": rec["conservation_ok"],
             "sharded_exact": rec["sharded_exact"],
+            "wire_bytes": wire_bytes,
         }
         _log(f"{backend:8s} transport: "
              f"{rec['ingest_edges_per_s_dedicated']:,.0f} ingest edges/s "
-             f"(dedicated), p99 {rec['p99_ms']} ms")
+             f"(dedicated), p99 {rec['p99_ms']} ms, "
+             f"publish_bytes {wire_bytes['publish_bytes']:,}")
         _emit(f"net/ingest_{backend}",
               1e6 / max(rec["ingest_edges_per_s_dedicated"], 1e-9),
               f"ingest_eps={rec['ingest_edges_per_s_dedicated']};"
               f"qps={rec['achieved_qps']};p99_ms={rec['p99_ms']}")
+
+    # ---- cell 1b: delta vs full publish payloads (A/B, gate on) -----------
+    # same stream, same every:1 policy, process backend; only the publish
+    # encoding differs.  Gates: delta must ship measurably fewer bytes per
+    # epoch AND the final adopted sketches must be bit-identical — the
+    # sparse delta path is an optimisation, never an approximation.
+    import jax as _jax
+
+    from repro.runtime import Runtime
+    from repro.runtime.backend import ProcessBackend
+
+    publish_rows: dict[str, dict] = {}
+    finals: dict[str, object] = {}
+    for mode in ("delta", "full"):
+        reset_hub()
+        t = SketchRegistry(depth=5, scale=scale).open(
+            "cit-HepPh", "kmatrix", 256, seed=0)
+        rt = Runtime(publish_policy="every:1", poll_s=0.01,
+                     backend=ProcessBackend(publish_mode=mode))
+        rt.attach(t)
+        rt.start(pumps=False)
+        rt.wait_ready()
+        rt.start_pumps()
+        rt.join_pumps()
+        rep = rt.stop(drain=True)[t.key.tenant_id]
+        if rep["unaccounted_edges"]:
+            raise RuntimeError(
+                f"serve_net publish mode={mode}: conservation failed "
+                f"({rep['unaccounted_edges']} unaccounted edges)")
+        pub_bytes = _wire_bytes()["publish_bytes"]
+        epochs = int(rep.get("publishes") or 1)
+        publish_rows[mode] = {
+            "publish_bytes": pub_bytes,
+            "epochs": epochs,
+            "publish_bytes_per_epoch": round(pub_bytes / max(epochs, 1)),
+        }
+        finals[mode] = t.snapshot
+        _log(f"publish mode={mode}: {pub_bytes:,} publish bytes over "
+             f"{epochs} epochs "
+             f"({publish_rows[mode]['publish_bytes_per_epoch']:,}/epoch)")
+        _emit(f"net/publish_{mode}",
+              publish_rows[mode]["publish_bytes_per_epoch"],
+              f"publish_bytes={pub_bytes};epochs={epochs}")
+    if not (0 < publish_rows["delta"]["publish_bytes_per_epoch"]
+            < publish_rows["full"]["publish_bytes_per_epoch"]):
+        raise RuntimeError(
+            f"serve_net publish A/B: delta publishes are not smaller than "
+            f"full ({publish_rows})")
+    d_leaves = _jax.tree_util.tree_leaves(finals["delta"].sketch)
+    f_leaves = _jax.tree_util.tree_leaves(finals["full"].sketch)
+    if finals["delta"].n_edges != finals["full"].n_edges or not all(
+            np.array_equal(np.asarray(a), np.asarray(b))
+            for a, b in zip(d_leaves, f_leaves)):
+        raise RuntimeError(
+            "serve_net publish A/B: delta-adopted sketch diverged from "
+            "full-adopted sketch — delta publication must be bit-exact")
+    _log(f"publish A/B: delta/full bytes-per-epoch = "
+         f"{publish_rows['delta']['publish_bytes_per_epoch'] / max(publish_rows['full']['publish_bytes_per_epoch'], 1):.3f}, "
+         "final sketches bit-identical")
 
     # ---- warmed live tenant + engine shared by cells 2 and 3 --------------
     registry = SketchRegistry(depth=5, scale=scale)
@@ -762,6 +845,10 @@ def serve_net(scale: float, quick: bool,
         "socket_over_process": round(
             transports["socket"]["ingest_edges_per_s"]
             / max(transports["process"]["ingest_edges_per_s"], 1e-9), 3),
+        "publish_bytes_per_epoch": {
+            mode: row["publish_bytes_per_epoch"]
+            for mode, row in publish_rows.items()},
+        "publish_payload": publish_rows,
         "frontend_offered_qps": qps,
         "frontend_connections": conn_rows,
         "overload": {

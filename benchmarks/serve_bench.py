@@ -371,7 +371,8 @@ def run_serve_bench_sharded(*, dataset: str = "cit-HepPh",
                             publish_policy: str = "",
                             epoch_check_requests: int = 64,
                             sketch_backend: str | None = None,
-                            runtime_backend: str = "thread") -> dict:
+                            runtime_backend: str = "thread",
+                            ingest_repeats: int = 1) -> dict:
     """Sharded regime: K runtime ingest workers (one per hash-band shard,
     on the thread OR process execution backend) under live scatter/gather
     query load.  Two hard gates (both fail the bench): cross-shard edge
@@ -396,14 +397,22 @@ def run_serve_bench_sharded(*, dataset: str = "cit-HepPh",
     # a THROWAWAY tenant (fresh registry, same config) so the serve-phase
     # tenant below still owns its whole stream; this is the scaling number
     # BENCH_sharded.json / BENCH_process.json chart against K
-    dedicated = measure_sharded_ingest(
-        SketchRegistry(depth=depth, scale=scale,
-                       sketch_backend=sketch_backend).open_sharded(
-            dataset, sketch, budget_kb, seed=seed, n_shards=n_shards),
-        backend=runtime_backend)
-    if not dedicated["conserved"]:
-        _log(f"DEDICATED INGEST CONSERVATION FAILURE: {dedicated}")
-    _log(f"dedicated ingest drain x{n_shards}: "
+    # best-of-N: the quick-scale drain lasts ~150 ms, so a single sample is
+    # scheduler noise on a small box; every repeat pays the full spawn/warm
+    # cost with a FRESH throwaway tenant and the best drain is the capacity
+    # number (identical treatment for every backend, so ratios stay fair)
+    dedicated = None
+    for _ in range(max(1, ingest_repeats)):
+        d = measure_sharded_ingest(
+            SketchRegistry(depth=depth, scale=scale,
+                           sketch_backend=sketch_backend).open_sharded(
+                dataset, sketch, budget_kb, seed=seed, n_shards=n_shards),
+            backend=runtime_backend)
+        if not d["conserved"]:
+            _log(f"DEDICATED INGEST CONSERVATION FAILURE: {d}")
+        if dedicated is None or d["edges_per_s"] > dedicated["edges_per_s"]:
+            dedicated = d
+    _log(f"dedicated ingest drain x{n_shards} (best of {ingest_repeats}): "
          f"{dedicated['edges_per_s']:,.0f} edges/s "
          f"({dedicated['ingested_edges']} edges, {dedicated['wall_s']}s)")
     warm_ingest_shapes(tenant)  # serve-phase shard shapes, off the clock

@@ -110,6 +110,12 @@ def parse_args(argv=None) -> argparse.Namespace:
                          "self-hosted loopback children, or stream_ingest "
                          "--listen hosts when addresses are given); "
                          "requires --background-ingest")
+    ap.add_argument("--publish-mode", default="delta",
+                    choices=["delta", "full"],
+                    help="remote-backend snapshot publication: 'delta' "
+                         "(default) ships only the per-epoch sketch delta, "
+                         "sparse-encoded; 'full' ships whole fronts every "
+                         "epoch (pre-v3 behaviour, kept for A/B benching)")
     ap.add_argument("--shards", type=int, default=1,
                     help="serve K hash-band shards: one ingest worker + "
                          "queue per shard, scatter/gather queries "
@@ -328,6 +334,20 @@ def cooperative_serve(args, tenant, engine, requests) -> tuple:
     return report, final, {"ingest_mode": "cooperative"}
 
 
+def _backend_arg(spec: str, publish_mode: str):
+    """Backend arg for ``Runtime``, honouring ``--publish-mode``.  Only the
+    remote backends publish over a transport; ``thread`` has no
+    ``publish_mode`` attribute and ignores the flag."""
+    if publish_mode == "delta":
+        return spec  # the default everywhere; spec strings stay lazy
+    from repro.runtime.backend import resolve_backend
+
+    backend = resolve_backend(spec)
+    if hasattr(backend, "publish_mode"):
+        backend.publish_mode = publish_mode
+    return backend
+
+
 def background_serve(args, tenant, engine, requests) -> tuple:
     """Queries (main thread) truly concurrent with a runtime ingest worker."""
     from repro.runtime import Runtime
@@ -339,7 +359,7 @@ def background_serve(args, tenant, engine, requests) -> tuple:
         checkpoint_dir=args.checkpoint_dir or None,
         checkpoint_every=args.checkpoint_every,
         spill_dir=args.spill_dir or None,
-        backend=args.runtime_backend,
+        backend=_backend_arg(args.runtime_backend, args.publish_mode),
     )
     runtime.attach(tenant, restore=args.restore)
     install_graceful_drain(runtime)
@@ -420,7 +440,7 @@ def sharded_main(args) -> None:
         # K small shards don't pay K-fold fixed dispatch cost
         coalesce_batches=max(4, args.shards),
         coalesce_target=stream.batch_size,
-        backend=args.runtime_backend,
+        backend=_backend_arg(args.runtime_backend, args.publish_mode),
     )
     handles = attach_shards(runtime, tenant, restore=args.restore)
     install_graceful_drain(runtime)

@@ -37,6 +37,20 @@ from repro.serving.registry import SKETCHES, build_sketch
 from repro.streams import make_stream, sample_stream
 
 
+def _backend_arg(spec: str, publish_mode: str):
+    """Backend arg for ``Runtime``, honouring ``--publish-mode``.  Only the
+    remote backends publish over a transport; ``thread`` has no
+    ``publish_mode`` attribute and ignores the flag."""
+    if publish_mode == "delta":
+        return spec  # the default everywhere; spec strings stay lazy
+    from repro.runtime.backend import resolve_backend
+
+    backend = resolve_backend(spec)
+    if hasattr(backend, "publish_mode"):
+        backend.publish_mode = publish_mode
+    return backend
+
+
 def runtime_main(args) -> None:
     """Paper pipeline driven through the background ingest runtime.
 
@@ -64,7 +78,8 @@ def runtime_main(args) -> None:
     runtime = Runtime(publish_policy="drain:0", reservoir_k=0,
                       checkpoint_dir=args.ckpt_dir or None,
                       checkpoint_every=args.steps_per_ckpt,
-                      backend=args.runtime_backend)
+                      backend=_backend_arg(args.runtime_backend,
+                                           args.publish_mode))
     restore = bool(args.resume and args.ckpt_dir)
     try:
         handle = runtime.attach(tenant, restore=restore)
@@ -164,6 +179,12 @@ def main() -> None:
                          "subdir). socket with no address self-hosts a "
                          "loopback worker; with addresses it dials "
                          "--listen worker hosts")
+    ap.add_argument("--publish-mode", default="delta",
+                    choices=["delta", "full"],
+                    help="remote-backend snapshot publication: 'delta' "
+                         "(default) ships only the per-epoch sketch delta, "
+                         "sparse-encoded; 'full' ships whole fronts every "
+                         "epoch (pre-v3 behaviour, kept for A/B benching)")
     ap.add_argument("--listen", default="", metavar="HOST:PORT",
                     help="worker-host mode: serve socket ingest worker "
                          "sessions at this address instead of running a "

@@ -33,6 +33,7 @@ import multiprocessing
 import socket
 import threading
 import time
+from collections import deque
 
 from repro.net import wire
 from repro.net.ingest_server import _selfhost_worker_main
@@ -43,6 +44,11 @@ from repro.runtime.backend import (
 )
 from repro.runtime.metrics import WorkerMetrics
 from repro.runtime.worker import CREATED, DRAINING, FAILED, RUNNING, STOPPED
+
+# Redial replay bound: in-flight items retained past this many (publishes
+# too rare to ever cover them) forfeit the reconnect safety net rather
+# than grow without bound.
+_RETAIN_CAP = 8192
 
 
 class SocketWorker:
@@ -61,7 +67,8 @@ class SocketWorker:
                  on_publish=None, poll_s=0.05, coalesce_batches=1,
                  coalesce_target=8192, queue_capacity=64, warm_shapes=True,
                  child_env=None, ctx=None, connect_timeout_s=300.0,
-                 frame_deadline_s=120.0, auth_token=None) -> None:
+                 frame_deadline_s=120.0, auth_token=None,
+                 publish_mode="delta") -> None:
         import jax
 
         self.tenant = tenant
@@ -77,12 +84,17 @@ class SocketWorker:
         self.frame_deadline_s = frame_deadline_s
         self.connect_timeout_s = connect_timeout_s
         self._treedef = jax.tree_util.tree_structure(tenant.snapshot.sketch)
-        self._spec = build_child_spec(
-            tenant, policy, reservoir=reservoir,
+        # kept for the redial path: a reconnect rebuilds a FRESH spec from
+        # the tenant's then-current (adopted) state, not this stale one
+        self._policy = policy
+        self._spec_kwargs = dict(
             checkpoint_dir=checkpoint_dir, checkpoint_every=checkpoint_every,
             poll_s=poll_s, coalesce_batches=coalesce_batches,
             coalesce_target=coalesce_target, queue_capacity=queue_capacity,
-            warm_shapes=warm_shapes, env=dict(child_env or {}))
+            warm_shapes=warm_shapes, env=dict(child_env or {}),
+            publish_mode=publish_mode)
+        self._spec = build_child_spec(tenant, policy, reservoir=reservoir,
+                                      **self._spec_kwargs)
         self.auth_token = wire.resolve_auth_token(auth_token)
         self.address = address  # None ⇒ self-hosted loopback child
         self._sock: socket.socket | None = None
@@ -114,6 +126,19 @@ class SocketWorker:
         self._ckpt_lock = threading.Lock()
         self._ckpt_event = threading.Event()
         self._ckpt_result: dict | None = None
+        # ---- single-retry redial state (standing hosts only) -------------
+        # Retained items are in-flight work: forwarded to the worker but
+        # not yet covered by an ADOPTED publish — exactly what a fresh
+        # session must replay for the edge-conservation gates to hold.
+        self._retain_lock = threading.Lock()
+        self._retained: deque = deque()
+        self._retain_active = address is not None
+        self._covered_edges = self.base_edges  # cumulative, adopt-side
+        self._redial_used = False
+        self._redialing = False
+        self._redial_event = threading.Event()  # cleared while redialing
+        self._redial_event.set()
+        self._rx_quiesced = threading.Event()  # old-session receiver idle
 
     # -------------------------------------------------------------- lifecycle
     def start(self) -> None:
@@ -298,60 +323,216 @@ class SocketWorker:
             wire.send_message(self._sock, msg,
                               deadline_s=self.frame_deadline_s)
 
+    def _send_on(self, sock, msg) -> None:
+        """Send bound to ONE connection: a thread still holding the old
+        socket after a redial must fail here instead of interleaving its
+        frames with the new session's stream."""
+        with self._send_lock:
+            if sock is not self._sock:
+                raise ConnectionResetError("connection superseded by redial")
+            wire.send_message(sock, msg, deadline_s=self.frame_deadline_s)
+
+    def _send_frame_on(self, sock, frame) -> None:
+        with self._send_lock:
+            if sock is not self._sock:
+                raise ConnectionResetError("connection superseded by redial")
+            wire.send_frame(sock, frame, deadline_s=self.frame_deadline_s)
+
+    def send_control(self, msg) -> None:
+        """Parent→worker control frame outside the forwarder's item stream
+        (the adopt path's resync request after a ``StaleDelta``)."""
+        self._send(msg)
+
+    def _note_publish_adopted(self, n_edges: int) -> None:
+        """Adopt-side redial bookkeeping: retained in-flight items wholly
+        covered by the adopted cumulative edge count can never need
+        replay — pop them.  Exact because the transport is FIFO and the
+        worker coalesces whole items, so adopted counts always land on
+        item boundaries (zero-edge items pop early, a counter no-op)."""
+        with self._retain_lock:
+            while (self._retained and self._covered_edges
+                   + self._retained[0].n_edges <= n_edges):
+                self._covered_edges += self._retained.popleft().n_edges
+
+    # ----------------------------------------------------------------- redial
+    def _peer_lost(self, sock, exc) -> bool:
+        """Peer-death policy, called by forward/receive on a dead ``sock``.
+
+        Standing hosts (``address`` set) get ONE bounded reconnect-and-
+        resync before the loud ``WorkerFailure``; self-hosted children keep
+        the existing fail-fast semantics (their process died — there is
+        nothing to re-dial).  Returns True when a redial replaced the
+        connection (caller continues against the new session), False when
+        the handle was finalized (caller must exit)."""
+        with self._fail_lock:
+            if self._done.is_set():
+                return False
+            if sock is not self._sock:
+                return True  # a concurrent redial already replaced the link
+            if self._redialing:
+                action = "wait"
+            elif (self.address is not None and not self._redial_used
+                  and not self._hard_stop):
+                self._redial_used = True
+                self._redialing = True
+                self._redial_event.clear()
+                action = "redial"
+            else:
+                action = "fail"
+        if action == "fail":
+            self._finalize_dead_peer(exc)
+            return False
+        if action == "wait":
+            self._redial_event.wait(self.connect_timeout_s + 60.0)
+            with self._fail_lock:
+                return not self._done.is_set() and sock is not self._sock
+        ok = False
+        try:
+            ok = self._try_redial()
+        finally:
+            with self._fail_lock:
+                self._redialing = False
+            self._redial_event.set()
+        if not ok:
+            self._finalize_dead_peer(exc)
+            return False
+        # the old receiver quiesced permanently; give the new session one
+        threading.Thread(target=self._receive_loop, daemon=True,
+                         name=f"sock-{self.tenant.key.tenant_id}-rcv2").start()
+        return True
+
+    def _try_redial(self) -> bool:
+        """One reconnect: fresh hello spec from the tenant's adopted state,
+        then replay of every retained in-flight item, then socket swap.
+
+        Ordering is what makes this safe: (1) the old session's receiver
+        must be quiescent before the replay set is frozen — a publish
+        adopted after freezing would double-fold the items it covers;
+        (2) replay + swap run under both the retain and send locks, so a
+        straggling forwarder send can neither interleave with the resync
+        stream nor slip an unreplayed item past it."""
+        if not self._rx_quiesced.wait(timeout=30.0):
+            return False
+        try:
+            self._sock.close()  # also kills a half-alive old session
+        except OSError:
+            pass
+        sock = None
+        try:
+            sock = wire.connect_with_retry(
+                self.address, deadline_s=min(30.0, self.connect_timeout_s),
+                stop=self._abort_connect)
+            spec = build_child_spec(self.tenant, self._policy,
+                                    reservoir=self.reservoir,
+                                    **self._spec_kwargs)
+            with self._send_lock:
+                if self.auth_token:
+                    wire.send_message(sock, ("auth", self.auth_token),
+                                      deadline_s=self.frame_deadline_s)
+                wire.send_message(sock, ("hello", spec),
+                                  deadline_s=self.frame_deadline_s)
+                with self._retain_lock:
+                    for it in self._retained:
+                        wire.send_frame(sock, wire.encode_item_frame(it),
+                                        deadline_s=self.frame_deadline_s)
+                    self._retained.clear()
+                    self._retain_active = False  # single retry: no 2nd replay
+                    self._sock = sock
+            return True
+        except BaseException:
+            if sock is not None:
+                try:
+                    sock.close()
+                except OSError:
+                    pass
+            return False
+
     # -------------------------------------------------------------- transport
     def _forward_loop(self) -> None:
         while not self._ready.wait(timeout=0.1):
             if self._done.is_set() or self._hard_stop:
                 return
-        try:
-            while True:
-                if self._done.is_set() or self._hard_stop:
+        while True:
+            if self._done.is_set() or self._hard_stop:
+                return
+            item = self.queue.get(timeout=self.poll_s)
+            if item is None:
+                if (self._stop_event.is_set() and self._drain
+                        and self.queue.depth() == 0):
+                    break
+                continue
+            # columnar fast path: raw buffer views, no pickle (v3 frames)
+            frame = wire.encode_item_frame(item)
+            with self._retain_lock:
+                if self._retain_active:
+                    self._retained.append(item)
+                    if len(self._retained) > _RETAIN_CAP:
+                        self._retained.clear()
+                        self._retain_active = False
+                        self._redial_used = True
+                sock = self._sock
+            try:
+                self._send_frame_on(sock, frame)
+            except (ConnectionError, TimeoutError, OSError) as exc:
+                if not self._peer_lost(sock, exc):
                     return
-                item = self.queue.get(timeout=self.poll_s)
-                if item is None:
-                    if (self._stop_event.is_set() and self._drain
-                            and self.queue.depth() == 0):
-                        break
-                    continue
-                self._send(("item", item.offset, item.src, item.dst,
-                            item.weight, item.n_edges, item.trace_id))
-            # parent queue drained: graceful-stop sentinel; the terminal
-            # `stopped` reply (which the receiver turns into _done) is sent
-            # only after the remote worker joined, so every published epoch
-            # has already crossed back FIFO before join() returns
-            if not (self._done.is_set() or self._hard_stop):
-                self._send(("stop", True))
-        except (ConnectionError, TimeoutError, OSError) as exc:
-            self._finalize_dead_peer(exc)
+                # the redial's resync replayed every retained item —
+                # including this one — so do NOT resend it here
+        # parent queue drained: graceful-stop sentinel; the terminal
+        # `stopped` reply (which the receiver turns into _done) is sent
+        # only after the remote worker joined, so every published epoch
+        # has already crossed back FIFO before join() returns
+        while not (self._done.is_set() or self._hard_stop):
+            with self._retain_lock:
+                sock = self._sock
+            try:
+                self._send_on(sock, ("stop", True))
+                return
+            except (ConnectionError, TimeoutError, OSError) as exc:
+                if not self._peer_lost(sock, exc):
+                    return
 
     def _receive_loop(self) -> None:
+        sock = self._sock
         while True:
+            with self._fail_lock:
+                if (self._done.is_set() or self._redialing
+                        or sock is not self._sock):
+                    # a redial is superseding this connection: stop
+                    # dispatching NOW, so no old-session publish can be
+                    # adopted after the replay set is frozen
+                    self._rx_quiesced.set()
+                    return
             try:
                 msg = wire.recv_message(
-                    self._sock, poll_s=0.2,
+                    sock, poll_s=0.2,
                     frame_deadline_s=self.frame_deadline_s)
             except (ConnectionError, TimeoutError, OSError,
                     wire.WireError) as exc:
-                # TCP delivers everything the peer flushed before dying, so
-                # unlike the process pipe there is no tail left to adopt
-                self._finalize_dead_peer(exc)
+                # TCP delivers everything the peer flushed before dying —
+                # this loop has already dispatched it; the link is dead
+                self._rx_quiesced.set()
+                self._peer_lost(sock, exc)
                 return
             if msg is None:
-                if self._done.is_set():
-                    return
                 continue
-            if not self._handle_guarded(msg):
-                return
-            if self._done.is_set():
+            if not self._handle_guarded(sock, msg):
                 return
 
-    def _handle_guarded(self, msg) -> bool:
+    def _handle_guarded(self, sock, msg) -> bool:
         """Parent-side dispatch failure (e.g. on_publish raising) mirrors
         ProcessWorker: fail the handle, tear the link down, ALWAYS set
-        ``_done`` so join() can never hang on a swallowed error."""
+        ``_done`` so join() can never hang on a swallowed error.  Transport
+        errors raised FROM a dispatch (a resync request hitting a dying
+        link) are peer loss, not a parent-side bug — they take the redial
+        path like any other dead-peer signal."""
         try:
             dispatch_parent_message(self, msg)
             return True
+        except (ConnectionError, TimeoutError, OSError) as exc:
+            self._rx_quiesced.set()
+            self._peer_lost(sock, exc)
+            return False
         except BaseException as exc:
             import traceback
 
@@ -452,7 +633,8 @@ class SocketBackend(ExecutionBackend):
                  child_env: dict | None = None, mp_context: str = "spawn",
                  connect_timeout_s: float = 300.0,
                  frame_deadline_s: float = 120.0,
-                 auth_token: str | None = None) -> None:
+                 auth_token: str | None = None,
+                 publish_mode: str = "delta") -> None:
         self.auth_token = wire.resolve_auth_token(auth_token)
         self.addresses = list(addresses) if addresses else None
         self._next_addr = 0
@@ -461,6 +643,9 @@ class SocketBackend(ExecutionBackend):
         self._ctx = multiprocessing.get_context(mp_context)
         self.connect_timeout_s = connect_timeout_s
         self.frame_deadline_s = frame_deadline_s
+        # "delta" ships per-epoch sketch deltas (sparse-encoded); "full"
+        # ships whole fronts — kept selectable for the A/B bench column
+        self.publish_mode = publish_mode
         self._workers: list[SocketWorker] = []
 
     @classmethod
@@ -492,7 +677,7 @@ class SocketBackend(ExecutionBackend):
             warm_shapes=self.warm_shapes, child_env=self.child_env,
             ctx=self._ctx, connect_timeout_s=self.connect_timeout_s,
             frame_deadline_s=self.frame_deadline_s,
-            auth_token=self.auth_token)
+            auth_token=self.auth_token, publish_mode=self.publish_mode)
         self._workers.append(worker)
         return worker
 

@@ -4,8 +4,13 @@ A worker session is the parent's ``run_ingest_worker`` loop driven over a
 TCP connection instead of a multiprocessing pipe: the parent dials in (or
 a self-hosted child dials back), sends a ``hello`` frame carrying the
 picklable ``_ChildSpec``, and from then on the stream carries exactly the
-process-backend message kinds (``item`` in; ``ready`` / ``publish`` /
-``metrics`` / ``checkpointed`` / ``stopped`` / ``failed`` out).
+process-backend message kinds (``item`` — shipped as v3 columnar
+``item_cols`` frames, decoded without pickle — and ``resync`` in;
+``ready`` / ``publish`` / ``metrics`` / ``checkpointed`` / ``stopped`` /
+``failed`` out).  A parent that re-dials after losing its connection
+opens a NEW session with a fresh hello built from its adopted state, so
+the first publish of that session is a full-leaves resync by
+construction — the server needs no cross-session memory.
 
 ``WorkerServer`` is the standing flavour (``stream_ingest --listen
 HOST:PORT``): it accepts any number of parent connections, one worker

@@ -6,9 +6,13 @@ is framed as::
 
     MAGIC(4) | WIRE_VERSION(u16) | FRAME_TYPE(u16) | LENGTH(u32) | PAYLOAD
 
-with the payload a pickled message tuple ``(kind, ...)`` using exactly the
-serialization the process backend has always shipped (numpy leaves for
-``QueueItem`` batches and snapshot publications).  The header exists so a
+with the payload a pickled message tuple ``(kind, ...)`` for CONTROL
+frames, and — since v3 — a raw columnar layout for the two hot-path
+payloads: ``item_cols`` frames carry an edge batch as a fixed struct
+header plus the src/dst/weight column buffers verbatim (encoded by buffer
+concatenation, decoded with ``np.frombuffer`` views — no pickle anywhere
+on the item path), and delta publishes ride a compact per-leaf
+sparse/dense encoding (:func:`encode_leaves`).  The header exists so a
 version skew or a torn stream fails as a loud :class:`WireError` naming the
 mismatch instead of a pickle-level crash deep inside a worker.
 
@@ -39,13 +43,27 @@ import socket
 import struct
 import time
 
+import numpy as np
+
+from repro.obs.hub import get_hub
+
 MAGIC = b"KMTX"
 # Version history (DESIGN.md §Observability: bump on ANY schema change a
 # v(N-1) peer could misread — new frame types, new positional fields):
 #   1  PR 6 baseline
 #   2  `item` frames append trace_id; metrics_req scrape frame; publish/
 #      metrics/stopped payloads may carry an "obs" telemetry member
-WIRE_VERSION = 2
+#   3  columnar `item_cols` frames (raw src/dst/weight buffers, no pickle
+#      on the item path); `resync` control frame; publish payloads become
+#      dicts carrying a "mode" (full | delta) and, for deltas, sparse-
+#      encoded leaves + a base_epoch.  v2 frames still DECODE during the
+#      bump window (old `item`/`publish` shapes parse via *rest / dict
+#      defaults) but this build always SENDS v3.
+WIRE_VERSION = 3
+# Decode-side compat window: a v2 peer's frames carry no field this build
+# misreads (v3 only ADDS types and payload members), so both versions are
+# accepted on receive.  Anything else is loud skew.
+COMPAT_VERSIONS = frozenset({2, WIRE_VERSION})
 
 _HEADER = struct.Struct(">4sHHI")
 HEADER_SIZE = _HEADER.size
@@ -74,6 +92,11 @@ FRAME_TYPES: dict[str, int] = {
     # Prometheus text + merged state (served by BOTH the ingest worker
     # host and the query front-end; requires auth when a token is set)
     "metrics_req": 11,
+    # v3 hot path: columnar edge batch (raw buffers, decodes to the same
+    # ("item", ...) tuple) and the parent->worker full-resync request
+    # (next publish must ship full leaves, not a delta)
+    "item_cols": 12,
+    "resync": 13,
     # query front-end
     "info_req": 20,
     "info": 21,
@@ -182,7 +205,32 @@ def auth_matches(expected: str, presented: object) -> bool:
         expected, presented)
 
 
-def encode_message(msg: tuple) -> bytes:
+# ---------------------------------------------------------------------------
+# wire byte accounting (DESIGN.md §Observability)
+#
+# Counted at the codec, per frame kind, so pipe bytes and socket bytes land
+# in the same instruments.  ``on_wire=False`` callers (the spill-file FIFO,
+# replayed captures) skip accounting — those bytes never cross a transport.
+
+def _note_bytes(sent: bool, kind: str, nbytes: int) -> None:
+    hub = get_hub()
+    if sent:
+        hub.counter("wire_bytes_sent",
+                    "bytes encoded for a transport, by frame kind",
+                    kind=kind).inc(nbytes)
+    else:
+        hub.counter("wire_bytes_recv",
+                    "bytes decoded off a transport, by frame kind",
+                    kind=kind).inc(nbytes)
+        if kind == "publish":
+            # the receiver of publish frames is always the adopting parent,
+            # so this counter reads as "snapshot publication bytes adopted"
+            hub.counter("publish_bytes",
+                        "snapshot publication payload bytes adopted").inc(
+                            nbytes)
+
+
+def encode_message(msg: tuple, *, on_wire: bool = True) -> bytes:
     """Frame a ``(kind, ...)`` message tuple as header + pickled payload."""
     if not isinstance(msg, tuple) or not msg or not isinstance(msg[0], str):
         raise WireError(f"wire messages are ('kind', ...) tuples, got {type(msg).__name__}")
@@ -192,6 +240,8 @@ def encode_message(msg: tuple) -> bytes:
     payload = pickle.dumps(msg, protocol=pickle.HIGHEST_PROTOCOL)
     if len(payload) > MAX_PAYLOAD:
         raise WireError(f"payload of {len(payload)} bytes exceeds MAX_PAYLOAD={MAX_PAYLOAD}")
+    if on_wire:
+        _note_bytes(True, msg[0], HEADER_SIZE + len(payload))
     return _HEADER.pack(MAGIC, WIRE_VERSION, ftype, len(payload)) + payload
 
 
@@ -202,9 +252,11 @@ def decode_header(header: bytes) -> tuple[str, int]:
     magic, version, ftype, length = _HEADER.unpack(header)
     if magic != MAGIC:
         raise WireError(f"bad magic {magic!r} (expected {MAGIC!r}): not a kmatrix wire stream")
-    if version != WIRE_VERSION:
+    if version not in COMPAT_VERSIONS:
         raise WireError(
-            f"wire schema version mismatch: peer speaks v{version}, this build speaks v{WIRE_VERSION}")
+            f"wire schema version mismatch: peer speaks v{version}, this "
+            f"build speaks v{WIRE_VERSION} "
+            f"(accepts {sorted(COMPAT_VERSIONS)})")
     kind = _KIND_BY_TYPE.get(ftype)
     if kind is None:
         raise WireError(f"unknown frame type {ftype}")
@@ -213,13 +265,23 @@ def decode_header(header: bytes) -> tuple[str, int]:
     return kind, length
 
 
-def decode_message(buf: bytes) -> tuple:
-    """Inverse of :func:`encode_message`; loud on any header/body mismatch."""
+def decode_message(buf: bytes, *, on_wire: bool = True) -> tuple:
+    """Inverse of :func:`encode_message`; loud on any header/body mismatch.
+
+    ``item_cols`` frames decode through the columnar path into the exact
+    ``("item", offset, src, dst, weight, n_edges, trace_id)`` tuple the
+    pickled v2 ``item`` frame carried, so every downstream consumer is
+    layout-agnostic.
+    """
     kind, length = decode_header(buf[:HEADER_SIZE])
     body = buf[HEADER_SIZE:]
     if len(body) != length:
         raise WireError(
             f"truncated frame: header promises {length} payload bytes, got {len(body)}")
+    if on_wire:
+        _note_bytes(False, kind, len(buf))
+    if kind == "item_cols":
+        return _decode_item_cols(body)
     try:
         msg = restricted_loads(body)
     except Exception as exc:  # noqa: BLE001 — surface as protocol error
@@ -228,6 +290,174 @@ def decode_message(buf: bytes) -> tuple:
         got = msg[0] if isinstance(msg, tuple) and msg else type(msg).__name__
         raise WireError(f"frame type says {kind!r} but payload says {got!r}")
     return msg
+
+
+# ---------------------------------------------------------------------------
+# v3 columnar edge frames: the item hot path without pickle
+#
+# Payload layout (big-endian), validated field by field on decode:
+#
+#   offset(i64) n_edges(i64) | n_src(u32) n_dst(u32) n_weight(u32)
+#   | dtype_src(8s) dtype_dst(8s) dtype_weight(8s) | trace_len(u16)
+#   | trace_id utf-8 | src bytes | dst bytes | weight bytes
+#
+# Encode is buffer concatenation (one copy of each column into the output
+# frame); decode is three ``np.frombuffer`` views over the received body —
+# read-only, zero-copy.  Every length/dtype disagreement is a WireError.
+
+_ITEM_COLS = struct.Struct(">qqIII8s8s8sH")
+
+# dtypes a column may legally carry: fixed-width integer/float scalars.
+# Anything else (object, structured, zero-itemsize) is a hostile or torn
+# frame — np.frombuffer on attacker-chosen dtypes is not a surface we keep.
+_COL_KINDS = frozenset("iuf")
+
+
+def _col_dtype(tag: bytes, what: str) -> np.dtype:
+    try:
+        dt = np.dtype(tag.rstrip(b"\x00").decode("ascii"))
+    except (TypeError, ValueError, UnicodeDecodeError) as exc:
+        raise WireError(
+            f"columnar item frame carries undecodable {what} dtype "
+            f"{tag!r}: {exc!r}") from exc
+    if dt.kind not in _COL_KINDS or not 1 <= dt.itemsize <= 8:
+        raise WireError(
+            f"columnar item frame carries disallowed {what} dtype {dt.str!r}"
+            " (fixed-width int/float scalars only)")
+    return dt
+
+
+def encode_item_frame(item, *, on_wire: bool = True) -> bytes:
+    """Frame one ``QueueItem``-shaped batch as a v3 columnar frame.
+
+    ``item`` is duck-typed (``offset / src / dst / weight / n_edges /
+    trace_id``) so both the runtime's queue items and ad-hoc tuples frame
+    identically.  Columns are shipped in their native dtype.
+    """
+    cols = []
+    for what in ("src", "dst", "weight"):
+        a = np.ascontiguousarray(getattr(item, what))
+        if a.ndim != 1:
+            raise WireError(
+                f"columnar item frame needs 1-D columns; {what} has shape "
+                f"{a.shape}")
+        if a.dtype.kind not in _COL_KINDS or not 1 <= a.dtype.itemsize <= 8:
+            raise WireError(
+                f"column {what} has unframeable dtype {a.dtype.str!r}")
+        cols.append(a)
+    src, dst, weight = cols
+    trace = str(getattr(item, "trace_id", "") or "").encode("utf-8")
+    if len(trace) > 0xFFFF:
+        raise WireError(f"trace_id of {len(trace)} bytes exceeds 65535")
+    length = (_ITEM_COLS.size + len(trace)
+              + src.nbytes + dst.nbytes + weight.nbytes)
+    if length > MAX_PAYLOAD:
+        raise WireError(
+            f"columnar payload of {length} bytes exceeds "
+            f"MAX_PAYLOAD={MAX_PAYLOAD}")
+    frame = b"".join((
+        _HEADER.pack(MAGIC, WIRE_VERSION, FRAME_TYPES["item_cols"], length),
+        _ITEM_COLS.pack(int(item.offset), int(item.n_edges),
+                        src.size, dst.size, weight.size,
+                        src.dtype.str.encode("ascii").ljust(8, b"\x00"),
+                        dst.dtype.str.encode("ascii").ljust(8, b"\x00"),
+                        weight.dtype.str.encode("ascii").ljust(8, b"\x00"),
+                        len(trace)),
+        trace, src.data, dst.data, weight.data))
+    if on_wire:
+        _note_bytes(True, "item", len(frame))
+    return frame
+
+
+def _decode_item_cols(body: bytes) -> tuple:
+    """Columnar payload -> the canonical ``("item", ...)`` message tuple."""
+    if len(body) < _ITEM_COLS.size:
+        raise WireError(
+            f"truncated columnar item header: got {len(body)} bytes, need "
+            f"{_ITEM_COLS.size}")
+    (offset, n_edges, n_src, n_dst, n_weight,
+     dt_src, dt_dst, dt_weight, trace_len) = _ITEM_COLS.unpack_from(body)
+    if not (n_src == n_dst == n_weight):
+        raise WireError(
+            f"columnar item frame has ragged columns: src={n_src} "
+            f"dst={n_dst} weight={n_weight}")
+    if not 0 <= n_edges <= n_src:
+        raise WireError(
+            f"columnar item frame claims {n_edges} non-padding edges in "
+            f"{n_src}-row columns")
+    dts = _col_dtype(dt_src, "src")
+    dtd = _col_dtype(dt_dst, "dst")
+    dtw = _col_dtype(dt_weight, "weight")
+    expect = (_ITEM_COLS.size + trace_len + n_src * dts.itemsize
+              + n_dst * dtd.itemsize + n_weight * dtw.itemsize)
+    if expect != len(body):
+        raise WireError(
+            f"columnar item frame length mismatch: header describes "
+            f"{expect} payload bytes, got {len(body)}")
+    pos = _ITEM_COLS.size
+    try:
+        trace = body[pos:pos + trace_len].decode("utf-8")
+    except UnicodeDecodeError as exc:
+        raise WireError(f"undecodable trace_id bytes: {exc!r}") from exc
+    pos += trace_len
+    src = np.frombuffer(body, dtype=dts, count=n_src, offset=pos)
+    pos += n_src * dts.itemsize
+    dst = np.frombuffer(body, dtype=dtd, count=n_dst, offset=pos)
+    pos += n_dst * dtd.itemsize
+    weight = np.frombuffer(body, dtype=dtw, count=n_weight, offset=pos)
+    return ("item", int(offset), src, dst, weight, int(n_edges), trace)
+
+
+# ---------------------------------------------------------------------------
+# delta-publish leaf codec
+#
+# A publish delta is an ``empty_like`` twin of the front sketch — same DENSE
+# shape — so shipping it verbatim would cost exactly a full publish.  The
+# savings come from per-leaf ADAPTIVE encoding: a leaf whose nonzero cells
+# are sparse ships as (flat indices, values); one that is mostly nonzero
+# (or tiny) ships dense.  Reconstruction is exact (indices + verbatim
+# values), so the parent-side jitted merge stays bit-identical to the
+# child's own publish.  Entries are plain numpy-only tuples, so they pass
+# the restricted unpickler inside the publish control frame unchanged.
+
+def encode_leaves(leaves: list) -> list:
+    """Per-leaf adaptive sparse/dense encoding of a delta pytree's leaves."""
+    out = []
+    for leaf in leaves:
+        a = np.asarray(leaf)
+        if a.ndim == 0 or a.size == 0 or a.size >= (1 << 32):
+            out.append(("dense", a))
+            continue
+        flat = a.ravel()
+        idx = np.flatnonzero(flat)
+        # 4 index bytes + one value per nonzero vs the dense leaf
+        if idx.size * (4 + a.dtype.itemsize) < a.nbytes:
+            out.append(("sparse", a.shape, a.dtype.str,
+                        idx.astype(np.uint32), np.ascontiguousarray(flat[idx])))
+        else:
+            out.append(("dense", a))
+    return out
+
+
+def decode_leaves(entries: list) -> list:
+    """Inverse of :func:`encode_leaves`; loud on malformed entries."""
+    leaves = []
+    for e in entries:
+        tag = e[0] if isinstance(e, tuple) and e else None
+        if tag == "dense":
+            leaves.append(np.asarray(e[1]))
+        elif tag == "sparse":
+            _, shape, dtstr, idx, vals = e
+            size = int(np.prod(shape, dtype=np.int64)) if shape else 1
+            if idx.size != vals.size or (idx.size and int(idx.max()) >= size):
+                raise WireError(
+                    f"sparse leaf entry indices do not fit shape {shape}")
+            flat = np.zeros(size, dtype=np.dtype(dtstr))
+            flat[idx] = vals
+            leaves.append(flat.reshape(shape))
+        else:
+            raise WireError(f"unknown leaf encoding {tag!r}")
+    return leaves
 
 
 # ---------------------------------------------------------------------------
@@ -243,6 +473,18 @@ def send_message(sock: socket.socket, msg: tuple, *,
     except socket.timeout as exc:
         raise TimeoutError(
             f"send of {msg[0]!r} frame did not complete within {deadline_s}s") from exc
+
+
+def send_frame(sock: socket.socket, frame: bytes, *,
+               deadline_s: float = 120.0) -> None:
+    """Send an already-encoded frame (e.g. :func:`encode_item_frame`)."""
+    sock.settimeout(deadline_s)
+    try:
+        sock.sendall(frame)
+    except socket.timeout as exc:
+        raise TimeoutError(
+            f"send of a {len(frame)}-byte frame did not complete within "
+            f"{deadline_s}s") from exc
 
 
 def _recv_exact(sock: socket.socket, n: int, deadline: float,

@@ -180,6 +180,11 @@ class _ChildSpec:
     warm_shapes: bool
     env: dict  # applied before the child imports jax (platform pinning,
     #            thread-pool caps under core oversubscription, ...)
+    # "delta" (default): publishes ship only the sketch delta accumulated
+    # since the last publish (sparse-encoded; full leaves for the first
+    # publish and after any resync request).  "full": every publish ships
+    # the whole front — the pre-v3 behaviour, kept for A/B benching.
+    publish_mode: str = "delta"
 
 
 def _tree_leaves_np(tree) -> list:
@@ -213,7 +218,8 @@ def _warm_child_shapes(tenant) -> None:
 def build_child_spec(tenant, policy, *, reservoir=None, checkpoint_dir=None,
                      checkpoint_every=0, poll_s=0.05, coalesce_batches=1,
                      coalesce_target=8192, queue_capacity=64,
-                     warm_shapes=True, env=None) -> _ChildSpec:
+                     warm_shapes=True, env=None,
+                     publish_mode="delta") -> _ChildSpec:
     """Snapshot everything a remote worker needs into a picklable spec.
 
     Shared by the process backend (ships it via ``Process`` args) and the
@@ -243,12 +249,16 @@ def build_child_spec(tenant, policy, *, reservoir=None, checkpoint_dir=None,
     res = None
     if reservoir is not None:
         res = {"k": reservoir.k, "state": reservoir.state_dict()}
+    if publish_mode not in ("delta", "full"):
+        raise ValueError(
+            f"publish_mode must be 'delta' or 'full', got {publish_mode!r}")
     return _ChildSpec(
         origin=origin, policy=policy, init=init, reservoir=res,
         checkpoint_dir=checkpoint_dir, checkpoint_every=checkpoint_every,
         poll_s=poll_s, coalesce_batches=coalesce_batches,
         coalesce_target=coalesce_target, queue_capacity=queue_capacity,
-        warm_shapes=warm_shapes, env=dict(env or {}))
+        warm_shapes=warm_shapes, env=dict(env or {}),
+        publish_mode=publish_mode)
 
 
 def run_ingest_worker(spec: _ChildSpec, recv, send) -> str:
@@ -292,6 +302,16 @@ def run_ingest_worker(spec: _ChildSpec, recv, send) -> str:
         if spec.reservoir is not None:
             reservoir = Reservoir(int(spec.reservoir["k"]))
             reservoir.load_state_dict(spec.reservoir["state"])
+        publish_delta = getattr(spec, "publish_mode", "delta") == "delta"
+        if publish_delta:
+            tenant.buffer.capture_publish_delta = True
+        # The first publish after (re)build MUST ship full leaves: the warm
+        # publish below bumps an epoch the parent never adopts, a restored
+        # checkpoint's front predates this session, and a redialed parent
+        # opens a fresh session — in every case the parent's front epoch
+        # cannot anchor a delta.  A "resync" frame re-arms this.
+        force_full = threading.Event()
+        force_full.set()
         if spec.warm_shapes:
             _warm_child_shapes(tenant)
 
@@ -309,10 +329,9 @@ def run_ingest_worker(spec: _ChildSpec, recv, send) -> str:
             coalesce_target=spec.coalesce_target)
 
         def ship(snap):  # runs in the worker thread, post-publish
-            send(("publish", {
+            payload = {
                 "epoch": snap.epoch,
                 "n_edges": snap.n_edges,
-                "leaves": _tree_leaves_np(snap.sketch),
                 "next_offset": worker._ingested_offset + 1,
                 "reservoir": (reservoir.state_dict()
                               if reservoir is not None else None),
@@ -321,7 +340,22 @@ def run_ingest_worker(spec: _ChildSpec, recv, send) -> str:
                 # state (parent adopts = replace-then-sum) + drained spans
                 "obs": {"hub": get_hub().state(),
                         "trace": get_trace_log().drain()},
-            }))
+            }
+            delta = (tenant.buffer.last_publish_delta
+                     if publish_delta else None)
+            if delta is not None and not force_full.is_set():
+                # ship only what this epoch folded in; the parent merges it
+                # into its front via the same jitted kernel (bit-exact) —
+                # counters/reservoir/cursor still ride every publish
+                payload["mode"] = "delta"
+                payload["base_epoch"] = snap.epoch - 1
+                payload["leaves"] = wire.encode_leaves(
+                    _tree_leaves_np(delta))
+            else:
+                force_full.clear()
+                payload["mode"] = "full"
+                payload["leaves"] = _tree_leaves_np(snap.sketch)
+            send(("publish", payload))
 
         worker.on_publish = ship
         worker.start()
@@ -372,6 +406,11 @@ def run_ingest_worker(spec: _ChildSpec, recv, send) -> str:
                 return "stopped"
             elif kind == "ping":
                 send(("pong",))
+            elif kind == "resync":
+                # the parent could not anchor our last delta (ack gap,
+                # restart, redial): the NEXT publish ships full leaves —
+                # they carry cumulative state, so nothing is lost
+                force_full.set()
             else:
                 raise ValueError(f"unknown transport message {kind!r}")
     except BaseException as exc:
@@ -452,17 +491,40 @@ def dispatch_parent_message(h, msg) -> None:
         if len(msg) > 2:
             _absorb_worker_obs(h, msg[2])
     elif kind == "publish":
+        from repro.serving.snapshot import StaleDelta
+
         payload = msg[1]
-        sketch = jax.tree_util.tree_unflatten(
-            h._treedef, [jnp.asarray(x) for x in payload["leaves"]])
-        snap = h.tenant.buffer.adopt_published(
-            sketch, payload["epoch"], payload["n_edges"])
+        if payload.get("mode") == "delta":
+            delta = jax.tree_util.tree_unflatten(
+                h._treedef,
+                [jnp.asarray(x)
+                 for x in wire.decode_leaves(payload["leaves"])])
+            try:
+                snap = h.tenant.buffer.adopt_published(
+                    None, payload["epoch"], payload["n_edges"],
+                    delta=delta, base_epoch=payload["base_epoch"])
+            except StaleDelta:
+                # skip this publish entirely — cursor, metrics and
+                # reservoir stay at the last adopted epoch so drop/replay
+                # accounting can't run ahead of adopted state; the worker's
+                # next publish ships cumulative full leaves and catches the
+                # parent up in one step
+                h.send_control(("resync",))
+                return
+        else:
+            sketch = jax.tree_util.tree_unflatten(
+                h._treedef, [jnp.asarray(x) for x in payload["leaves"]])
+            snap = h.tenant.buffer.adopt_published(
+                sketch, payload["epoch"], payload["n_edges"])
         h._ingested_offset = payload["next_offset"] - 1
         h.tenant.offset = payload["next_offset"]
         h._last_metrics = payload["metrics"]
         if h.reservoir is not None and payload["reservoir"] is not None:
             h.reservoir.load_state_dict(payload["reservoir"])
         _absorb_worker_obs(h, payload.get("obs"), epoch=payload["epoch"])
+        note = getattr(h, "_note_publish_adopted", None)
+        if note is not None:  # socket redial bookkeeping (net/backend.py)
+            note(int(payload["n_edges"]))
         if h.on_publish is not None:
             h.on_publish(snap)
     elif kind == "checkpointed":
@@ -507,7 +569,8 @@ class ProcessWorker:
                  reservoir=None, checkpoint_dir=None, checkpoint_every=0,
                  on_publish=None, poll_s=0.05, coalesce_batches=1,
                  coalesce_target=8192, queue_capacity=64,
-                 warm_shapes=True, child_env=None, ctx=None) -> None:
+                 warm_shapes=True, child_env=None, ctx=None,
+                 publish_mode="delta") -> None:
         import jax
 
         self.tenant = tenant
@@ -529,7 +592,8 @@ class ProcessWorker:
             checkpoint_dir=checkpoint_dir, checkpoint_every=checkpoint_every,
             poll_s=poll_s, coalesce_batches=coalesce_batches,
             coalesce_target=coalesce_target, queue_capacity=queue_capacity,
-            warm_shapes=warm_shapes, env=child_env)
+            warm_shapes=warm_shapes, env=child_env,
+            publish_mode=publish_mode)
         ctx = ctx or multiprocessing.get_context("spawn")
         # small transit pipe: backpressure cascades child -> pipe ->
         # parent queue -> pump, so the parent queue's policy stays the
@@ -658,9 +722,8 @@ class ProcessWorker:
                         and self.queue.depth() == 0):
                     break
                 continue
-            msg = wire.encode_message(
-                ("item", item.offset, item.src, item.dst, item.weight,
-                 item.n_edges, item.trace_id))
+            # columnar fast path: raw buffer views, no pickle (v3 frames)
+            msg = wire.encode_item_frame(item)
             placed = False
             while not placed:
                 try:
@@ -751,6 +814,11 @@ class ProcessWorker:
         self._ckpt_event.set()
         self._done.set()
 
+    def send_control(self, msg) -> None:
+        """Ship a parent→child control frame out-of-band of the item stream
+        (used by the adopt path to request a full-leaves resync)."""
+        self._in_q.put(wire.encode_message(msg), timeout=60.0)
+
     # ------------------------------------------------------------- checkpoint
     def checkpoint(self, timeout: float = 300.0) -> str:
         """Ask the child for a synchronous checkpoint; returns its path."""
@@ -822,15 +890,19 @@ class ProcessBackend(ExecutionBackend):
 
     def __init__(self, *, warm_shapes: bool = True,
                  child_env: dict | None = None,
-                 mp_context: str = "spawn") -> None:
+                 mp_context: str = "spawn",
+                 publish_mode: str = "delta") -> None:
         # spawn, never fork: the parent holds a live XLA runtime and worker
         # threads; forking either is undefined behaviour
         self._ctx = multiprocessing.get_context(mp_context)
         self.warm_shapes = warm_shapes
         # applied in each child BEFORE jax initializes: pin children off a
         # shared accelerator (JAX_PLATFORMS=cpu on a TPU host) or cap their
-        # XLA host thread pools when K workers oversubscribe the cores
+        # XLA host thread pools under core oversubscription
         self.child_env = dict(child_env or {})
+        # "delta" ships per-epoch sketch deltas (sparse-encoded); "full"
+        # ships whole fronts — kept selectable for the A/B bench column
+        self.publish_mode = publish_mode
 
     def make_worker(self, tenant, queue, policy, *, reservoir=None,
                     checkpoint_dir=None, checkpoint_every=0, on_publish=None,
@@ -843,4 +915,4 @@ class ProcessBackend(ExecutionBackend):
             coalesce_batches=coalesce_batches,
             coalesce_target=coalesce_target, queue_capacity=queue_capacity,
             warm_shapes=self.warm_shapes, child_env=self.child_env,
-            ctx=self._ctx)
+            ctx=self._ctx, publish_mode=self.publish_mode)

@@ -107,7 +107,10 @@ class BoundedEdgeQueue:
 
     # ------------------------------------------------------------------ spill
     def _spill_path(self, idx: int) -> str:
-        return os.path.join(self.spill_dir, f"spill_{idx:012d}.npz")
+        # .kmx: one v3 columnar item frame (repro.net.wire), verbatim — the
+        # spill FIFO and the transports share a single codec, so a spilled
+        # batch costs one buffer concat down and one frombuffer view up
+        return os.path.join(self.spill_dir, f"spill_{idx:012d}.kmx")
 
     def _spill_write(self, idx: int, item: QueueItem) -> None:
         """File I/O for reserved slot ``idx`` — called OUTSIDE the lock.
@@ -116,23 +119,27 @@ class BoundedEdgeQueue:
         ``.tmp`` orphan (purged by the next queue on this dir), never a
         torn file at the slot's final path.
         """
+        from repro.net import wire
+
         path = self._spill_path(idx)
         tmp = path + ".tmp"
         with open(tmp, "wb") as f:
-            np.savez(f, offset=np.int64(item.offset), src=item.src,
-                     dst=item.dst, weight=item.weight,
-                     n_edges=np.int64(item.n_edges),
-                     trace_id=np.str_(item.trace_id))
+            f.write(wire.encode_item_frame(item, on_wire=False))
         os.replace(tmp, path)
 
     def _spill_read(self, idx: int) -> QueueItem:
         """File I/O for claimed slot ``idx`` — called OUTSIDE the lock."""
+        from repro.net import wire
+
         path = self._spill_path(idx)
-        with np.load(path) as data:
-            trace_id = str(data["trace_id"]) if "trace_id" in data else ""
-            item = QueueItem(int(data["offset"]), data["src"].copy(),
-                             data["dst"].copy(), data["weight"].copy(),
-                             int(data["n_edges"]), trace_id=trace_id)
+        with open(path, "rb") as f:
+            data = f.read()
+        # zero-copy: the decoded columns are views over `data`, which the
+        # QueueItem keeps alive; a torn/garbled file raises WireError loud
+        _, offset, src, dst, weight, n_edges, trace_id = wire.decode_message(
+            data, on_wire=False)
+        item = QueueItem(offset, src, dst, weight, n_edges,
+                         trace_id=trace_id)
         os.remove(path)
         return item
 

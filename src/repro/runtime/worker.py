@@ -74,6 +74,12 @@ class IngestWorker(threading.Thread):
         # behaviour exactly.
         self.coalesce_batches = max(1, coalesce_batches)
         self.coalesce_target = coalesce_target
+        # Dispatch-size byte cap: 3 int32 output columns ⇒ 12 bytes/edge.
+        # A deep backlog (spill drain, drop_oldest churn) must not build an
+        # unbounded coalesced batch; an item that would push the group past
+        # the cap is HELD and leads the next group instead.
+        self._coalesce_byte_cap = 12 * max(1, coalesce_target)
+        self._held: QueueItem | None = None
         self.metrics = WorkerMetrics()
         self.metrics.bind_hub(tenant.key.tenant_id)
         self._trace = get_trace_log()
@@ -112,7 +118,11 @@ class IngestWorker(threading.Thread):
         self.metrics.started_at = time.monotonic()
         try:
             while True:
-                item = self.queue.get(timeout=self.poll_s)
+                item = self._held
+                if item is not None:
+                    self._held = None  # byte-cap holdover leads this group
+                else:
+                    item = self.queue.get(timeout=self.poll_s)
                 now = time.monotonic()
                 if item is None:
                     if self._stop_event.is_set():
@@ -135,6 +145,10 @@ class IngestWorker(threading.Thread):
                        and total < self.coalesce_target):
                     nxt = self.queue.get(timeout=0)  # opportunistic, no wait
                     if nxt is None:
+                        break
+                    if 12 * (total + nxt.src.shape[0]) \
+                            > self._coalesce_byte_cap:
+                        self._held = nxt  # caps the dispatch; never dropped
                         break
                     items.append(nxt)
                     total += nxt.src.shape[0]
@@ -207,13 +221,24 @@ class IngestWorker(threading.Thread):
         counters do not hold.  Padded to a coarse ladder
         (``coalesce_target/4`` granule) so coalesced shapes stay few.
         """
-        src = np.concatenate([it.src for it in items])
-        dst = np.concatenate([it.dst for it in items])
-        weight = np.concatenate([it.weight for it in items])
-        n = len(src)
+        n = sum(it.src.shape[0] for it in items)
         granule = max(256, self.coalesce_target // 4)
         bucket = max(granule, -(-n // granule) * granule)
-        batch = EdgeBatch.pad_to(src, dst, weight, bucket)
+        # one pre-sized int32 buffer per column, filled by slicing: the
+        # old concatenate → pad → cast chain copied every column three
+        # times; here the slice assignment does the cast AND the copy,
+        # and the zero tail IS the weight-0 padding pad_to produced
+        src = np.zeros(bucket, np.int32)
+        dst = np.zeros(bucket, np.int32)
+        weight = np.zeros(bucket, np.int32)
+        pos = 0
+        for it in items:
+            end = pos + it.src.shape[0]
+            src[pos:end] = it.src
+            dst[pos:end] = it.dst
+            weight[pos:end] = it.weight
+            pos = end
+        batch = EdgeBatch.from_numpy(src, dst, weight)
         for it in items:
             self._note_dispatch(it)
         with self._state_lock:

@@ -50,6 +50,17 @@ class Snapshot:
                 f"kind={self.kind!r}, n_edges={self.n_edges})")
 
 
+class StaleDelta(RuntimeError):
+    """A delta publish was based on an epoch that is not the current front.
+
+    Raised by :meth:`SnapshotBuffer.adopt_published` in delta mode when the
+    shipped ``base_epoch`` disagrees with the front's epoch — folding the
+    delta in would double- or under-count.  The adopting transport reacts
+    by skipping the publish and requesting a full-leaves resync from the
+    worker (DESIGN.md §Net, ack-gap rules).
+    """
+
+
 _anon_ids = itertools.count()
 
 # One jitted (ingest, publish) kernel pair per sketch MODULE, shared by
@@ -101,6 +112,12 @@ class SnapshotBuffer:
         self._pending = jnp.zeros((), jnp.int64 if jax.config.x64_enabled
                                   else jnp.int32)
         self._jit_ingest, self._jit_publish = _shared_kernels(mod)
+        # Delta-publication support (runtime/backend.py): with the flag on,
+        # each publish() stashes the pre-merge delta pytree (an immutable
+        # reference — zero copies) so a remote worker can ship ONLY what
+        # accumulated since the previous epoch instead of the whole sketch.
+        self.capture_publish_delta = False
+        self.last_publish_delta: Any = None
         # Guards the back buffer (_delta/_pending) and the front swap against
         # a checkpointing thread reading ``state()`` mid-operation.  Readers
         # of ``snapshot`` need no lock: the property is one atomic reference
@@ -151,6 +168,10 @@ class SnapshotBuffer:
         """
         with self._lock:
             pending = int(jax.device_get(self._pending))
+            if self.capture_publish_delta:
+                # the outgoing delta is exactly what this publish folds in;
+                # the reference stays valid (JAX arrays are immutable)
+                self.last_publish_delta = self._delta
             merged, delta = self._jit_publish(self._front.sketch, self._delta)
             self._front = Snapshot(
                 self._tenant_id,
@@ -163,19 +184,40 @@ class SnapshotBuffer:
             self._pending = jnp.zeros_like(self._pending)
             return self._front
 
-    def adopt_published(self, sketch: Any, epoch: int, n_edges: int) -> Snapshot:
+    def adopt_published(self, sketch: Any, epoch: int, n_edges: int, *,
+                        delta: Any = None,
+                        base_epoch: int | None = None) -> Snapshot:
         """Install an externally-produced published front (runtime/backend.py).
 
-        The process execution backend folds batches into a sketch living in
-        a child process and ships each published epoch back as a pytree of
-        host arrays; this swaps that state in as the new front WITHOUT
-        touching the local delta (which stays empty — the remote side owns
-        the write path).  Same isolation contract as ``publish``: readers
-        holding the previous front keep a consistent immutable epoch.  The
-        caller must adopt epochs in publication order (the backend's FIFO
-        result pipe guarantees that).
+        The remote execution backends fold batches into a sketch living in
+        a child process and ship each published epoch back; this swaps that
+        state in as the new front WITHOUT touching the local delta (which
+        stays empty — the remote side owns the write path).  Same isolation
+        contract as ``publish``: readers holding the previous front keep a
+        consistent immutable epoch.  The caller must adopt epochs in
+        publication order (the backend's FIFO result pipe guarantees that).
+
+        Two modes:
+
+          full   ``sketch`` is the worker's whole published front;
+                 installed verbatim (replace).
+          delta  ``sketch`` is ignored; ``delta`` is the pytree the worker
+                 accumulated since its previous publish, and is folded into
+                 the current front through the SAME jitted merge the
+                 worker's own publish used — bit-identical counters on both
+                 sides.  ``base_epoch`` must equal the current front epoch
+                 or the fold would mis-count: any gap raises
+                 :class:`StaleDelta` (the transport then requests a
+                 full-leaves resync).
         """
         with self._lock:
+            if delta is not None:
+                if base_epoch is None or int(base_epoch) != self._front.epoch:
+                    raise StaleDelta(
+                        f"delta publish for epoch {epoch} is based on epoch "
+                        f"{base_epoch}, but the front is at epoch "
+                        f"{self._front.epoch}; a full resync is required")
+                sketch, _ = self._jit_publish(self._front.sketch, delta)
             self._front = Snapshot(self._tenant_id, int(epoch),
                                    sketch, self._kind, int(n_edges))
             return self._front

@@ -157,6 +157,136 @@ def test_parse_hostport():
             wire.parse_hostport(junk)
 
 
+# ----------------------------------------------- v3 columnar item frames
+def _cols_item(dtype=np.int32, n=5, n_edges=None, trace="tr-0"):
+    rng = np.random.default_rng(3)
+    col = lambda: rng.integers(0, 99, n).astype(dtype)  # noqa: E731
+    return types.SimpleNamespace(
+        offset=7, src=col(), dst=col(), weight=col(),
+        n_edges=n if n_edges is None else n_edges, trace_id=trace)
+
+
+def test_item_cols_roundtrip_across_dtypes():
+    """The zero-pickle item path: every allowlisted column dtype round-trips
+    exactly, the decode is zero-copy (read-only frombuffer views), and the
+    canonical ``("item", ...)`` tuple shape matches the v2 contract."""
+    for dtype in (np.int8, np.uint8, np.int32, np.uint32, np.int64,
+                  np.float32, np.float64):
+        item = _cols_item(dtype=dtype)
+        out = wire.decode_message(wire.encode_item_frame(item))
+        kind, offset, src, dst, weight, n_edges, trace = out
+        assert kind == "item" and offset == 7 and n_edges == 5
+        assert trace == "tr-0"
+        for got, want in ((src, item.src), (dst, item.dst),
+                          (weight, item.weight)):
+            assert got.dtype == want.dtype
+            np.testing.assert_array_equal(got, want)
+            assert not got.flags.writeable  # frombuffer view, not a copy
+    # empty batch and empty trace are legal
+    empty = _cols_item(n=0, n_edges=0, trace="")
+    out = wire.decode_message(wire.encode_item_frame(empty))
+    assert out[2].size == 0 and out[5] == 0 and out[6] == ""
+
+
+def _raw_cols_frame(offset=0, n_edges=2, counts=(2, 2, 2),
+                    dtags=(b"<i4", b"<i4", b"<i4"), trace=b"",
+                    col_bytes=None):
+    """Hand-assemble an ``item_cols`` frame, valid or hostile."""
+    if col_bytes is None:
+        col_bytes = b"".join(
+            np.arange(c, dtype=np.int32).tobytes() for c in counts)
+    body = wire._ITEM_COLS.pack(
+        offset, n_edges, *counts,
+        dtags[0].ljust(8, b"\x00"), dtags[1].ljust(8, b"\x00"),
+        dtags[2].ljust(8, b"\x00"), len(trace)) + trace + col_bytes
+    return wire._HEADER.pack(wire.MAGIC, wire.WIRE_VERSION,
+                             wire.FRAME_TYPES["item_cols"],
+                             len(body)) + body
+
+
+def test_item_cols_malformed_frames_raise_wireerror():
+    """Hostile/torn columnar frames die as WireError naming the defect —
+    truncation, ragged columns, impossible edge counts, length lies,
+    smuggled dtypes, bad trace bytes — never an np.frombuffer crash."""
+    ok = _raw_cols_frame()
+    assert wire.decode_message(ok)[0] == "item"  # the baseline is valid
+    # body shorter than the inner header
+    short = wire._HEADER.pack(wire.MAGIC, wire.WIRE_VERSION,
+                              wire.FRAME_TYPES["item_cols"], 4) + b"abcd"
+    with pytest.raises(wire.WireError, match="truncated columnar"):
+        wire.decode_message(short)
+    with pytest.raises(wire.WireError, match="ragged"):
+        wire.decode_message(_raw_cols_frame(counts=(2, 3, 2)))
+    with pytest.raises(wire.WireError, match="non-padding"):
+        wire.decode_message(_raw_cols_frame(n_edges=9))
+    # header counts promise more column bytes than arrived (oversize lie)
+    with pytest.raises(wire.WireError, match="length mismatch"):
+        wire.decode_message(_raw_cols_frame(
+            counts=(64, 64, 64), n_edges=2, col_bytes=b""))
+    # dtype smuggling: object/str dtypes must never reach np.frombuffer
+    for tag in (b"|O", b"<U4", b"|V8", b"garbage!"):
+        with pytest.raises(wire.WireError,
+                           match="disallowed|undecodable"):
+            wire.decode_message(_raw_cols_frame(dtags=(tag, b"<i4", b"<i4")))
+    with pytest.raises(wire.WireError, match="trace_id"):
+        wire.decode_message(_raw_cols_frame(
+            trace=b"\xff\xfe", col_bytes=None))
+    # encoder refuses what the decoder would refuse
+    with pytest.raises(wire.WireError, match="unframeable dtype"):
+        wire.encode_item_frame(types.SimpleNamespace(
+            offset=0, src=np.array(["a"]), dst=np.zeros(1, np.int32),
+            weight=np.zeros(1, np.int32), n_edges=1, trace_id=""))
+    with pytest.raises(wire.WireError, match="1-D"):
+        wire.encode_item_frame(types.SimpleNamespace(
+            offset=0, src=np.zeros((2, 2), np.int32),
+            dst=np.zeros(4, np.int32), weight=np.zeros(4, np.int32),
+            n_edges=4, trace_id=""))
+    with pytest.raises(wire.WireError, match="65535"):
+        wire.encode_item_frame(_cols_item(trace="x" * 70000))
+
+
+def test_v2_item_frames_still_decode():
+    """Version compat: a peer still speaking WIRE_VERSION 2 (pickled
+    ``item`` tuples) decodes fine — COMPAT_VERSIONS covers the handoff."""
+    import pickle
+
+    arr = np.arange(4, dtype=np.int32)
+    msg = ("item", 11, arr, arr + 1, arr * 2, 4, "tr-v2")
+    payload = pickle.dumps(msg, protocol=pickle.HIGHEST_PROTOCOL)
+    frame = wire._HEADER.pack(wire.MAGIC, 2, wire.FRAME_TYPES["item"],
+                              len(payload)) + payload
+    out = wire.decode_message(frame)
+    assert out[0] == "item" and out[1] == 11 and out[6] == "tr-v2"
+    np.testing.assert_array_equal(out[2], arr)
+
+
+def test_leaf_codec_sparse_dense_adaptive_and_exact():
+    """Delta leaf codec: sparse leaves ship as COO and reconstruct exactly;
+    dense/tiny/scalar leaves ship dense; malformed entries are loud."""
+    rng = np.random.default_rng(5)
+    sparse = np.zeros((64, 64), np.int64)
+    sparse[rng.integers(0, 64, 30), rng.integers(0, 64, 30)] = 7
+    dense = rng.integers(1, 9, (16, 16)).astype(np.int32)
+    scalar = np.int64(42)
+    leaves = [sparse, dense, scalar, np.zeros(0, np.float32)]
+    entries = wire.encode_leaves(leaves)
+    assert entries[0][0] == "sparse" and entries[1][0] == "dense"
+    assert entries[2][0] == "dense" and entries[3][0] == "dense"
+    back = wire.decode_leaves(entries)
+    for want, got in zip(leaves, back):
+        np.testing.assert_array_equal(np.asarray(want), got)
+        assert np.asarray(want).dtype == got.dtype
+    # sparse must actually be smaller for a sparse leaf
+    idx, vals = entries[0][3], entries[0][4]
+    assert idx.nbytes + vals.nbytes < sparse.nbytes
+    with pytest.raises(wire.WireError, match="unknown leaf encoding"):
+        wire.decode_leaves([("mystery", 1)])
+    with pytest.raises(wire.WireError, match="do not fit"):
+        wire.decode_leaves([("sparse", (2, 2), "<i8",
+                             np.array([9], np.uint32),
+                             np.array([1], np.int64))])
+
+
 # --------------------------------------------------------- wire security
 def test_wire_restricted_unpickler_blocks_code_execution():
     """A crafted frame whose pickle names an executable global (the classic
@@ -410,6 +540,58 @@ def test_dead_tcp_peer_fails_worker_with_accounting():
     with pytest.raises(WorkerFailure, match="lost its TCP peer") as excinfo:
         rt.stop(drain=True)
     assert excinfo.value.report[t.key.tenant_id]["state"] == "failed"
+
+
+def test_standing_host_connection_blip_redials_quietly():
+    """ISSUE 8 satellite: a dropped connection to a STANDING worker host
+    gets ONE quiet re-dial — the parent replays retained unadopted items
+    into a fresh session (whose first publish is a full resync by
+    construction) — and the drain stays conserving and bit-exact with no
+    WorkerFailure.  Self-hosted peers keep the loud fail-fast path (see
+    ``test_dead_tcp_peer_fails_worker_with_accounting``)."""
+    from repro.net.ingest_server import WorkerServer
+
+    server = WorkerServer("127.0.0.1", 0)
+    host, port = server.address
+    srv_thread = threading.Thread(
+        target=lambda: server.serve_forever(max_sessions=2), daemon=True)
+    srv_thread.start()
+    try:
+        reg = _registry()
+        t = reg.open("cit-HepPh", "kmatrix", 64, seed=0)
+        rt = Runtime(queue_capacity=4, publish_policy="every:2",
+                     reservoir_k=0, poll_s=0.01,
+                     backend=f"socket:{host}:{port}")
+        h = rt.attach(t, throttle_s=0.05)
+        rt.start(pumps=False)
+        assert rt.wait_ready(300)
+        rt.start_pumps()
+        # mid-stream, with adopted publishes behind us, sever the link
+        _wait(lambda: h.worker.metrics_snapshot()["ingested_batches"] >= 2,
+              timeout_s=300)
+        h.worker._sock.shutdown(socket.SHUT_RDWR)
+        assert rt.join_pumps(300)
+        rep = rt.stop(drain=True)[t.key.tenant_id]
+        assert rep["state"] == "stopped"
+        assert rep["unaccounted_edges"] == 0
+        assert rep["dropped_edges"] == 0
+        assert h.worker._redial_used, "the blip must have used the re-dial"
+        stream, oracle = _single_shot()
+        assert rep["published_edges"] == stream.spec.n_edges
+        np.testing.assert_array_equal(np.asarray(t.snapshot.sketch.pool),
+                                      np.asarray(oracle.pool))
+        np.testing.assert_array_equal(np.asarray(t.snapshot.sketch.conn),
+                                      np.asarray(oracle.conn))
+        srv_thread.join(timeout=60)
+        assert server.sessions_served == 2, server.session_results
+        # first session died with the link (worker-side "failed" or a
+        # transport abort, depending on who noticed first); the re-dialed
+        # session is the one that must finish cleanly
+        assert server.session_results[0] != "stopped"
+        assert server.session_results[1] == "stopped"
+    finally:
+        server.stop()
+        server.close()
 
 
 def test_socket_sharded_sigkill_resume_conserves_and_serves_exactly(

@@ -106,6 +106,34 @@ def test_queue_spill_preserves_fifo_and_loses_nothing(tmp_path):
     assert q.get(timeout=0.01) is None
 
 
+def test_spill_files_are_wire_item_frames(tmp_path):
+    """ISSUE 8: the spill-file format IS the v3 columnar wire frame — one
+    ``item_cols`` frame per ``spill_*.kmx`` file, decodable by the wire
+    codec directly, with trace ids and padding accounting intact."""
+    from repro.net import wire
+
+    q = BoundedEdgeQueue(1, "spill", spill_dir=str(tmp_path / "spill"))
+    items = [_item(i, n=4, n_pad=2) for i in range(3)]
+    for it in items:
+        assert q.put(it)
+    files = sorted((tmp_path / "spill").glob("spill_*.kmx"))
+    assert len(files) == 2  # capacity 1 ⇒ two items spilled
+    spilled = items[1:]
+    for path, want in zip(files, spilled):
+        msg = wire.decode_message(path.read_bytes(), on_wire=False)
+        assert msg[0] == "item" and msg[1] == want.offset
+        np.testing.assert_array_equal(msg[2], want.src)
+        np.testing.assert_array_equal(msg[3], want.dst)
+        np.testing.assert_array_equal(msg[4], want.weight)
+        assert msg[5] == want.n_edges  # non-padding count survives
+        assert msg[6] == want.trace_id
+    # and the queue itself reads them back losslessly (FIFO, accounted)
+    out = [q.get(timeout=1) for _ in range(3)]
+    assert [o.offset for o in out] == [0, 1, 2]
+    assert out[2].n_edges == 4 and out[2].src.shape[0] == 6
+    assert q.stats()["spill_pending"] == 0
+
+
 def test_queue_spill_interleaved_put_get_keeps_order(tmp_path):
     q = BoundedEdgeQueue(1, "spill", spill_dir=str(tmp_path / "spill"))
     seen = []

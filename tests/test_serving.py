@@ -106,6 +106,57 @@ def test_delta_buffer_equals_all_at_once_ingest():
     assert buf.snapshot.n_edges == 400
 
 
+def test_adopt_published_delta_folds_exactly_and_gaps_are_stale():
+    """Delta publication contract (DESIGN.md §Net): a worker-side buffer
+    with ``capture_publish_delta`` stashes exactly the per-epoch batch
+    contribution; a parent folding those deltas epoch by epoch lands
+    bit-identical to adopting the worker's full fronts — and a delta whose
+    base epoch skips the parent's front raises ``StaleDelta`` without
+    corrupting the front."""
+    from repro.serving.snapshot import StaleDelta
+
+    rng = np.random.default_rng(1)
+    src = rng.integers(0, 50, 300).astype(np.int32)
+    dst = rng.integers(0, 50, 300).astype(np.int32)
+    stats = vertex_stats_from_sample(src, dst)
+    sk = KMatrix.create(bytes_budget=1 << 14, stats=stats, depth=3, seed=1)
+
+    child = SnapshotBuffer(sk, kmatrix, tenant_id="t")
+    child.capture_publish_delta = True
+    parent = SnapshotBuffer(sk, kmatrix, tenant_id="t")
+    for lo in range(0, 300, 100):
+        child.ingest(EdgeBatch.from_numpy(src[lo:lo + 100],
+                                          dst[lo:lo + 100]))
+        snap = child.publish()
+        assert child.last_publish_delta is not None
+        parent.adopt_published(None, snap.epoch, snap.n_edges,
+                               delta=child.last_publish_delta,
+                               base_epoch=snap.epoch - 1)
+    direct = kmatrix.ingest(sk, EdgeBatch.from_numpy(src, dst))
+    assert (np.asarray(parent.snapshot.sketch.pool)
+            == np.asarray(direct.pool)).all()
+    assert (np.asarray(parent.snapshot.sketch.conn)
+            == np.asarray(direct.conn)).all()
+    assert parent.snapshot.epoch == 3
+    assert parent.snapshot.n_edges == child.snapshot.n_edges
+
+    # ack gap: a delta based past (or before) the front must refuse to fold
+    before = parent.snapshot
+    for bad_base in (before.epoch + 1, before.epoch - 1):
+        with pytest.raises(StaleDelta, match="full resync"):
+            parent.adopt_published(None, bad_base + 1, 999,
+                                   delta=child.last_publish_delta,
+                                   base_epoch=bad_base)
+    assert parent.snapshot is before  # front untouched by the refusal
+
+    # a full adopt (the resync) repairs the stream: counters keep matching
+    child.ingest(EdgeBatch.from_numpy(src[:100], dst[:100]))
+    resync = child.publish()
+    parent.adopt_published(resync.sketch, resync.epoch, resync.n_edges)
+    assert (np.asarray(parent.snapshot.sketch.pool)
+            == np.asarray(child.snapshot.sketch.pool)).all()
+
+
 # ---------------------------------------------------------------- engine
 @pytest.mark.parametrize("kind", ["kmatrix", "gmatrix"])
 def test_engine_matches_direct_for_all_families(registry, kind):

@@ -1,0 +1,35 @@
+"""Project-specific static analysis (DESIGN.md §Analysis).
+
+An AST-based, dependency-free invariant checker: ``python -m
+repro.analysis --gate`` walks ``src/repro`` and enforces the invariants
+the paper's accuracy claims (and the transport tier's safety) rest on:
+
+  trace-purity   functions reachable from jax.jit / Pallas call sites
+                 stay side-effect free (no clocks, RNG, locks, global
+                 mutation, or MetricsHub instruments in traced code)
+  wire-schema    the frame registry in net/wire.py is unique, every
+                 registered kind is dispatched exactly once per
+                 dispatcher, and the committed ``wire_schema.lock``
+                 fingerprint matches — schema drift without a
+                 WIRE_VERSION bump fails the gate
+  unpickler      the restricted unpickler's repro-class allowlist is
+                 exactly the set of ``# wire-type`` marked classes and
+                 every entry is live (dead entries are latent gadget
+                 surface)
+  hot-path       modules on the ingest hot path never touch pickle
+  locks          ``# guarded-by:`` field annotations hold statically and
+                 the nested-``with`` lock-order graph is acyclic
+
+The dynamic half lives in :mod:`repro.analysis.witness`: with
+``REPRO_LOCK_WITNESS=1`` the test suite wraps ``threading.Lock``/``RLock``
+to record real cross-thread acquisition order, failing the run on
+ordering cycles or snapshot publishes outside the buffer lock.
+"""
+from repro.analysis.engine import (  # noqa: F401
+    Finding,
+    Project,
+    SourceFile,
+    all_rules,
+    load_baseline,
+    run_rules,
+)

@@ -1,0 +1,201 @@
+"""Rules: unpickler-allowlist consistency + no pickle on hot paths.
+
+**unpickler-allowlist** — ``net/wire.py`` decodes every control frame
+with a restricted unpickler whose repro surface is the explicit
+``_SAFE_REPRO_CLASSES`` map.  The classes that legitimately cross a
+pipe/socket are marked ``# wire-type`` at their definition; this rule
+keeps the two in lockstep, both ways:
+
+- every ``# wire-type`` marked class appears in the allowlist (or a
+  hostile-looking frame rejection is one refactor away)
+- every allowlist entry names a live, marked class (a dead entry is
+  latent gadget surface: it re-opens the exact module path an attacker
+  would want back)
+
+**no-pickle-hot-path** — the v3 item path exists so no pickle byte is
+touched per batch.  Modules marked ``# analysis: hot-path`` (whole
+module) and functions marked ``# hot-path`` (single def) must not
+reference ``pickle`` or ``restricted_loads`` directly.  The check is
+deliberately non-transitive: ``decode_message`` legally dispatches
+pickled *control* frames and is reachable from hot code — what the rule
+forbids is pickle appearing in the hot functions themselves.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.engine import Finding, Project, dotted_name
+
+UNPICKLER_RULE = "unpickler-allowlist"
+HOT_RULE = "no-pickle-hot-path"
+
+WIRE_MODULE = "repro.net.wire"
+ALLOWLIST_NAME = "_SAFE_REPRO_CLASSES"
+WIRE_TYPE_MARKER = "# wire-type"
+HOT_MODULE_MARKER = "# analysis: hot-path"
+HOT_FUNC_MARKER = "# hot-path"
+
+
+# ------------------------------------------------------- allowlist rule
+def extract_allowlist(tree: ast.Module) -> dict[str, set[str]] | None:
+    """``_SAFE_REPRO_CLASSES`` as {module: {class, ...}}; None if absent."""
+    for node in tree.body:
+        targets: list[ast.expr] = []
+        value: ast.expr | None = None
+        if isinstance(node, ast.Assign):
+            targets, value = node.targets, node.value
+        elif isinstance(node, ast.AnnAssign) and node.value is not None:
+            targets, value = [node.target], node.value
+        if not any(isinstance(t, ast.Name) and t.id == ALLOWLIST_NAME
+                   for t in targets):
+            continue
+        if not isinstance(value, ast.Dict):
+            return None
+        out: dict[str, set[str]] = {}
+        for k, v in zip(value.keys, value.values):
+            if not (isinstance(k, ast.Constant) and isinstance(k.value, str)):
+                continue
+            names: set[str] = set()
+            for el in ast.walk(v):
+                if isinstance(el, ast.Constant) and isinstance(el.value, str):
+                    names.add(el.value)
+            out[k.value] = names
+        return out
+    return None
+
+
+def _marked_classes(project: Project) -> dict[tuple[str, str], int]:
+    """{(module, class): lineno} of every ``# wire-type`` marked class."""
+    marked: dict[tuple[str, str], int] = {}
+    for mod, sf in project.files.items():
+        for node in ast.walk(sf.tree):
+            if not isinstance(node, ast.ClassDef):
+                continue
+            candidates = [node.lineno, node.lineno - 1]
+            if node.decorator_list:
+                candidates.append(node.decorator_list[0].lineno - 1)
+            if any(WIRE_TYPE_MARKER in sf.line(ln) for ln in candidates):
+                marked[(mod, node.name)] = node.lineno
+    return marked
+
+
+def check_unpickler(project: Project) -> list[Finding]:
+    findings: list[Finding] = []
+    sf = project.get(WIRE_MODULE)
+    if sf is None:
+        return findings
+    allowlist = extract_allowlist(sf.tree)
+    if allowlist is None:
+        findings.append(Finding(
+            UNPICKLER_RULE, WIRE_MODULE, 1,
+            f"{ALLOWLIST_NAME} dict literal not found in the wire module "
+            "(the restricted unpickler must enumerate repro classes "
+            "explicitly)"))
+        return findings
+    marked = _marked_classes(project)
+
+    for mod, names in sorted(allowlist.items()):
+        target = project.get(mod)
+        for name in sorted(names):
+            if target is None:
+                findings.append(Finding(
+                    UNPICKLER_RULE, WIRE_MODULE, 1,
+                    f"allowlist entry {mod}.{name} is dead: module "
+                    f"{mod!r} does not exist (latent gadget surface)"))
+                continue
+            defined = any(isinstance(n, ast.ClassDef) and n.name == name
+                          for n in ast.walk(target.tree))
+            if not defined:
+                findings.append(Finding(
+                    UNPICKLER_RULE, WIRE_MODULE, 1,
+                    f"allowlist entry {mod}.{name} is dead: no such class "
+                    f"in {mod} (latent gadget surface)"))
+            elif (mod, name) not in marked:
+                findings.append(Finding(
+                    UNPICKLER_RULE, mod, 1,
+                    f"class {name!r} is in the unpickler allowlist but not "
+                    f"marked `{WIRE_TYPE_MARKER}` at its definition"))
+
+    for (mod, name), lineno in sorted(marked.items()):
+        if name not in allowlist.get(mod, set()):
+            findings.append(Finding(
+                UNPICKLER_RULE, mod, lineno,
+                f"class {name!r} is marked `{WIRE_TYPE_MARKER}` but missing "
+                f"from {ALLOWLIST_NAME} in the wire module — it cannot "
+                "cross a transport"))
+    return findings
+
+
+# -------------------------------------------------------- hot-path rule
+def _pickle_refs(node: ast.AST, pickle_aliases: set[str]) -> list[tuple[int, str]]:
+    refs: list[tuple[int, str]] = []
+    for sub in ast.walk(node):
+        if isinstance(sub, (ast.Import, ast.ImportFrom)):
+            continue  # the import line itself is reported separately
+        name = None
+        if isinstance(sub, ast.Attribute):
+            name = dotted_name(sub)
+        elif isinstance(sub, ast.Name) and isinstance(sub.ctx, ast.Load):
+            name = sub.id
+        if name is None:
+            continue
+        parts = name.split(".")
+        if parts[0] == "pickle" or parts[0] in pickle_aliases \
+                or parts[-1] == "restricted_loads":
+            refs.append((sub.lineno, name))
+    # an Attribute walk also yields its inner Name: keep one (the longest
+    # dotted form) reference per line
+    best: dict[int, str] = {}
+    for lineno, name in refs:
+        if len(name) > len(best.get(lineno, "")):
+            best[lineno] = name
+    return sorted(best.items())
+
+
+def check_hot_path(project: Project) -> list[Finding]:
+    findings: list[Finding] = []
+    for mod, sf in sorted(project.files.items()):
+        # names bound from pickle by a from-import anywhere in the module
+        pickle_aliases: set[str] = set()
+        import_lines: list[tuple[int, str]] = []
+        for node in ast.walk(sf.tree):
+            if isinstance(node, ast.Import):
+                for alias in node.names:
+                    if alias.name.split(".")[0] == "pickle":
+                        pickle_aliases.add(alias.asname
+                                           or alias.name.split(".")[0])
+                        import_lines.append((node.lineno, alias.name))
+            elif isinstance(node, ast.ImportFrom):
+                if node.module and node.module.split(".")[0] == "pickle":
+                    for alias in node.names:
+                        pickle_aliases.add(alias.asname or alias.name)
+                        import_lines.append(
+                            (node.lineno, f"{node.module}.{alias.name}"))
+
+        module_hot = any(HOT_MODULE_MARKER in line
+                         for line in sf.lines[:40])
+        if module_hot:
+            for lineno, what in import_lines:
+                findings.append(Finding(
+                    HOT_RULE, mod, lineno,
+                    f"hot-path module imports {what} (marked "
+                    f"`{HOT_MODULE_MARKER}`: no pickle allowed)"))
+            for lineno, what in sorted(set(_pickle_refs(
+                    sf.tree, pickle_aliases))):
+                findings.append(Finding(
+                    HOT_RULE, mod, lineno,
+                    f"hot-path module references `{what}`"))
+            continue
+
+        for node in ast.walk(sf.tree):
+            if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            def_line = sf.line(node.lineno)
+            if HOT_FUNC_MARKER not in def_line:
+                continue
+            for lineno, what in sorted(set(_pickle_refs(
+                    node, pickle_aliases))):
+                findings.append(Finding(
+                    HOT_RULE, mod, lineno,
+                    f"hot-path function {node.name!r} references `{what}`"))
+    return findings

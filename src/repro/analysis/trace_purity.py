@@ -1,0 +1,271 @@
+"""Rule: functions reachable from jit/Pallas sites stay trace-pure.
+
+Anything jax traces runs at *trace* time, not per call: a ``time.time()``
+inside a jitted function samples the clock once and bakes the constant
+into the compiled graph; a lock acquisition can deadlock under jit
+caching; a MetricsHub ``inc()`` silently counts compilations instead of
+calls.  PR 7 kept instruments out of traced code by convention — this
+rule enforces it.
+
+Roots are collected per module:
+
+- ``@jax.jit`` / ``@functools.partial(jax.jit, ...)`` decorated defs
+- ``jax.jit(f)`` / ``pl.pallas_call(kernel, ...)`` call sites, where the
+  traced argument is a plain name, a ``self.method``, a project-module
+  attribute, or an inline lambda
+
+From the roots we BFS a conservative call graph: plain-name calls into
+the same module, ``self.method`` calls within the same class, and
+``alias.fn`` calls through project-module imports.  Dynamic references
+(``mod.ingest`` where ``mod`` is a parameter) are unresolvable and
+deliberately skipped — the rule under-approximates reachability rather
+than spray false positives.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.engine import (
+    Finding, Project, SourceFile, dotted_name, functions_of, module_imports,
+)
+
+RULE = "trace-purity"
+
+_HUB_METHODS = frozenset({"inc", "observe", "observe_n", "observe_many"})
+
+
+def _resolve_dotted(name: str, mod_aliases: dict[str, str],
+                    from_imports: dict[str, tuple[str, str]]) -> str:
+    """Canonicalize a dotted name through the module's imports."""
+    head, _, rest = name.partition(".")
+    if head in from_imports:
+        m, n = from_imports[head]
+        head = f"{m}.{n}"
+    elif head in mod_aliases:
+        head = mod_aliases[head]
+    return f"{head}.{rest}" if rest else head
+
+
+class _ModuleIndex:
+    """Per-module lookup tables shared by root collection and the BFS."""
+
+    def __init__(self, sf: SourceFile) -> None:
+        self.sf = sf
+        self.mod_aliases, self.from_imports = module_imports(sf.tree)
+        self.functions: dict[str, ast.AST] = {}   # qualname -> def node
+        self.by_class: dict[str, dict[str, str]] = {}
+        for qual, cls, node in functions_of(sf.tree):
+            self.functions[qual] = node
+            if cls is not None:
+                self.by_class.setdefault(cls, {})[node.name] = qual
+        self.top_level = {q for q in self.functions if "." not in q}
+        self.globals: set[str] = set()
+        for node in sf.tree.body:
+            if isinstance(node, ast.Assign):
+                for t in node.targets:
+                    if isinstance(t, ast.Name):
+                        self.globals.add(t.id)
+            elif isinstance(node, ast.AnnAssign) and \
+                    isinstance(node.target, ast.Name):
+                self.globals.add(node.target.id)
+
+    def resolve(self, name: str) -> str:
+        return _resolve_dotted(name, self.mod_aliases, self.from_imports)
+
+
+def _is_jit_name(canonical: str) -> bool:
+    return canonical == "jax.jit" or canonical.endswith(".jax.jit")
+
+
+def _is_pallas_call(canonical: str) -> bool:
+    return canonical.split(".")[-1] == "pallas_call" and \
+        canonical.startswith("jax.")
+
+
+def _jit_roots(idx: _ModuleIndex) -> list[tuple[ast.AST, str]]:
+    """(node, display-name) pairs of traced entry points in one module."""
+    roots: list[tuple[ast.AST, str]] = []
+
+    def note_traced_arg(arg: ast.AST) -> None:
+        if isinstance(arg, ast.Lambda):
+            roots.append((arg, f"<lambda:{arg.lineno}>"))
+            return
+        name = dotted_name(arg)
+        if name is None:
+            return
+        if name in idx.top_level:
+            roots.append((idx.functions[name], name))
+            return
+        if name.startswith("self."):
+            meth = name[len("self."):]
+            for cls, methods in idx.by_class.items():
+                if meth in methods:
+                    roots.append((idx.functions[methods[meth]],
+                                  methods[meth]))
+        # anything else (parameter attributes, foreign modules) is a
+        # dynamic reference this rule cannot resolve — skipped
+
+    for qual, _cls, node in functions_of(idx.sf.tree):
+        for dec in node.decorator_list:
+            dname = dotted_name(dec)
+            if dname is not None and _is_jit_name(idx.resolve(dname)):
+                roots.append((node, qual))
+                continue
+            if isinstance(dec, ast.Call):
+                cname = dotted_name(dec.func)
+                if cname is None:
+                    continue
+                canonical = idx.resolve(cname)
+                if _is_jit_name(canonical):
+                    roots.append((node, qual))
+                elif canonical.split(".")[-1] == "partial" and dec.args:
+                    inner = dotted_name(dec.args[0])
+                    if inner is not None and \
+                            _is_jit_name(idx.resolve(inner)):
+                        roots.append((node, qual))
+
+    for node in ast.walk(idx.sf.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        cname = dotted_name(node.func)
+        if cname is None:
+            continue
+        canonical = idx.resolve(cname)
+        if (_is_jit_name(canonical) or _is_pallas_call(canonical)) \
+                and node.args:
+            note_traced_arg(node.args[0])
+    return roots
+
+
+def _out_edges(node: ast.AST, idx: _ModuleIndex, cls: str | None,
+               project: Project) -> list[tuple[str, str]]:
+    """(module, qualname) functions referenced from ``node``'s body."""
+    edges: list[tuple[str, str]] = []
+    mod = idx.sf.module
+    for sub in ast.walk(node):
+        name = None
+        if isinstance(sub, ast.Call):
+            name = dotted_name(sub.func)
+        elif isinstance(sub, ast.Name) and isinstance(sub.ctx, ast.Load):
+            name = sub.id
+        if name is None:
+            continue
+        if name in idx.top_level:
+            edges.append((mod, name))
+            continue
+        if name.startswith("self.") and cls is not None:
+            meth = name[len("self."):]
+            qual = idx.by_class.get(cls, {}).get(meth)
+            if qual is not None:
+                edges.append((mod, qual))
+            continue
+        head, _, rest = name.partition(".")
+        if not rest or "." in rest:
+            continue
+        target_mod = None
+        if head in idx.from_imports:
+            m, n = idx.from_imports[head]
+            target_mod = f"{m}.{n}"
+        elif head in idx.mod_aliases:
+            target_mod = idx.mod_aliases[head]
+        if target_mod is not None and project.get(target_mod) is not None:
+            edges.append((target_mod, rest))
+    return edges
+
+
+def _check_body(node: ast.AST, qual: str, idx: _ModuleIndex,
+                findings: list[Finding]) -> None:
+    mod = idx.sf.module
+
+    def flag(lineno: int, what: str) -> None:
+        findings.append(Finding(RULE, mod, lineno,
+                                f"traced function {qual!r} {what}"))
+
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Global):
+            flag(sub.lineno, "declares `global` (module-state mutation)")
+        elif isinstance(sub, ast.With):
+            for item in sub.items:
+                ctx = dotted_name(item.context_expr)
+                if ctx is None and isinstance(item.context_expr, ast.Call):
+                    ctx = dotted_name(item.context_expr.func)
+                if ctx is None:
+                    continue
+                last = ctx.split(".")[-1].lower()
+                if "lock" in last or last == "_cv":
+                    flag(sub.lineno, f"acquires lock `{ctx}`")
+        elif isinstance(sub, (ast.Assign, ast.AugAssign)):
+            targets = sub.targets if isinstance(sub, ast.Assign) \
+                else [sub.target]
+            for t in targets:
+                base = t
+                while isinstance(base, (ast.Subscript, ast.Attribute)):
+                    base = base.value
+                if isinstance(base, ast.Name) and t is not base \
+                        and base.id in idx.globals:
+                    flag(sub.lineno,
+                         f"mutates module-level `{base.id}`")
+        elif isinstance(sub, ast.Call):
+            cname = dotted_name(sub.func)
+            if cname is None:
+                continue
+            canonical = idx.resolve(cname)
+            root = canonical.split(".")[0]
+            if root == "time" and "." in canonical:
+                flag(sub.lineno, f"calls `{canonical}` (clock)")
+            elif root == "random" and "." in canonical:
+                flag(sub.lineno, f"calls `{canonical}` (host RNG)")
+            elif canonical.startswith("numpy.random."):
+                flag(sub.lineno, f"calls `{canonical}` (host RNG)")
+            elif canonical.split(".")[-1] == "get_hub":
+                flag(sub.lineno, "touches the metrics hub (`get_hub`)")
+            elif canonical.split(".")[-1] == "acquire" and \
+                    "lock" in canonical.lower():
+                flag(sub.lineno, f"acquires lock `{cname}`")
+            elif isinstance(sub.func, ast.Attribute):
+                base = dotted_name(sub.func.value) or ""
+                meth = sub.func.attr
+                if "hub" in base.lower() and (
+                        meth in _HUB_METHODS or meth == "set"
+                        or meth in ("counter", "gauge", "histogram")):
+                    flag(sub.lineno,
+                         f"touches metrics instrument `{base}.{meth}`")
+
+
+def check(project: Project) -> list[Finding]:
+    findings: list[Finding] = []
+    indexes = {mod: _ModuleIndex(sf) for mod, sf in project.files.items()}
+
+    # seed: every traced root in every module
+    queue: list[tuple[str, str, ast.AST, str | None]] = []
+    seen: set[tuple[str, int]] = set()  # (module, node lineno) identity
+    for mod, idx in indexes.items():
+        qual_by_node = {id(n): q for q, n in idx.functions.items()}
+        cls_of = {}
+        for qual, cls, node in functions_of(idx.sf.tree):
+            cls_of[qual] = cls
+        for node, display in _jit_roots(idx):
+            qual = qual_by_node.get(id(node), display)
+            key = (mod, node.lineno)
+            if key not in seen:
+                seen.add(key)
+                queue.append((mod, qual, node, cls_of.get(qual)))
+
+    while queue:
+        mod, qual, node, cls = queue.pop()
+        idx = indexes[mod]
+        _check_body(node, qual, idx, findings)
+        for tmod, tqual in _out_edges(node, idx, cls, project):
+            tidx = indexes.get(tmod)
+            if tidx is None:
+                continue
+            tnode = tidx.functions.get(tqual)
+            if tnode is None:
+                continue
+            key = (tmod, tnode.lineno)
+            if key in seen:
+                continue
+            seen.add(key)
+            tcls = tqual.split(".")[0] if "." in tqual else None
+            queue.append((tmod, tqual, tnode, tcls))
+    return findings

@@ -1,0 +1,310 @@
+"""Dynamic lock-order witness (the runtime half of the locks rule).
+
+With ``REPRO_LOCK_WITNESS=1`` the test suite calls :func:`install`,
+which replaces ``threading.Lock``/``threading.RLock`` with factories
+that wrap any lock *allocated from repro code* in a tracking proxy
+(``threading.Condition()`` picks the patched RLock up automatically;
+locks allocated by the stdlib — queues, logging — stay raw and free).
+
+Each proxy carries its **allocation site** (``file:line`` of the
+``threading.Lock()`` call), so every ``SnapshotBuffer`` instance shares
+one node, matching the static rule's class-qualified model.  On every
+successful acquire the witness appends edges ``held-site -> new-site``
+to a global order graph and checks for a path back: a cycle means two
+threads can deadlock under the observed orders, and the suite fails even
+though this particular run got lucky with timing.  Reentrant RLock
+acquires and same-site pairs (two instances of one class, e.g. paired
+buffers) are excluded — the latter is a documented under-approximation,
+not a bug: site-level identity cannot distinguish instance order.
+
+The witness also enforces the publish invariant dynamically:
+:func:`guard_publishes` patches ``SnapshotBuffer.__setattr__`` so any
+``_front`` store while ``_lock`` is not held by the storing thread is
+recorded as a violation (``# guarded-by(writes): _lock``, enforced at
+runtime even for code paths the static rule cannot see).
+"""
+from __future__ import annotations
+
+import os
+import sys
+import threading
+import traceback
+
+# real factories, captured before any patching
+_REAL_LOCK = threading.Lock
+_REAL_RLOCK = threading.RLock
+
+_REPRO_FRAGMENT = f"{os.sep}repro{os.sep}"
+_SELF_FILE = os.path.abspath(__file__)
+
+
+def _allocation_site() -> str | None:
+    """``file:line`` of the nearest caller outside threading/witness
+    code; None when the allocation is not repro code."""
+    f = sys._getframe(2)
+    while f is not None:
+        fname = f.f_code.co_filename
+        if not (fname.endswith("threading.py")
+                or os.path.abspath(fname) == _SELF_FILE):
+            rel = os.path.abspath(fname)
+            if _REPRO_FRAGMENT not in rel:
+                return None
+            tail = rel.split(_REPRO_FRAGMENT)[-1]
+            return f"repro/{tail.replace(os.sep, '/')}:{f.f_lineno}"
+        f = f.f_back
+    return None
+
+
+class LockWitness:
+    """Global acquisition-order graph + violation log."""
+
+    def __init__(self) -> None:
+        self._mu = _REAL_LOCK()
+        self._tls = threading.local()
+        # site -> set of successor sites; edge evidence kept separately
+        self._graph: dict[str, set[str]] = {}
+        self._evidence: dict[tuple[str, str], str] = {}
+        self.cycles: list[dict] = []
+        self.unlocked_publishes: list[dict] = []
+        self._reported: set[tuple[str, ...]] = set()
+
+    # ------------------------------------------------------------ held state
+    def _stack(self) -> list:
+        st = getattr(self._tls, "stack", None)
+        if st is None:
+            st = self._tls.stack = []
+        return st
+
+    def holds(self, proxy: "object") -> bool:
+        return any(p is proxy for p in self._stack())
+
+    # ------------------------------------------------------------- recording
+    def note_acquire(self, proxy: "_WitnessedLockBase") -> None:
+        stack = self._stack()
+        reentrant = any(p is proxy for p in stack)
+        if not reentrant:
+            held_sites = []
+            seen: set[int] = set()
+            for p in stack:
+                if id(p) not in seen:
+                    seen.add(id(p))
+                    held_sites.append(p.site)
+            if held_sites:
+                self._note_edges(held_sites, proxy.site)
+        stack.append(proxy)
+
+    def note_release(self, proxy: "_WitnessedLockBase") -> None:
+        stack = self._stack()
+        for i in range(len(stack) - 1, -1, -1):
+            if stack[i] is proxy:
+                del stack[i]
+                return
+
+    def _note_edges(self, held_sites: list[str], new_site: str) -> None:
+        tb = "".join(traceback.format_stack(sys._getframe(3), limit=6))
+        with self._mu:
+            for held in held_sites:
+                if held == new_site:
+                    continue  # two instances of one class: site-level blind
+                self._graph.setdefault(held, set()).add(new_site)
+                self._graph.setdefault(new_site, set())
+                self._evidence.setdefault((held, new_site), tb)
+                path = self._path(new_site, held)
+                if path is not None:
+                    cycle = [held, new_site] + path[1:]
+                    key = tuple(sorted(set(cycle)))
+                    if key not in self._reported:
+                        self._reported.add(key)
+                        self.cycles.append({
+                            "cycle": cycle,
+                            "thread": threading.current_thread().name,
+                            "forward": tb,
+                            "reverse": self._evidence.get(
+                                (new_site, path[1] if len(path) > 1
+                                 else held), ""),
+                        })
+
+    def _path(self, src: str, dst: str) -> list[str] | None:
+        """Directed path src ~> dst in the order graph (callers hold _mu)."""
+        if src == dst:
+            return [src]
+        stack = [(src, [src])]
+        visited = {src}
+        while stack:
+            cur, path = stack.pop()
+            for nxt in self._graph.get(cur, ()):
+                if nxt == dst:
+                    return path + [dst]
+                if nxt not in visited:
+                    visited.add(nxt)
+                    stack.append((nxt, path + [nxt]))
+        return None
+
+    def note_unlocked_publish(self, what: str) -> None:
+        with self._mu:
+            self.unlocked_publishes.append({
+                "what": what,
+                "thread": threading.current_thread().name,
+                "stack": "".join(traceback.format_stack(
+                    sys._getframe(2), limit=8)),
+            })
+
+    # --------------------------------------------------------------- reports
+    def edge_count(self) -> int:
+        with self._mu:
+            return sum(len(v) for v in self._graph.values())
+
+    def report(self) -> dict:
+        with self._mu:
+            return {
+                "sites": len(self._graph),
+                "edges": sum(len(v) for v in self._graph.values()),
+                "cycles": list(self.cycles),
+                "unlocked_publishes": list(self.unlocked_publishes),
+            }
+
+    def render_violations(self) -> str:
+        rep = self.report()
+        out: list[str] = []
+        for c in rep["cycles"]:
+            out.append("lock-order cycle: " + " -> ".join(c["cycle"])
+                       + f" (thread {c['thread']})\n"
+                       + "forward acquisition:\n" + c["forward"]
+                       + ("reverse acquisition:\n" + c["reverse"]
+                          if c["reverse"] else ""))
+        for p in rep["unlocked_publishes"]:
+            out.append(f"publish while unlocked: {p['what']} "
+                       f"(thread {p['thread']})\n" + p["stack"])
+        return "\n".join(out)
+
+
+class _WitnessedLockBase:
+    """Common acquire/release tracking; subclasses pick the inner lock."""
+
+    def __init__(self, inner, site: str, witness: LockWitness) -> None:
+        self._inner = inner
+        self.site = site
+        self._witness = witness
+
+    def acquire(self, blocking: bool = True, timeout: float = -1):
+        ok = self._inner.acquire(blocking, timeout)
+        if ok:
+            self._witness.note_acquire(self)
+        return ok
+
+    def release(self) -> None:
+        self._witness.note_release(self)
+        self._inner.release()
+
+    def locked(self) -> bool:
+        return self._inner.locked()
+
+    def __enter__(self):
+        self.acquire()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.release()
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return f"<witnessed {type(self._inner).__name__} @ {self.site}>"
+
+
+class WitnessedLock(_WitnessedLockBase):
+    pass
+
+
+class WitnessedRLock(_WitnessedLockBase):
+    # threading.Condition probes for _is_owned; without the delegation its
+    # acquire(False) fallback wrongly succeeds on a reentrant lock the
+    # current thread already owns.  _release_save/_acquire_restore are
+    # deliberately NOT forwarded: Condition then falls back to plain
+    # release()/acquire() on this proxy, which keeps the witness's held
+    # stack exact across cv.wait().
+    def _is_owned(self) -> bool:
+        return self._inner._is_owned()
+
+
+# ------------------------------------------------------------ installation
+_witness: LockWitness | None = None
+_installed = False
+
+
+def get_witness() -> LockWitness | None:
+    return _witness
+
+
+def _make_lock():
+    site = _allocation_site()
+    if site is None or _witness is None:
+        return _REAL_LOCK()
+    return WitnessedLock(_REAL_LOCK(), site, _witness)
+
+
+def _make_rlock():
+    site = _allocation_site()
+    if site is None or _witness is None:
+        return _REAL_RLOCK()
+    return WitnessedRLock(_REAL_RLOCK(), site, _witness)
+
+
+def install() -> LockWitness:
+    """Patch the lock factories; idempotent.  Returns the witness."""
+    global _witness, _installed
+    if _witness is None:
+        _witness = LockWitness()
+    if not _installed:
+        threading.Lock = _make_lock
+        threading.RLock = _make_rlock
+        guard_publishes(_witness)
+        _installed = True
+    return _witness
+
+
+def uninstall() -> None:
+    global _installed
+    threading.Lock = _REAL_LOCK
+    threading.RLock = _REAL_RLOCK
+    _unguard_publishes()
+    _installed = False
+
+
+_publish_guarded = False
+
+
+def guard_publishes(witness: LockWitness) -> None:
+    """Enforce ``SnapshotBuffer._front  # guarded-by(writes): _lock`` at
+    runtime: every `_front` store must come from a thread holding the
+    buffer's lock.  (During ``__init__`` the lock does not exist yet —
+    those stores are exempt, same as the static rule.)"""
+    global _publish_guarded
+    if _publish_guarded:
+        return
+    from repro.serving.snapshot import SnapshotBuffer
+
+    def checked_setattr(self, name, value, _w=witness):
+        if name == "_front":
+            lock = self.__dict__.get("_lock")
+            if lock is not None:
+                held = _w.holds(lock) if isinstance(
+                    lock, _WitnessedLockBase) else lock.locked()
+                if not held:
+                    _w.note_unlocked_publish(
+                        "SnapshotBuffer._front store outside _lock")
+        object.__setattr__(self, name, value)
+
+    SnapshotBuffer.__setattr__ = checked_setattr
+    _publish_guarded = True
+
+
+def _unguard_publishes() -> None:
+    global _publish_guarded
+    if not _publish_guarded:
+        return
+    from repro.serving.snapshot import SnapshotBuffer
+
+    try:
+        del SnapshotBuffer.__setattr__
+    except AttributeError:
+        pass
+    _publish_guarded = False

@@ -130,12 +130,21 @@ class SocketWorker:
         # Retained items are in-flight work: forwarded to the worker but
         # not yet covered by an ADOPTED publish — exactly what a fresh
         # session must replay for the edge-conservation gates to hold.
+        # Lock split (lock-discipline rule): retain-buffer state belongs to
+        # _retain_lock, redial arbitration state to _fail_lock — the old
+        # code wrote `_redial_used` under _retain_lock on overflow, racing
+        # the _fail_lock-guarded read in _peer_lost.  Overflow now sets
+        # `_retain_forfeited` (retain-owned); the redial path reads it
+        # under _retain_lock where it decides eligibility/replay.
         self._retain_lock = threading.Lock()
-        self._retained: deque = deque()
-        self._retain_active = address is not None
-        self._covered_edges = self.base_edges  # cumulative, adopt-side
-        self._redial_used = False
-        self._redialing = False
+        self._retained: deque = deque()  # guarded-by: _retain_lock
+        self._retain_active = address is not None  # guarded-by: _retain_lock
+        # replay set overflowed _RETAIN_CAP: conservation can no longer be
+        # proven across a reconnect, so a redial must fail loudly instead
+        self._retain_forfeited = False  # guarded-by: _retain_lock
+        self._covered_edges = self.base_edges  # guarded-by: _retain_lock
+        self._redial_used = False  # guarded-by: _fail_lock
+        self._redialing = False  # guarded-by: _fail_lock
         self._redial_event = threading.Event()  # cleared while redialing
         self._redial_event.set()
         self._rx_quiesced = threading.Event()  # old-session receiver idle
@@ -369,10 +378,12 @@ class SocketWorker:
                 return False
             if sock is not self._sock:
                 return True  # a concurrent redial already replaced the link
+            with self._retain_lock:  # static edge _fail_lock -> _retain_lock
+                forfeited = self._retain_forfeited
             if self._redialing:
                 action = "wait"
             elif (self.address is not None and not self._redial_used
-                  and not self._hard_stop):
+                  and not forfeited and not self._hard_stop):
                 self._redial_used = True
                 self._redialing = True
                 self._redial_event.clear()
@@ -432,6 +443,14 @@ class SocketWorker:
                 wire.send_message(sock, ("hello", spec),
                                   deadline_s=self.frame_deadline_s)
                 with self._retain_lock:
+                    if self._retain_forfeited:
+                        # the forwarder overflowed the replay buffer AFTER
+                        # eligibility was checked: the freeze-time state no
+                        # longer covers every in-flight edge, so resyncing
+                        # would silently lose work.  Fail the redial — the
+                        # caller raises a loud WorkerFailure instead.
+                        raise ConnectionError(
+                            "retained replay set forfeited mid-redial")
                     for it in self._retained:
                         wire.send_frame(sock, wire.encode_item_frame(it),
                                         deadline_s=self.frame_deadline_s)
@@ -467,9 +486,13 @@ class SocketWorker:
                 if self._retain_active:
                     self._retained.append(item)
                     if len(self._retained) > _RETAIN_CAP:
+                        # too much un-adopted in-flight work to ever replay;
+                        # forfeit (NOT `_redial_used = True`: that field is
+                        # _fail_lock state — writing it here raced the
+                        # redial arbitration in _peer_lost)
                         self._retained.clear()
                         self._retain_active = False
-                        self._redial_used = True
+                        self._retain_forfeited = True
                 sock = self._sock
             try:
                 self._send_frame_on(sock, frame)

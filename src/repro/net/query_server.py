@@ -198,11 +198,11 @@ class QueryServer:
         self._listener.listen(256)
         self.address: tuple[str, int] = self._listener.getsockname()[:2]
         self._cv = threading.Condition()
-        self._pending: deque[_Call] = deque()
-        self._inflight = 0  # admitted requests not yet answered
-        self._buckets: dict[str, TokenBucket] = {}
-        self._service_ewma_ms = 1.0  # per-request service time estimate
-        self._stats = {
+        self._pending: deque[_Call] = deque()  # guarded-by: _cv
+        self._inflight = 0  # admitted, not yet answered; guarded-by: _cv
+        self._buckets: dict[str, TokenBucket] = {}  # guarded-by: _cv
+        self._service_ewma_ms = 1.0  # service-time est.; guarded-by: _cv
+        self._stats = {  # guarded-by: _cv
             "offered_requests": 0,
             "admitted_requests": 0,
             "served_requests": 0,
@@ -370,7 +370,7 @@ class QueryServer:
                 pass
 
     # -------------------------------------------------------------- admission
-    def _retry_after_ms(self, n_queued: int) -> float:
+    def _retry_after_ms(self, n_queued: int) -> float:  # requires-lock: _cv
         # time until the current backlog is worked off, from the measured
         # per-request service EWMA — an honest Retry-After, not a constant
         return max(1.0, n_queued * self._service_ewma_ms)
@@ -433,7 +433,7 @@ class QueryServer:
                              tenant=tenant, n_requests=n)
 
     # --------------------------------------------------------------- executor
-    def _take_batch(self) -> list[_Call]:
+    def _take_batch(self) -> list[_Call]:  # requires-lock: _cv
         """Under ``_cv``: pop whole calls up to ``batch_max`` requests (a
         call is never split; the first call always fits by itself)."""
         calls: list[_Call] = []

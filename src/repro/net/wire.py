@@ -23,9 +23,10 @@ is merely quiet, but once a frame has started the remainder must arrive
 within ``frame_deadline_s`` or the read raises — a peer that wedges halfway
 through a frame can never hang its reader.
 
-Payload trust: frames are decoded with a RESTRICTED unpickler.  Only
-``repro.*`` dataclasses, numpy array/scalar reconstruction, and a short
-builtins/collections allowlist may appear as pickle globals; anything else
+Payload trust: frames are decoded with a RESTRICTED unpickler.  Only the
+three ``# wire-type`` marked repro dataclasses (``_SAFE_REPRO_CLASSES``),
+numpy array/scalar reconstruction, and a short builtins/collections
+allowlist may appear as pickle globals; anything else
 (``os.system``, ``builtins.eval``, ...) raises :class:`WireError` instead
 of executing — a crafted frame from a hostile peer cannot become remote
 code execution.  On top of that, listeners refuse to bind non-loopback
@@ -142,6 +143,17 @@ _NUMPY_TOPLEVEL_NAMES = frozenset({
     "uintp", "longlong", "ulonglong", "half", "single", "double",
     "longdouble", "csingle", "cdouble", "clongdouble", "str_", "bytes_"})
 
+# The ONLY repro classes a wire payload may materialise.  Each class is
+# marked `# wire-type` at its definition; the unpickler-allowlist rule
+# (repro.analysis) fails CI when the two drift apart in either direction,
+# so adding a class here without marking it — or shipping a marked class
+# without listing it — is caught before a peer ever sees the frame.
+_SAFE_REPRO_CLASSES: dict[str, frozenset] = {
+    "repro.runtime.backend": frozenset({"_ChildSpec"}),   # hello frames
+    "repro.serving.registry": frozenset({"TenantOrigin"}),  # _ChildSpec.origin
+    "repro.serving.engine": frozenset({"Request"}),       # query frames
+}
+
 
 class _RestrictedUnpickler(pickle.Unpickler):
     def find_class(self, module: str, name: str):
@@ -152,7 +164,7 @@ class _RestrictedUnpickler(pickle.Unpickler):
                 and name in _NUMPY_RECONSTRUCT_NAMES)
             or (module == "numpy" and name in _NUMPY_TOPLEVEL_NAMES)
             or (module == "numpy.dtypes" and name.endswith("DType"))
-            or module == "repro" or module.startswith("repro.")
+            or name in _SAFE_REPRO_CLASSES.get(module, ())
         )
         if not allowed:
             raise pickle.UnpicklingError(
@@ -327,7 +339,7 @@ def _col_dtype(tag: bytes, what: str) -> np.dtype:
     return dt
 
 
-def encode_item_frame(item, *, on_wire: bool = True) -> bytes:
+def encode_item_frame(item, *, on_wire: bool = True) -> bytes:  # hot-path
     """Frame one ``QueueItem``-shaped batch as a v3 columnar frame.
 
     ``item`` is duck-typed (``offset / src / dst / weight / n_edges /
@@ -369,7 +381,7 @@ def encode_item_frame(item, *, on_wire: bool = True) -> bytes:
     return frame
 
 
-def _decode_item_cols(body: bytes) -> tuple:
+def _decode_item_cols(body: bytes) -> tuple:  # hot-path
     """Columnar payload -> the canonical ``("item", ...)`` message tuple."""
     if len(body) < _ITEM_COLS.size:
         raise WireError(
@@ -475,7 +487,7 @@ def send_message(sock: socket.socket, msg: tuple, *,
             f"send of {msg[0]!r} frame did not complete within {deadline_s}s") from exc
 
 
-def send_frame(sock: socket.socket, frame: bytes, *,
+def send_frame(sock: socket.socket, frame: bytes, *,  # hot-path
                deadline_s: float = 120.0) -> None:
     """Send an already-encoded frame (e.g. :func:`encode_item_frame`)."""
     sock.settimeout(deadline_s)

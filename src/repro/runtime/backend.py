@@ -164,7 +164,7 @@ def resolve_backend(spec) -> ExecutionBackend:
 # ----------------------------------------------------------------- process --
 
 @dataclasses.dataclass
-class _ChildSpec:
+class _ChildSpec:  # wire-type
     """Everything a spawn child needs; plain picklable values only."""
 
     origin: object  # serving.registry.TenantOrigin

@@ -1,5 +1,8 @@
 """Bounded edge-batch queues with explicit backpressure (DESIGN.md §Runtime).
 
+# analysis: hot-path — every queued batch flows through here; the
+# no-pickle-hot-path rule keeps serialization out of this module.
+
 The queue is the contract between a stream producer (``StreamPump`` or an
 external ``Runtime.submit`` caller) and a tenant's ``IngestWorker``.  It is
 *bounded* on purpose: an unbounded queue turns a slow ingest path into
@@ -88,22 +91,21 @@ class BoundedEdgeQueue:
                 if name.startswith("spill_"):
                     os.remove(os.path.join(spill_dir, name))
                     self.stale_spills_removed += 1
-        self._items: deque[QueueItem] = deque()
+        self._items: deque[QueueItem] = deque()  # guarded-by: _cv
         self._cv = threading.Condition()
-        self._closed = False
+        self._closed = False  # guarded-by(writes): _cv
         # disk FIFO indices: slots [_spill_head, _spill_tail) are reserved;
         # _spill_ready[i] is set once slot i's file is actually on disk
         # (reservation happens under the lock, file I/O outside it)
-        self._spill_head = 0
-        self._spill_tail = 0
+        self._spill_head = 0  # guarded-by: _cv
+        self._spill_tail = 0  # guarded-by: _cv
         self._spill_ready: dict[int, threading.Event] = {}
-        # accounting (all guarded by _cv)
-        self.accepted_batches = 0
-        self.accepted_edges = 0
-        self.dropped_batches = 0
-        self.dropped_edges = 0
-        self.spilled_batches = 0
-        self.max_depth_seen = 0
+        self.accepted_batches = 0  # guarded-by: _cv
+        self.accepted_edges = 0  # guarded-by: _cv
+        self.dropped_batches = 0  # guarded-by: _cv
+        self.dropped_edges = 0  # guarded-by: _cv
+        self.spilled_batches = 0  # guarded-by: _cv
+        self.max_depth_seen = 0  # guarded-by: _cv
 
     # ------------------------------------------------------------------ spill
     def _spill_path(self, idx: int) -> str:
@@ -144,7 +146,7 @@ class BoundedEdgeQueue:
         return item
 
     @property
-    def _spill_pending(self) -> int:
+    def _spill_pending(self) -> int:  # requires-lock: _cv
         return self._spill_tail - self._spill_head
 
     # -------------------------------------------------------------- interface

@@ -1,5 +1,9 @@
 """Per-tenant background ingest worker (DESIGN.md §Runtime).
 
+# analysis: hot-path — the per-batch ingest loop; the no-pickle-hot-path
+# rule keeps serialization out of this module (checkpoints go through
+# repro.checkpoint.store, never inline pickle).
+
 One ``IngestWorker`` thread owns one tenant's write path end to end: it
 pulls ``QueueItem``s from the tenant's bounded queue, folds them into the
 registry's delta sketch (``SnapshotBuffer.ingest``), feeds the tenant's
@@ -115,7 +119,7 @@ class IngestWorker(threading.Thread):
 
     def run(self) -> None:  # thread body
         self.state = RUNNING
-        self.metrics.started_at = time.monotonic()
+        self.metrics.note_started(time.monotonic())
         try:
             while True:
                 item = self._held
@@ -168,7 +172,7 @@ class IngestWorker(threading.Thread):
                 # run's batch counter: a restored checkpoint can carry a
                 # non-empty delta even when no new batch arrived (stream
                 # already exhausted), and it must still reach an epoch.
-                if (self.metrics.batches_since_publish
+                if (self.metrics.pending_batches()
                         or self.tenant.buffer.pending_edges):
                     self._publish()
                 if self.checkpoint_dir:
@@ -257,7 +261,7 @@ class IngestWorker(threading.Thread):
 
     def _should_publish(self, now: float) -> bool:
         return self.policy.should_publish(
-            batches_since_publish=self.metrics.batches_since_publish,
+            batches_since_publish=self.metrics.pending_batches(),
             now=now, queue_depth=self.queue.depth())
 
     def _publish(self):
@@ -313,7 +317,7 @@ class IngestWorker(threading.Thread):
     def ingested_edges(self) -> int:
         """Backend-neutral accessor (runtime/backend.py contract): total
         non-padding edges this worker has folded into the delta."""
-        return self.metrics.ingested_edges
+        return self.metrics.total_edges()
 
     def wait_ready(self, timeout: float = 0.0) -> bool:
         """Backend-neutral readiness barrier: a thread worker shares the

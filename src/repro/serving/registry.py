@@ -82,7 +82,7 @@ class TenantKey:
 
 
 @dataclasses.dataclass(frozen=True)
-class TenantOrigin:
+class TenantOrigin:  # wire-type
     """How to rebuild a registry-opened tenant from scratch, anywhere.
 
     Tenant construction is deterministic — stream, bootstrap sample,

@@ -105,11 +105,12 @@ class SnapshotBuffer:
         # the id unique per buffer while keeping the readable prefix.
         self._tenant_id = f"{tenant_id or 'anon'}#{next(_anon_ids)}"
         self._kind = kind or getattr(sketch, "kind", type(sketch).__name__.lower())
-        self._front = Snapshot(self._tenant_id, 0, sketch, self._kind, 0)
-        self._delta = mod.empty_like(sketch)
+        self._front = Snapshot(self._tenant_id, 0, sketch,  # guarded-by(writes): _lock
+                               self._kind, 0)
+        self._delta = mod.empty_like(sketch)  # guarded-by: _lock
         # device-side counter: avoids a host sync per ingest batch; folded
         # into the ingest kernel so each batch is ONE dispatch
-        self._pending = jnp.zeros((), jnp.int64 if jax.config.x64_enabled
+        self._pending = jnp.zeros((), jnp.int64 if jax.config.x64_enabled  # guarded-by: _lock
                                   else jnp.int32)
         self._jit_ingest, self._jit_publish = _shared_kernels(mod)
         # Delta-publication support (runtime/backend.py): with the flag on,

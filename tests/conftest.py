@@ -1,8 +1,20 @@
 import os
+import sys
 
 # Smoke tests and benches must see exactly ONE device; only launch/dryrun.py
 # force-sets 512 host devices (and it does so before importing jax).
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# Lock-order witness (repro.analysis): must install BEFORE any repro module
+# allocates a lock at import/construct time, so conftest import is the one
+# safe place to patch the threading factories.
+_WITNESS = None
+if os.environ.get("REPRO_LOCK_WITNESS") == "1":
+    from repro.analysis import witness as _witness_mod
+
+    _WITNESS = _witness_mod.install()
 
 import numpy as np
 import pytest
@@ -11,3 +23,20 @@ import pytest
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session", autouse=True)
+def _lock_witness_gate():
+    """With REPRO_LOCK_WITNESS=1, fail the run on any lock-order cycle or
+    publish-while-unlocked the suite's real concurrency exercised."""
+    yield
+    if _WITNESS is None:
+        return
+    rep = _WITNESS.report()
+    if rep["cycles"] or rep["unlocked_publishes"]:
+        raise AssertionError(
+            "lock witness observed violations:\n"
+            + _WITNESS.render_violations())
+    sys.stderr.write(
+        f"\n[lock-witness] clean: {rep['sites']} lock sites, "
+        f"{rep['edges']} ordered acquisitions, 0 cycles\n")

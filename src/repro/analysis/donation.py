@@ -1,0 +1,198 @@
+"""Rule: no reads of a buffer after it was donated into a jit call.
+
+``jax.jit(..., donate_argnums=...)`` transfers ownership of the argument
+buffer to the compiled computation: on this backend the donated Array is
+*deleted* the moment the call dispatches, and any later read raises
+``RuntimeError: Array has been deleted`` — at runtime, on whichever
+input first takes that path.  The ingest fast path (serving/snapshot.py)
+leans on donation for its in-place scatter, so the hazard is now a
+standing one; this rule makes it a static finding instead of a
+production stack trace.
+
+Donating callables are recognised two ways:
+
+- **jit assignments**: ``name = jax.jit(f, donate_argnums=(0,))`` (or an
+  attribute target like ``self._step = ...``) binds ``name`` to a
+  donating callable; every later ``name(...)`` call site consumes the
+  arguments at the donated positions.
+- **call-site markers**: a trailing ``# donates: N[,M]`` comment on any
+  line of a call marks that call as donating positions N, M.  This
+  covers callables the assignment scan cannot resolve (kernels stashed
+  in a namedtuple kit, locals passed through aliases) — the marker is a
+  reviewed assertion, and this rule is what makes the assertion load-
+  bearing.
+
+Checking is a per-function *linear* event simulation.  Every event gets
+a ``(line, phase)`` position — loads at phase 0, consumes at the call's
+**end line** phase 1 (arguments on continuation lines load before the
+call completes), stores at the enclosing statement's end line phase 2 —
+so the canonical same-statement rebind
+
+    self._delta, self._pending = self._kernels.ingest(  # donates: 0
+        self._delta, batch, self._pending)
+
+orders as load < consume < store and is clean, while any read of the
+donated name before a rebind is flagged.  Control flow is deliberately
+ignored (events in source order): like the other rules this
+under-approximates — a read reachable only on the non-donating branch
+of an earlier ``if`` can be missed, but nothing clean is flagged for
+the patterns this codebase uses.
+"""
+from __future__ import annotations
+
+import ast
+import re
+
+from repro.analysis.engine import (
+    Finding, Project, SourceFile, dotted_name, functions_of, module_imports,
+)
+
+RULE = "use-after-donate"
+
+_MARKER = re.compile(r"#\s*donates:\s*([0-9]+(?:\s*,\s*[0-9]+)*)")
+
+_LOAD, _CONSUME, _STORE = 0, 1, 2
+
+
+def _is_jit_name(canonical: str) -> bool:
+    return canonical == "jax.jit" or canonical.endswith(".jax.jit")
+
+
+def _donate_argnums(call: ast.Call) -> frozenset[int] | None:
+    """Donated positions of a ``jax.jit(...)`` call, None if not donating."""
+    for kw in call.keywords:
+        if kw.arg != "donate_argnums":
+            continue
+        v = kw.value
+        if isinstance(v, ast.Constant) and isinstance(v.value, int):
+            return frozenset((v.value,))
+        if isinstance(v, (ast.Tuple, ast.List)):
+            nums = []
+            for elt in v.elts:
+                if not (isinstance(elt, ast.Constant)
+                        and isinstance(elt.value, int)):
+                    return None  # dynamic spec: unresolvable, skip
+                nums.append(elt.value)
+            return frozenset(nums)
+        return None
+    return None
+
+
+def _donating_bindings(sf: SourceFile) -> dict[str, frozenset[int]]:
+    """Names bound (anywhere in the module) to donating jit callables."""
+    mod_aliases, from_imports = module_imports(sf.tree)
+
+    def resolve(name: str) -> str:
+        head, _, rest = name.partition(".")
+        if head in from_imports:
+            m, n = from_imports[head]
+            head = f"{m}.{n}"
+        elif head in mod_aliases:
+            head = mod_aliases[head]
+        return f"{head}.{rest}" if rest else head
+
+    out: dict[str, frozenset[int]] = {}
+    for node in ast.walk(sf.tree):
+        if not isinstance(node, ast.Assign) or \
+                not isinstance(node.value, ast.Call):
+            continue
+        fname = dotted_name(node.value.func)
+        if fname is None or not _is_jit_name(resolve(fname)):
+            continue
+        nums = _donate_argnums(node.value)
+        if nums is None:
+            continue
+        for t in node.targets:
+            tname = dotted_name(t)
+            if tname is not None:
+                out[tname] = nums
+    return out
+
+
+def _marker_argnums(sf: SourceFile, call: ast.Call) -> frozenset[int] | None:
+    """``# donates: ...`` positions on any physical line of ``call``."""
+    end = getattr(call, "end_lineno", call.lineno) or call.lineno
+    for lineno in range(call.lineno, end + 1):
+        m = _MARKER.search(sf.line(lineno))
+        if m:
+            return frozenset(int(p) for p in m.group(1).split(","))
+    return None
+
+
+def _stmt_end(stmt: ast.stmt) -> int:
+    return getattr(stmt, "end_lineno", stmt.lineno) or stmt.lineno
+
+
+def _statements(fn: ast.AST):
+    """Every statement in ``fn``'s body, source order (nested included)."""
+    for node in ast.walk(fn):
+        if isinstance(node, ast.stmt) and node is not fn:
+            yield node
+
+
+def _check_function(sf: SourceFile, qual: str, fn: ast.AST,
+                    bindings: dict[str, frozenset[int]],
+                    findings: list[Finding]) -> None:
+    # pass 1: find consume events (donating calls with resolvable args)
+    consumes: list[tuple[int, int, str, str]] = []  # (line, phase, var, via)
+    for node in ast.walk(fn):
+        if not isinstance(node, ast.Call):
+            continue
+        fname = dotted_name(node.func)
+        nums = _marker_argnums(sf, node)
+        if nums is None and fname is not None:
+            nums = bindings.get(fname)
+        if nums is None:
+            continue
+        end = getattr(node, "end_lineno", node.lineno) or node.lineno
+        for pos in nums:
+            if pos >= len(node.args):
+                continue
+            var = dotted_name(node.args[pos])
+            if var is not None:
+                consumes.append((end, _CONSUME, var, fname or "<call>"))
+    if not consumes:
+        return
+    tracked = {var for _, _, var, _ in consumes}
+
+    # pass 2: loads and stores of the tracked names
+    events: list[tuple[int, int, str, str]] = list(consumes)
+    for stmt in _statements(fn):
+        for node in ast.walk(stmt):
+            if not isinstance(node, (ast.Name, ast.Attribute)):
+                continue
+            var = dotted_name(node)
+            if var not in tracked:
+                continue
+            if isinstance(node.ctx, ast.Store):
+                events.append((_stmt_end(stmt), _STORE, var, ""))
+            elif isinstance(node.ctx, ast.Load):
+                events.append((node.lineno, _LOAD, var, ""))
+
+    events.sort(key=lambda e: (e[0], e[1]))
+    consumed: dict[str, tuple[int, str]] = {}
+    flagged: set[tuple[str, int]] = set()
+    for line, phase, var, via in events:
+        if phase == _CONSUME:
+            consumed[var] = (line, via)
+        elif phase == _STORE:
+            consumed.pop(var, None)
+        elif var in consumed and (var, line) not in flagged:
+            dline, via = consumed[var]
+            flagged.add((var, line))
+            findings.append(Finding(
+                RULE, sf.module, line,
+                f"{qual!r} reads `{var}` after it was donated into "
+                f"`{via}` (line {dline}); donated buffers are deleted "
+                f"at dispatch — rebind before reading"))
+
+
+def check(project: Project) -> list[Finding]:
+    findings: list[Finding] = []
+    for mod, sf in sorted(project.files.items()):
+        bindings = _donating_bindings(sf)
+        if not bindings and "donates:" not in sf.text:
+            continue
+        for qual, _cls, fn in functions_of(sf.tree):
+            _check_function(sf, qual, fn, bindings, findings)
+    return findings

@@ -128,7 +128,9 @@ def all_rules() -> list[tuple[str, Rule]]:
     Imported lazily so fixture tests can import a single rule module
     without dragging the rest in.
     """
-    from repro.analysis import locks, pickle_rules, trace_purity, wire_schema
+    from repro.analysis import (
+        donation, locks, pickle_rules, trace_purity, wire_schema,
+    )
 
     return [
         ("trace-purity", trace_purity.check),
@@ -136,6 +138,7 @@ def all_rules() -> list[tuple[str, Rule]]:
         ("unpickler-allowlist", pickle_rules.check_unpickler),
         ("no-pickle-hot-path", pickle_rules.check_hot_path),
         ("lock-discipline", locks.check),
+        ("use-after-donate", donation.check),
     ]
 
 

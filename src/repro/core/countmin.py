@@ -13,6 +13,12 @@ from repro.common.hashing import HashFamily, families_match, fastrange, hash_pai
 from repro.common.struct import pytree_dataclass, static_field
 from repro.core.types import EdgeBatch
 
+# Alias-safe under buffer donation (serving/snapshot.py): ingest / merge /
+# empty_like are pure pytree->pytree functions that never retain a
+# reference to an input leaf, so a caller may pass the sketch into a
+# donate_argnums position and let XLA update the counter buffers in place.
+DONATION_SAFE = True
+
 
 @pytree_dataclass
 class CountMin:

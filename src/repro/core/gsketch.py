@@ -17,6 +17,13 @@ from repro.core.partitioning import plan_partitions
 from repro.core.routing import RouteTable, route_table_from_plan, routes_match
 from repro.core.types import EdgeBatch, VertexStats
 
+# Alias-safe under buffer donation (serving/snapshot.py): ingest / merge /
+# empty_like never retain a reference to an input leaf, so the sketch may
+# sit in a donate_argnums position.  Note empty_like reuses the hash and
+# route leaves by reference — donating callers must deep-copy first
+# (SnapshotBuffer._private_copy does).
+DONATION_SAFE = True
+
 
 @pytree_dataclass
 class GSketch:

@@ -56,6 +56,14 @@ def sketch_backend(backend: str | None = None) -> str:
     return backend
 
 
+# Alias-safe under buffer donation (serving/snapshot.py): ingest (including
+# the lazily-dispatched Pallas path) / merge / empty_like never retain a
+# reference to an input leaf, so the sketch may sit in a donate_argnums
+# position.  empty_like reuses hash/route leaves by reference — donating
+# callers must deep-copy first (SnapshotBuffer._private_copy does).
+DONATION_SAFE = True
+
+
 @pytree_dataclass
 class KMatrixAccel:
     """kMatrix with power-of-two width classes (TPU-native layout).

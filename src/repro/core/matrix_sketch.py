@@ -20,6 +20,11 @@ from repro.common.hashing import HashFamily, families_match, fastrange
 from repro.common.struct import pytree_dataclass, static_field
 from repro.core.types import EdgeBatch
 
+# Alias-safe under buffer donation (serving/snapshot.py): ingest / merge /
+# empty_like are pure pytree->pytree functions with no retained input
+# references, so the sketch may sit in a donate_argnums position.
+DONATION_SAFE = True
+
 
 @pytree_dataclass
 class MatrixSketch:

@@ -54,6 +54,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import signal
 import sys
 import time
@@ -138,6 +139,15 @@ def parse_args(argv=None) -> argparse.Namespace:
     ap.add_argument("--restore", action="store_true",
                     help="resume from the latest checkpoint in "
                          "--checkpoint-dir before serving")
+    ap.add_argument("--ingest-dedup", action="store_true",
+                    help="pre-aggregate duplicate (src, dst) rows on the "
+                         "host before each coalesced ingest dispatch — "
+                         "bit-exact (counters are linear), fewer device "
+                         "scatter rows on skewed streams")
+    ap.add_argument("--no-donate", action="store_true",
+                    help="disable jit buffer donation in the ingest path "
+                         "(sets REPRO_DONATE=0 for this process and its "
+                         "workers; A/B and debugging aid)")
     # ---- network front-end (repro.net) ----
     ap.add_argument("--serve", default="", metavar="HOST:PORT",
                     help="serve queries over TCP with admission control; "
@@ -189,6 +199,7 @@ def parse_args(argv=None) -> argparse.Namespace:
                               args.runtime_backend != "thread"),
                              ("--queue-capacity",
                               args.queue_capacity != 64),
+                             ("--ingest-dedup", args.ingest_dedup),
                              ("--serve", bool(args.serve))]:
             if is_set:
                 ap.error(f"{flag} requires --background-ingest")
@@ -359,6 +370,7 @@ def background_serve(args, tenant, engine, requests) -> tuple:
         checkpoint_dir=args.checkpoint_dir or None,
         checkpoint_every=args.checkpoint_every,
         spill_dir=args.spill_dir or None,
+        dedup=args.ingest_dedup,
         backend=_backend_arg(args.runtime_backend, args.publish_mode),
     )
     runtime.attach(tenant, restore=args.restore)
@@ -440,6 +452,7 @@ def sharded_main(args) -> None:
         # K small shards don't pay K-fold fixed dispatch cost
         coalesce_batches=max(4, args.shards),
         coalesce_target=stream.batch_size,
+        dedup=args.ingest_dedup,
         backend=_backend_arg(args.runtime_backend, args.publish_mode),
     )
     handles = attach_shards(runtime, tenant, restore=args.restore)
@@ -489,6 +502,10 @@ def sharded_main(args) -> None:
 
 def main() -> None:
     args = parse_args()
+    if args.no_donate:
+        # must land before any SnapshotBuffer is built (tenant open);
+        # runtime/backend.py forwards it to spawned/remote workers too
+        os.environ["REPRO_DONATE"] = "0"
     dumper = None
     if args.metrics_json:
         from repro.obs import MetricsJsonDumper

@@ -20,6 +20,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import time
 
 import numpy as np
@@ -78,6 +79,7 @@ def runtime_main(args) -> None:
     runtime = Runtime(publish_policy="drain:0", reservoir_k=0,
                       checkpoint_dir=args.ckpt_dir or None,
                       checkpoint_every=args.steps_per_ckpt,
+                      dedup=args.ingest_dedup,
                       backend=_backend_arg(args.runtime_backend,
                                            args.publish_mode))
     restore = bool(args.resume and args.ckpt_dir)
@@ -169,6 +171,14 @@ def main() -> None:
     ap.add_argument("--steps-per-ckpt", type=int, default=16)
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--eval-queries", type=int, default=10_000)
+    ap.add_argument("--ingest-dedup", action="store_true",
+                    help="runtime backends only: pre-aggregate duplicate "
+                         "(src, dst) rows on the host before each coalesced "
+                         "ingest dispatch (bit-exact — counters are linear)")
+    ap.add_argument("--no-donate", action="store_true",
+                    help="disable jit buffer donation in the ingest path "
+                         "(sets REPRO_DONATE=0 for this process and its "
+                         "workers; A/B and debugging aid)")
     ap.add_argument("--runtime-backend", default="inline",
                     help="inline: this loop ingests directly (default). "
                          "thread/process/socket[:HOST:PORT,...]: drive "
@@ -214,6 +224,14 @@ def main() -> None:
             and not args.runtime_backend.startswith("socket:"):
         ap.error(f"--runtime-backend must be one of {valid} or "
                  f"socket:HOST:PORT[,...], got {args.runtime_backend!r}")
+    if args.ingest_dedup and args.runtime_backend == "inline" \
+            and not args.listen:
+        ap.error("--ingest-dedup requires a runtime backend "
+                 "(--runtime-backend thread/process/socket)")
+    if args.no_donate:
+        # must land before any SnapshotBuffer is built; the runtime
+        # backends forward it to spawned/remote workers via the child spec
+        os.environ["REPRO_DONATE"] = "0"
     dumper = None
     if args.metrics_json:
         from repro.obs import MetricsJsonDumper

@@ -68,7 +68,7 @@ class SocketWorker:
                  coalesce_target=8192, queue_capacity=64, warm_shapes=True,
                  child_env=None, ctx=None, connect_timeout_s=300.0,
                  frame_deadline_s=120.0, auth_token=None,
-                 publish_mode="delta") -> None:
+                 publish_mode="delta", dedup=False) -> None:
         import jax
 
         self.tenant = tenant
@@ -92,7 +92,7 @@ class SocketWorker:
             poll_s=poll_s, coalesce_batches=coalesce_batches,
             coalesce_target=coalesce_target, queue_capacity=queue_capacity,
             warm_shapes=warm_shapes, env=dict(child_env or {}),
-            publish_mode=publish_mode)
+            publish_mode=publish_mode, dedup=dedup)
         self._spec = build_child_spec(tenant, policy, reservoir=reservoir,
                                       **self._spec_kwargs)
         self.auth_token = wire.resolve_auth_token(auth_token)
@@ -686,7 +686,7 @@ class SocketBackend(ExecutionBackend):
     def make_worker(self, tenant, queue, policy, *, reservoir=None,
                     checkpoint_dir=None, checkpoint_every=0, on_publish=None,
                     poll_s=0.05, coalesce_batches=1, coalesce_target=8192,
-                    queue_capacity=64):
+                    queue_capacity=64, dedup=False):
         address = None
         if self.addresses is not None:
             address = self.addresses[self._next_addr % len(self.addresses)]
@@ -700,7 +700,8 @@ class SocketBackend(ExecutionBackend):
             warm_shapes=self.warm_shapes, child_env=self.child_env,
             ctx=self._ctx, connect_timeout_s=self.connect_timeout_s,
             frame_deadline_s=self.frame_deadline_s,
-            auth_token=self.auth_token, publish_mode=self.publish_mode)
+            auth_token=self.auth_token, publish_mode=self.publish_mode,
+            dedup=dedup)
         self._workers.append(worker)
         return worker
 

@@ -109,7 +109,8 @@ class ExecutionBackend:
                     reservoir=None, checkpoint_dir: str | None = None,
                     checkpoint_every: int = 0, on_publish=None,
                     poll_s: float = 0.05, coalesce_batches: int = 1,
-                    coalesce_target: int = 8192, queue_capacity: int = 64):
+                    coalesce_target: int = 8192, queue_capacity: int = 64,
+                    dedup: bool = False):
         raise NotImplementedError
 
     def shutdown(self) -> None:
@@ -131,7 +132,7 @@ class ThreadBackend(ExecutionBackend):
     def make_worker(self, tenant, queue, policy, *, reservoir=None,
                     checkpoint_dir=None, checkpoint_every=0, on_publish=None,
                     poll_s=0.05, coalesce_batches=1, coalesce_target=8192,
-                    queue_capacity=64):
+                    queue_capacity=64, dedup=False):
         from repro.runtime.policies import make_policy
 
         return IngestWorker(
@@ -139,7 +140,7 @@ class ThreadBackend(ExecutionBackend):
             checkpoint_dir=checkpoint_dir, checkpoint_every=checkpoint_every,
             on_publish=on_publish, poll_s=poll_s,
             coalesce_batches=coalesce_batches,
-            coalesce_target=coalesce_target)
+            coalesce_target=coalesce_target, dedup=dedup)
 
 
 def resolve_backend(spec) -> ExecutionBackend:
@@ -185,6 +186,10 @@ class _ChildSpec:  # wire-type
     # publish and after any resync request).  "full": every publish ships
     # the whole front — the pre-v3 behaviour, kept for A/B benching.
     publish_mode: str = "delta"
+    # exact duplicate-edge pre-aggregation in the child's coalescing path
+    # (ISSUE 10); default off so specs pickled by older parents replay
+    # unchanged (readers use getattr for the same reason)
+    dedup: bool = False
 
 
 def _tree_leaves_np(tree) -> list:
@@ -219,7 +224,7 @@ def build_child_spec(tenant, policy, *, reservoir=None, checkpoint_dir=None,
                      checkpoint_every=0, poll_s=0.05, coalesce_batches=1,
                      coalesce_target=8192, queue_capacity=64,
                      warm_shapes=True, env=None,
-                     publish_mode="delta") -> _ChildSpec:
+                     publish_mode="delta", dedup=False) -> _ChildSpec:
     """Snapshot everything a remote worker needs into a picklable spec.
 
     Shared by the process backend (ships it via ``Process`` args) and the
@@ -252,13 +257,20 @@ def build_child_spec(tenant, policy, *, reservoir=None, checkpoint_dir=None,
     if publish_mode not in ("delta", "full"):
         raise ValueError(
             f"publish_mode must be 'delta' or 'full', got {publish_mode!r}")
+    env = dict(env or {})
+    # the child must rebuild its buffer with the SAME donation setting as
+    # the parent: spec.env lands before the child imports jax, and it also
+    # reaches remote socket hosts whose environment the parent's does not
+    # (spawn children merely inherit os.environ, which covers the local
+    # case but not `stream_ingest --listen` on another box)
+    env.setdefault("REPRO_DONATE", "1" if tenant.buffer.donate else "0")
     return _ChildSpec(
         origin=origin, policy=policy, init=init, reservoir=res,
         checkpoint_dir=checkpoint_dir, checkpoint_every=checkpoint_every,
         poll_s=poll_s, coalesce_batches=coalesce_batches,
         coalesce_target=coalesce_target, queue_capacity=queue_capacity,
-        warm_shapes=warm_shapes, env=dict(env or {}),
-        publish_mode=publish_mode)
+        warm_shapes=warm_shapes, env=env,
+        publish_mode=publish_mode, dedup=bool(dedup))
 
 
 def run_ingest_worker(spec: _ChildSpec, recv, send) -> str:
@@ -326,7 +338,8 @@ def run_ingest_worker(spec: _ChildSpec, recv, send) -> str:
             reservoir=reservoir, checkpoint_dir=spec.checkpoint_dir,
             checkpoint_every=spec.checkpoint_every, poll_s=spec.poll_s,
             coalesce_batches=spec.coalesce_batches,
-            coalesce_target=spec.coalesce_target)
+            coalesce_target=spec.coalesce_target,
+            dedup=getattr(spec, "dedup", False))
 
         def ship(snap):  # runs in the worker thread, post-publish
             payload = {
@@ -570,7 +583,7 @@ class ProcessWorker:
                  on_publish=None, poll_s=0.05, coalesce_batches=1,
                  coalesce_target=8192, queue_capacity=64,
                  warm_shapes=True, child_env=None, ctx=None,
-                 publish_mode="delta") -> None:
+                 publish_mode="delta", dedup=False) -> None:
         import jax
 
         self.tenant = tenant
@@ -593,7 +606,7 @@ class ProcessWorker:
             poll_s=poll_s, coalesce_batches=coalesce_batches,
             coalesce_target=coalesce_target, queue_capacity=queue_capacity,
             warm_shapes=warm_shapes, env=child_env,
-            publish_mode=publish_mode)
+            publish_mode=publish_mode, dedup=dedup)
         ctx = ctx or multiprocessing.get_context("spawn")
         # small transit pipe: backpressure cascades child -> pipe ->
         # parent queue -> pump, so the parent queue's policy stays the
@@ -907,7 +920,7 @@ class ProcessBackend(ExecutionBackend):
     def make_worker(self, tenant, queue, policy, *, reservoir=None,
                     checkpoint_dir=None, checkpoint_every=0, on_publish=None,
                     poll_s=0.05, coalesce_batches=1, coalesce_target=8192,
-                    queue_capacity=64):
+                    queue_capacity=64, dedup=False):
         return ProcessWorker(
             tenant, queue, policy, reservoir=reservoir,
             checkpoint_dir=checkpoint_dir, checkpoint_every=checkpoint_every,
@@ -915,4 +928,4 @@ class ProcessBackend(ExecutionBackend):
             coalesce_batches=coalesce_batches,
             coalesce_target=coalesce_target, queue_capacity=queue_capacity,
             warm_shapes=self.warm_shapes, child_env=self.child_env,
-            ctx=self._ctx, publish_mode=self.publish_mode)
+            ctx=self._ctx, publish_mode=self.publish_mode, dedup=dedup)

@@ -73,6 +73,11 @@ class WorkerMetrics:
     publish_latency_sum_s: float = 0.0  # guarded-by: _lock
     checkpoints: int = 0  # guarded-by: _lock
     last_checkpoint_at: float = 0.0  # guarded-by: _lock
+    # duplicate-edge pre-aggregation (worker dedup path): raw weight!=0 rows
+    # seen vs unique (src, dst) rows actually dispatched — their ratio is
+    # the scatter-row compression the fast path wins on skewed streams
+    dedup_raw_rows: int = 0  # guarded-by: _lock
+    dedup_unique_rows: int = 0  # guarded-by: _lock
 
     def __post_init__(self) -> None:
         self._lock = threading.Lock()
@@ -82,6 +87,8 @@ class WorkerMetrics:
         self._hub_batch_hist = None
         self._hub_publishes = None
         self._hub_publish_hist = None
+        self._hub_dedup_raw = None
+        self._hub_dedup_unique = None
 
     def bind_hub(self, tenant_id: str, backend: str = "") -> None:
         """Mirror this worker's counters into typed hub instruments
@@ -103,6 +110,13 @@ class WorkerMetrics:
             "repro_publish_total", "snapshot publishes", **labels)
         self._hub_publish_hist = hub.histogram(
             "repro_publish_latency_seconds", "publish latency", **labels)
+        self._hub_dedup_raw = hub.counter(
+            "repro_ingest_dedup_raw_rows_total",
+            "raw weight!=0 rows entering pre-aggregation", **labels)
+        self._hub_dedup_unique = hub.counter(
+            "repro_ingest_dedup_unique_rows_total",
+            "unique (src,dst) rows dispatched after pre-aggregation",
+            **labels)
 
     def note_started(self, now: float) -> None:
         with self._lock:
@@ -134,6 +148,14 @@ class WorkerMetrics:
         if self._hub_publishes is not None:
             self._hub_publishes.inc()
             self._hub_publish_hist.observe(latency_s)
+
+    def note_dedup(self, raw_rows: int, unique_rows: int) -> None:
+        with self._lock:
+            self.dedup_raw_rows += raw_rows
+            self.dedup_unique_rows += unique_rows
+        if self._hub_dedup_raw is not None:
+            self._hub_dedup_raw.inc(raw_rows)
+            self._hub_dedup_unique.inc(unique_rows)
 
     def note_checkpoint(self, now: float) -> None:
         with self._lock:
@@ -186,6 +208,13 @@ class WorkerMetrics:
                     self.publish_latency_sum_s / self.publishes * 1e3, 3)
                 if self.publishes else 0.0,
                 "checkpoints": self.checkpoints,
+                # pre-aggregation compression: raw/unique ≥ 1 once the
+                # dedup path is on; 0/0 (ratio None) when it is off
+                "dedup_raw_rows": self.dedup_raw_rows,
+                "dedup_unique_rows": self.dedup_unique_rows,
+                "dedup_ratio": round(
+                    self.dedup_raw_rows / self.dedup_unique_rows, 4)
+                if self.dedup_unique_rows else None,
                 # accel-backend scatter-fallback volume (0 on the flat
                 # backend): a rising rate means per-partition dispatch
                 # capacity is being outgrown and ingest is silently paying

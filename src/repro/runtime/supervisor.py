@@ -139,6 +139,7 @@ class Runtime:
                  spill_dir: str | None = None, poll_s: float = 0.02,
                  coalesce_batches: int = 1,
                  coalesce_target: int = 8192,
+                 dedup: bool = False,
                  backend: str = "thread") -> None:
         # execution backend: where workers run ("thread" | "process" |
         # "socket[:HOST:PORT,...]" | an ExecutionBackend instance) —
@@ -156,6 +157,10 @@ class Runtime:
         # ingest coalescing under backlog (see IngestWorker); 1 = off
         self.coalesce_batches = coalesce_batches
         self.coalesce_target = coalesce_target
+        # exact duplicate-edge pre-aggregation before dispatch (bit-exact
+        # by counter linearity — see worker.preaggregate_edges); off by
+        # default so existing ingest behaviour is unchanged
+        self.dedup = bool(dedup)
         self._handles: dict[str, TenantRuntime] = {}
         self._started = False
         self._lock = threading.Lock()
@@ -233,7 +238,7 @@ class Runtime:
             checkpoint_every=self.checkpoint_every, on_publish=on_publish,
             poll_s=self.poll_s, coalesce_batches=self.coalesce_batches,
             coalesce_target=self.coalesce_target,
-            queue_capacity=self.queue_capacity)
+            queue_capacity=self.queue_capacity, dedup=self.dedup)
         pump_thread = (StreamPump(tenant.stream, queue,
                                   start_offset=tenant.offset,
                                   max_batches=max_batches,

@@ -31,6 +31,7 @@ import threading
 import time
 import traceback
 
+import jax
 import numpy as np
 
 from repro.checkpoint import store
@@ -49,6 +50,58 @@ STOPPED = "stopped"
 FAILED = "failed"
 
 
+def _item_nbytes(item: QueueItem) -> int:
+    """Host bytes one queued item contributes to a coalesced dispatch,
+    from the ACTUAL column dtypes (v3 columnar frames carry dtype tags, so
+    externally submitted wide-weight columns really can arrive as int64;
+    the old hardcoded 12 B/edge under-counted them ~2x)."""
+    return item.src.shape[0] * (item.src.dtype.itemsize
+                                + item.dst.dtype.itemsize
+                                + item.weight.dtype.itemsize)
+
+
+def preaggregate_edges(src: np.ndarray, dst: np.ndarray,
+                       weight: np.ndarray):
+    """Exact (src, dst) duplicate-edge pre-aggregation for linear sketches.
+
+    Returns ``(usrc, udst, uweight)`` int32 arrays with one row per
+    distinct (src, dst) pair, weights summed, zero-sum rows dropped.
+
+    Bit-exactness argument (gated by the BENCH_ingest A/B cells): sketch
+    counters are linear — every update is ``cell += weight`` — and int32
+    addition modulo 2^32 is commutative and associative, so scattering one
+    summed row is bit-identical to scattering each duplicate in turn.  The
+    group sum runs in int64 and truncates back to int32, which equals the
+    sequential wrap-add chain mod 2^32.  Negative weights (turnstile
+    deletions) ride along unchanged; weight-0 rows are padding by the
+    EdgeBatch contract and are dropped (adding zero is a no-op), including
+    groups whose weights cancel to exactly zero.
+    """
+    s = np.ascontiguousarray(src, np.int32)
+    d = np.ascontiguousarray(dst, np.int32)
+    w = np.ascontiguousarray(weight, np.int32)
+    live = w != 0
+    if not live.all():
+        s, d, w = s[live], d[live], w[live]
+    if s.size == 0:
+        z = np.zeros(0, np.int32)
+        return z, z, z
+    # pack (src, dst) into one uint64 key: sort once, group once
+    key = (s.view(np.uint32).astype(np.uint64) << np.uint64(32)) \
+        | d.view(np.uint32).astype(np.uint64)
+    order = np.argsort(key, kind="stable")
+    ks = key[order]
+    ws = w[order].astype(np.int64)
+    starts = np.flatnonzero(np.concatenate(([True], ks[1:] != ks[:-1])))
+    sums = np.add.reduceat(ws, starts)
+    uw = sums.astype(np.int32)  # int64 -> int32 truncation == wrap-add chain
+    keep = uw != 0
+    uk = ks[starts][keep]
+    usrc = (uk >> np.uint64(32)).astype(np.uint32).view(np.int32)
+    udst = uk.astype(np.uint32).view(np.int32)
+    return usrc, udst, uw[keep]
+
+
 class IngestWorker(threading.Thread):
     def __init__(self, tenant, queue: BoundedEdgeQueue,
                  policy: PublishPolicy, *,
@@ -58,7 +111,8 @@ class IngestWorker(threading.Thread):
                  on_publish=None,
                  poll_s: float = 0.05,
                  coalesce_batches: int = 1,
-                 coalesce_target: int = 8192) -> None:
+                 coalesce_target: int = 8192,
+                 dedup: bool = False) -> None:
         super().__init__(name=f"ingest-{tenant.key.tenant_id}", daemon=True)
         self.tenant = tenant
         self.queue = queue
@@ -78,12 +132,34 @@ class IngestWorker(threading.Thread):
         # behaviour exactly.
         self.coalesce_batches = max(1, coalesce_batches)
         self.coalesce_target = coalesce_target
-        # Dispatch-size byte cap: 3 int32 output columns ⇒ 12 bytes/edge.
-        # A deep backlog (spill drain, drop_oldest churn) must not build an
-        # unbounded coalesced batch; an item that would push the group past
-        # the cap is HELD and leads the next group instead.
+        # Exact duplicate-edge pre-aggregation (ISSUE 10): sort/unique each
+        # group on (src, dst) and sum weights before dispatch.  Bit-exact by
+        # counter linearity (see preaggregate_edges); on skewed streams it
+        # collapses heavy-hitter repeats into single scatter rows.  The
+        # pending ledger then takes the HOST count of raw weight>0 updates
+        # (QueueItem.n_edges, precomputed at enqueue) because the deduped
+        # device batch no longer carries one row per stream update.
+        self.dedup = bool(dedup)
+        # Dispatch-size byte cap, expressed as coalesce_target edges at the
+        # canonical 3×int32 = 12 B/edge layout.  Group accounting uses each
+        # item's ACTUAL column dtypes (_item_nbytes) — wide-weight streams
+        # hit the cap proportionally earlier instead of blowing the
+        # dispatch sizing.  A deep backlog (spill drain, drop_oldest churn)
+        # must not build an unbounded coalesced batch; an item that would
+        # push the group past the cap is HELD and leads the next group.
         self._coalesce_byte_cap = 12 * max(1, coalesce_target)
         self._held: QueueItem | None = None
+        # Pipelined dispatch (ISSUE 10): two ping-pong host staging buffer
+        # sets.  EdgeBatch.from_numpy is zero-copy on CPU — the device
+        # batch ALIASES the staging memory — so a slot may only be refilled
+        # once the dispatch that read it has finished executing.  Each
+        # slot's fence is the buffer's dispatch_token captured right after
+        # the dispatch; blocking on the PREVIOUS use of a slot (one and two
+        # dispatches back) lets the worker coalesce group N+1 on the host
+        # while the device still scatters group N.
+        self._stage: list = [None, None]
+        self._stage_fence: list = [None, None]
+        self._stage_idx = 0
         self.metrics = WorkerMetrics()
         self.metrics.bind_hub(tenant.key.tenant_id)
         self._trace = get_trace_log()
@@ -145,18 +221,20 @@ class IngestWorker(threading.Thread):
                     self.state = DRAINING
                 items = [item]
                 total = item.src.shape[0]
+                group_bytes = _item_nbytes(item)
                 while (len(items) < self.coalesce_batches
                        and total < self.coalesce_target):
                     nxt = self.queue.get(timeout=0)  # opportunistic, no wait
                     if nxt is None:
                         break
-                    if 12 * (total + nxt.src.shape[0]) \
+                    if group_bytes + _item_nbytes(nxt) \
                             > self._coalesce_byte_cap:
                         self._held = nxt  # caps the dispatch; never dropped
                         break
                     items.append(nxt)
                     total += nxt.src.shape[0]
-                if len(items) == 1:
+                    group_bytes += _item_nbytes(nxt)
+                if len(items) == 1 and not self.dedup:
                     self._ingest(item, now)
                 else:
                     self._ingest_coalesced(items, now)
@@ -214,40 +292,100 @@ class IngestWorker(threading.Thread):
         self.metrics.note_ingest(item.n_edges, now)
         self._batches_since_checkpoint += 1
 
+    def _claim_stage(self, bucket: int):
+        """Borrow a host staging column set of ≥ ``bucket`` rows (ping-pong).
+
+        The device batch built over a staging set ALIASES its memory
+        (zero-copy ``jnp.asarray`` on CPU), so a slot is only safe to
+        refill after the dispatch that read it finished executing — the
+        fence captured by ``_fence_stage``.  Alternating two slots lets
+        group N+1 coalesce on the host while the device scatters group N;
+        the block here only bites when the device falls a full two
+        dispatches behind the host.
+        """
+        slot = self._stage_idx
+        self._stage_idx ^= 1
+        fence = self._stage_fence[slot]
+        if fence is not None:
+            jax.block_until_ready(fence)
+            self._stage_fence[slot] = None
+        bufs = self._stage[slot]
+        if bufs is None or bufs[0].shape[0] < bucket:
+            bufs = (np.zeros(bucket, np.int32), np.zeros(bucket, np.int32),
+                    np.zeros(bucket, np.int32))
+            self._stage[slot] = bufs
+        return slot, bufs
+
+    def _fence_stage(self, slot: int) -> None:
+        token = getattr(self.tenant.buffer, "dispatch_token", None)
+        if token is not None:
+            self._stage_fence[slot] = token()
+        else:
+            # no completion fence available: never reuse this staging set
+            self._stage[slot] = None
+
     def _ingest_coalesced(self, items: list[QueueItem], now: float) -> None:
         """Fold several queued items into ONE buffer ingest dispatch.
 
         Exactness is unaffected: sketch deltas are additive and order-free,
-        the reservoir still sees items in FIFO order, and the whole group
-        lands in the delta atomically under the state lock, so the offset
-        cursor can jump straight to the newest seekable batch (FIFO ⇒ the
-        last item is the newest) without ever describing a state the
-        counters do not hold.  Padded to a coarse ladder
+        the reservoir still sees items in FIFO order (raw, pre-dedup), and
+        the whole group lands in the delta atomically under the state lock,
+        so the offset cursor can jump straight to the newest seekable batch
+        (FIFO ⇒ the last item is the newest) without ever describing a
+        state the counters do not hold.  Padded to a coarse ladder
         (``coalesce_target/4`` granule) so coalesced shapes stay few.
+
+        With ``dedup`` on, the group is pre-aggregated on (src, dst) first
+        (bit-exact — see ``preaggregate_edges``) and the pending ledger
+        takes the host-side raw weight>0 count instead of the device count.
         """
-        n = sum(it.src.shape[0] for it in items)
+        n_raw = sum(it.src.shape[0] for it in items)
+        count = None
+        if self.dedup:
+            if len(items) == 1:
+                rs, rd, rw = items[0].src, items[0].dst, items[0].weight
+            else:
+                rs = np.concatenate([np.asarray(it.src) for it in items])
+                rd = np.concatenate([np.asarray(it.dst) for it in items])
+                rw = np.concatenate([np.asarray(it.weight) for it in items])
+            raw_live = int(np.count_nonzero(np.asarray(rw)))
+            usrc, udst, uw = preaggregate_edges(rs, rd, rw)
+            n = usrc.shape[0]
+            count = sum(it.n_edges for it in items)
+        else:
+            n = n_raw
         granule = max(256, self.coalesce_target // 4)
         bucket = max(granule, -(-n // granule) * granule)
-        # one pre-sized int32 buffer per column, filled by slicing: the
-        # old concatenate → pad → cast chain copied every column three
-        # times; here the slice assignment does the cast AND the copy,
-        # and the zero tail IS the weight-0 padding pad_to produced
-        src = np.zeros(bucket, np.int32)
-        dst = np.zeros(bucket, np.int32)
-        weight = np.zeros(bucket, np.int32)
-        pos = 0
-        for it in items:
-            end = pos + it.src.shape[0]
-            src[pos:end] = it.src
-            dst[pos:end] = it.dst
-            weight[pos:end] = it.weight
-            pos = end
-        batch = EdgeBatch.from_numpy(src, dst, weight)
+        # pre-sized int32 staging per column, filled by slicing: the slice
+        # assignment does the cast AND the copy, and the zero tail IS the
+        # weight-0 padding pad_to produced
+        slot, (src, dst, weight) = self._claim_stage(bucket)
+        if self.dedup:
+            src[:n] = usrc
+            dst[:n] = udst
+            weight[:n] = uw
+        else:
+            pos = 0
+            for it in items:
+                end = pos + it.src.shape[0]
+                src[pos:end] = it.src
+                dst[pos:end] = it.dst
+                weight[pos:end] = it.weight
+                pos = end
+        src[n:bucket] = 0
+        dst[n:bucket] = 0
+        weight[n:bucket] = 0
+        batch = EdgeBatch.from_numpy(src[:bucket], dst[:bucket],
+                                     weight[:bucket])
         for it in items:
             self._note_dispatch(it)
         with self._state_lock:
             with profile_span("ingest"):
-                self.tenant.buffer.ingest(batch)
+                if count is None:
+                    self.tenant.buffer.ingest(batch)
+                else:
+                    self.tenant.buffer.ingest(batch, count=count)
+            self._fence_stage(slot)
             if self.reservoir is not None:
                 for it in items:
                     self.reservoir.offer_batch(it.src, it.dst, it.weight)
@@ -257,6 +395,8 @@ class IngestWorker(threading.Thread):
                 self.tenant.offset = offsets[-1] + 1
         for it in items:
             self.metrics.note_ingest(it.n_edges, now)
+        if self.dedup:
+            self.metrics.note_dedup(raw_live, n)
         self._batches_since_checkpoint += len(items)
 
     def _should_publish(self, now: float) -> bool:

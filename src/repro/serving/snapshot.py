@@ -16,12 +16,25 @@ accumulated), bumps the epoch, and resets the delta to zeros.  Readers of the
 previous epoch keep their reference and stay consistent; the epoch number is
 the cache key for everything derived from a snapshot (notably the boolean
 closure matrices cached by the query engine).
+
+Ingest fast path (DESIGN.md §Ingest-fast-path): with ``REPRO_DONATE`` on
+(the default) and a ``DONATION_SAFE`` sketch module, the ingest/publish
+kernels donate the delta pytree to XLA, which updates the counter buffers
+in place instead of round-tripping a fresh depth×budget pytree per
+dispatch.  The front is NEVER donated — published snapshots stay immutable
+and isolation still costs zero copies.  Donation's one hazard is
+use-after-donate (reading a reference that the kernel consumed); every
+such path here resolves values under ``_lock`` before the next dispatch
+can donate them, ``state()`` hands out private copies, and the
+``use-after-donate`` rule in ``repro.analysis`` lints the discipline.
 """
 from __future__ import annotations
 
 import dataclasses
 import itertools
+import os
 import threading
+from collections import namedtuple
 from typing import Any
 
 import jax
@@ -63,40 +76,115 @@ class StaleDelta(RuntimeError):
 
 _anon_ids = itertools.count()
 
-# One jitted (ingest, publish) kernel pair per sketch MODULE, shared by
-# every buffer of that module.  jax.jit caches compilations per wrapped
-# callable: a per-buffer lambda would recompile the identical graph once
-# per tenant — K shards of one tenant (serving/sharding.py) share a layout,
-# so per-buffer caches would pay K compiles for one graph and the sharded
-# ingest wall would be mostly XLA compilation.  Distinct layouts/shapes
-# still compile separately (jit keys on shapes + statics), so sharing is
-# always safe.
+
+def donation_enabled() -> bool:
+    """The ``REPRO_DONATE`` kill-switch (default ON).
+
+    Donation makes each ingest dispatch mutate the delta's device buffers in
+    place instead of allocating a fresh depth×budget counter pytree per
+    batch.  ``REPRO_DONATE=0`` (or ``false``/``off``) restores the copying
+    kernels for debugging — bit-identical counters either way, gated by the
+    kill-switch parity test and the A/B cells in ``BENCH_ingest.json``.
+    """
+    return os.environ.get("REPRO_DONATE", "1").strip().lower() \
+        not in ("0", "false", "off")
+
+
+# One jitted kernel kit per (sketch MODULE, donate) pair, shared by every
+# buffer of that module.  jax.jit caches compilations per wrapped callable:
+# a per-buffer lambda would recompile the identical graph once per tenant —
+# K shards of one tenant (serving/sharding.py) share a layout, so per-buffer
+# caches would pay K compiles for one graph and the sharded ingest wall
+# would be mostly XLA compilation.  Distinct layouts/shapes still compile
+# separately (jit keys on shapes + statics), so sharing is always safe.
+#
+#   ingest          (sk, batch, pending)      counts weight>0 on device
+#   ingest_counted  (sk, batch, inc, pending) host-supplied count — the
+#                   dedup path pre-aggregates (src, dst) rows on the host,
+#                   so the device batch no longer carries one row per
+#                   stream update and the weight>0 count must come from
+#                   the raw items instead
+#   publish         (front, delta) -> (merged, zeroed delta)
+#   publish_keep    same graph, NEVER donates — for adopt_published (the
+#                   incoming delta aliases wire/decoded buffers the caller
+#                   still owns) and capture_publish_delta (the stashed
+#                   pre-merge reference must outlive the call)
+#
+# When donating, only the sketch argument is donated — never ``pending``.
+# The pending scalar is a fresh 4/8-byte output per dispatch, and holding
+# its reference gives callers a completion fence: it becomes ready exactly
+# when that dispatch finished executing (SnapshotBuffer.dispatch_token).
+_KernelKit = namedtuple(
+    "_KernelKit", ["ingest", "ingest_counted", "publish", "publish_keep"])
 _KERNELS: dict = {}
 
 
-def _shared_kernels(mod):
-    pair = _KERNELS.get(mod)
-    if pair is None:
-        jit_ingest = jax.jit(
-            lambda sk, batch, pending: (
-                mod.ingest(sk, batch),
-                pending + jnp.sum((batch.weight > 0).astype(pending.dtype))))
+def _shared_kernels(mod, donate: bool) -> "_KernelKit":
+    key = (mod, bool(donate))
+    kit = _KERNELS.get(key)
+    if kit is None:
+        def _ingest(sk, batch, pending):
+            return (mod.ingest(sk, batch),
+                    pending + jnp.sum((batch.weight > 0).astype(pending.dtype)))
+
+        def _ingest_counted(sk, batch, inc, pending):
+            return mod.ingest(sk, batch), pending + inc
+
         # One fused publish kernel: fold delta into front, zero the delta.
         # Safe to jit (which skips merge's hash-family check): the delta is
         # empty_like(front) by construction, so the families always match.
-        jit_publish = jax.jit(
-            lambda front, delta: (mod.merge(front, delta),
-                                  mod.empty_like(delta)))
-        pair = _KERNELS[mod] = (jit_ingest, jit_publish)
-    return pair
+        def _publish(front, delta):
+            return mod.merge(front, delta), mod.empty_like(delta)
+
+        if donate:
+            kit = _KernelKit(
+                ingest=jax.jit(_ingest, donate_argnums=(0,)),
+                ingest_counted=jax.jit(_ingest_counted, donate_argnums=(0,)),
+                publish=jax.jit(_publish, donate_argnums=(1,)),
+                # reuse the non-donating kit's publish so the keep variant
+                # compiles once per module, not once per (module, donate)
+                publish_keep=_shared_kernels(mod, False).publish,
+            )
+        else:
+            jit_publish = jax.jit(_publish)
+            kit = _KernelKit(
+                ingest=jax.jit(_ingest),
+                ingest_counted=jax.jit(_ingest_counted),
+                publish=jit_publish,
+                publish_keep=jit_publish,
+            )
+        _KERNELS[key] = kit
+    return kit
+
+
+def _private_copy(tree):
+    """Deep-copy every leaf so the result shares no device buffer (and no
+    Array object) with ``tree``.  Required before a pytree may be donated:
+    ``empty_like``/checkpoint templates can alias hash-family or routing
+    leaves with the front sketch by reference, and donating a shared leaf
+    would delete it out from under every other holder."""
+    return jax.tree_util.tree_map(lambda x: jnp.array(x, copy=True), tree)
 
 
 class SnapshotBuffer:
     """Double buffer: live delta sketch (ingest side) + published Snapshot."""
 
     def __init__(self, sketch: Any, mod: Any, *, tenant_id: str | None = None,
-                 kind: str = "") -> None:
+                 kind: str = "", donate: bool | None = None) -> None:
         self._mod = mod
+        # Buffer donation (ISSUE 10): when on, the jitted ingest/publish
+        # kernels donate the delta pytree so XLA scatters into the existing
+        # device buffers instead of allocating a fresh counter pytree per
+        # dispatch.  Requires the sketch module to declare alias-safety
+        # (DONATION_SAFE) — its kernels must never need a donated leaf after
+        # the call — and honours the REPRO_DONATE kill-switch.  After every
+        # donating call the old delta/pending references are DEAD (reading
+        # them raises "Array has been deleted"); every read path below
+        # therefore resolves values inside _lock and state() hands out
+        # private copies.  The use-after-donate analysis rule lints this
+        # contract statically.
+        env_donate = donation_enabled() if donate is None else bool(donate)
+        self.donate = env_donate and bool(getattr(mod, "DONATION_SAFE", False))
         # tenant_id keys every per-(tenant, epoch) cache downstream (notably
         # the engine's closure cache).  Two buffers must never share an id:
         # same-named tenants from differently-configured registries reach
@@ -108,11 +196,16 @@ class SnapshotBuffer:
         self._front = Snapshot(self._tenant_id, 0, sketch,  # guarded-by(writes): _lock
                                self._kind, 0)
         self._delta = mod.empty_like(sketch)  # guarded-by: _lock
+        if self.donate:
+            # empty_like may reuse hash-family/routing leaves of `sketch`
+            # by reference; the delta is about to be donated every dispatch,
+            # so it must own every one of its buffers outright
+            self._delta = _private_copy(self._delta)
         # device-side counter: avoids a host sync per ingest batch; folded
         # into the ingest kernel so each batch is ONE dispatch
         self._pending = jnp.zeros((), jnp.int64 if jax.config.x64_enabled  # guarded-by: _lock
                                   else jnp.int32)
-        self._jit_ingest, self._jit_publish = _shared_kernels(mod)
+        self._kernels = _shared_kernels(mod, self.donate)
         # Delta-publication support (runtime/backend.py): with the flag on,
         # each publish() stashes the pre-merge delta pytree (an immutable
         # reference — zero copies) so a remote worker can ship ONLY what
@@ -136,30 +229,62 @@ class SnapshotBuffer:
     @property
     def pending_edges(self) -> int:
         """Non-padding updates sitting in the delta (host sync; diagnostics
-        and conservation accounting only — not the ingest hot path)."""
+        and conservation accounting only — not the ingest hot path).
+
+        The device_get happens INSIDE the lock: with donation on, a
+        reference captured under the lock can be donated (and deleted) by a
+        concurrent ingest the instant the lock is released."""
         with self._lock:
-            pending = self._pending
-        return int(jax.device_get(pending))
+            return int(jax.device_get(self._pending))
 
     @property
     def overflow_edges(self) -> int:
         """Ingest updates that took the accel backend's scatter-fallback
         (per-partition capacity exceeded), front + live delta.  0 for
         layouts without overflow accounting.  Host sync; diagnostics only —
-        surfaced through runtime metrics and the serve bench."""
+        surfaced through runtime metrics and the serve bench.  Delta leaf
+        resolved inside the lock — see ``pending_edges``."""
         with self._lock:
             front = getattr(self._front.sketch, "overflow", None)
             delta = getattr(self._delta, "overflow", None)
+            delta_total = (int(jax.device_get(delta))
+                           if delta is not None else 0)
         if front is None:
             return 0
-        total = int(jax.device_get(front))
-        return total + (int(jax.device_get(delta)) if delta is not None else 0)
+        return int(jax.device_get(front)) + delta_total
 
-    def ingest(self, batch: EdgeBatch) -> None:
-        """Absorb a batch into the back buffer; published readers unaffected."""
+    def ingest(self, batch: EdgeBatch, count: int | None = None) -> None:
+        """Absorb a batch into the back buffer; published readers unaffected.
+
+        ``count`` (optional) is the number of weight>0 updates the batch
+        *represents*.  When the caller pre-aggregated duplicate (src, dst)
+        rows on the host (runtime/worker.py dedup path), the dispatched
+        rows no longer map 1:1 to stream updates, so the device-side
+        weight>0 count would under-report; the host count keeps the pending
+        ledger bit-identical to the un-deduped replay.
+        """
         with self._lock:
-            self._delta, self._pending = self._jit_ingest(
-                self._delta, batch, self._pending)
+            if count is None:
+                self._delta, self._pending = self._kernels.ingest(  # donates: 0
+                    self._delta, batch, self._pending)
+            else:
+                self._delta, self._pending = self._kernels.ingest_counted(  # donates: 0
+                    self._delta, batch, int(count), self._pending)
+
+    def dispatch_token(self):
+        """Opaque completion fence for everything dispatched so far.
+
+        Returns the current pending scalar — a (never-donated) output of
+        the most recent ingest kernel, so ``jax.block_until_ready`` on it
+        returns exactly when that dispatch (and, by device-stream order,
+        every earlier one) has finished executing.  The pipelined worker
+        uses this to know when a zero-copy host staging buffer may be
+        refilled (core/types.EdgeBatch.from_numpy shares memory with its
+        numpy inputs on CPU, so reuse-while-in-flight would corrupt the
+        dispatch).
+        """
+        with self._lock:
+            return self._pending
 
     def publish(self) -> Snapshot:
         """Fold the delta into the front buffer and stamp a new epoch.
@@ -171,9 +296,15 @@ class SnapshotBuffer:
             pending = int(jax.device_get(self._pending))
             if self.capture_publish_delta:
                 # the outgoing delta is exactly what this publish folds in;
-                # the reference stays valid (JAX arrays are immutable)
+                # the reference stays valid (JAX arrays are immutable) —
+                # which is also why this path must take the NEVER-donating
+                # publish kernel: donating the delta here would delete the
+                # stashed reference before the transport ships it
                 self.last_publish_delta = self._delta
-            merged, delta = self._jit_publish(self._front.sketch, self._delta)
+                kern = self._kernels.publish_keep
+            else:
+                kern = self._kernels.publish
+            merged, delta = kern(self._front.sketch, self._delta)  # donates: 1
             self._front = Snapshot(
                 self._tenant_id,
                 self._front.epoch + 1,
@@ -218,7 +349,11 @@ class SnapshotBuffer:
                         f"delta publish for epoch {epoch} is based on epoch "
                         f"{base_epoch}, but the front is at epoch "
                         f"{self._front.epoch}; a full resync is required")
-                sketch, _ = self._jit_publish(self._front.sketch, delta)
+                # publish_keep, never the donating kernel: the incoming
+                # delta's leaves are decoded wire views whose host buffers
+                # the transport still owns — donation would write into them
+                sketch, _ = self._kernels.publish_keep(
+                    self._front.sketch, delta)
             self._front = Snapshot(self._tenant_id, int(epoch),
                                    sketch, self._kind, int(n_edges))
             return self._front
@@ -229,13 +364,21 @@ class SnapshotBuffer:
 
         The returned pytrees are immutable JAX arrays, so the caller can
         serialize them outside the lock (crash-safe checkpointing in
-        ``repro.runtime``).
+        ``repro.runtime``).  The front is always safe to hand out by
+        reference (it is never donated); with donation on, the delta and
+        pending are handed out as PRIVATE COPIES — the live references get
+        donated (deleted) by the very next ingest, which would leave the
+        caller serializing dead buffers.
         """
         with self._lock:
+            delta, pending = self._delta, self._pending
+            if self.donate:
+                delta = _private_copy(delta)
+                pending = jnp.array(pending, copy=True)
             return {
                 "front": self._front.sketch,
-                "delta": self._delta,
-                "pending": self._pending,
+                "delta": delta,
+                "pending": pending,
                 "epoch": self._front.epoch,
                 "n_edges": self._front.n_edges,
             }
@@ -250,7 +393,12 @@ class SnapshotBuffer:
                 self._kind,
                 int(state["n_edges"]),
             )
-            self._delta = jax.tree_util.tree_map(jnp.asarray, state["delta"])
-            self._pending = jnp.asarray(state["pending"],
-                                        dtype=self._pending.dtype)
+            # jnp.asarray is a zero-copy identity on device arrays and can
+            # share memory with host numpy buffers on CPU; a delta about to
+            # be donated must own private buffers, so copy outright
+            restore = _private_copy if self.donate \
+                else (lambda t: jax.tree_util.tree_map(jnp.asarray, t))
+            self._delta = restore(state["delta"])
+            self._pending = jnp.array(state["pending"],
+                                      dtype=self._pending.dtype, copy=True)
             return self._front

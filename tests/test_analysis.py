@@ -16,7 +16,8 @@ from pathlib import Path
 import pytest
 
 from repro.analysis import Project, run_rules
-from repro.analysis import locks, pickle_rules, trace_purity, wire_schema
+from repro.analysis import donation, locks, pickle_rules, trace_purity, \
+    wire_schema
 from repro.analysis import witness as witness_mod
 from repro.analysis.engine import Finding, split_by_baseline
 
@@ -662,3 +663,100 @@ def test_witness_unlocked_publish_guard():
         assert len(w.report()["unlocked_publishes"]) == legal + 1
     finally:
         witness_mod._unguard_publishes()
+
+
+# ================================================= use-after-donate rule
+DONATE_CLEAN = '''
+import jax
+
+def _raw(s, b):
+    return s + b
+
+_step = jax.jit(_raw, donate_argnums=(0,))
+
+def run(s, batches):
+    for b in batches:
+        s = _step(s, b)
+    return s
+
+class Buf:
+    def ingest(self, batch):
+        self._delta, self._pending = self._kernels.ingest(  # donates: 0
+            self._delta, batch, self._pending)
+
+    def peek(self):
+        return self._delta  # no donating call in THIS function: clean
+'''
+
+DONATE_BAD_ASSIGN = '''
+import jax
+
+def _raw(s, b):
+    return s + b
+
+_step = jax.jit(_raw, donate_argnums=(0,))
+
+def run(s, b):
+    s2 = _step(s, b)
+    return s2 + s
+'''
+
+DONATE_BAD_MARKER = '''
+class Buf:
+    def publish(self):
+        merged, delta = self._kernels.publish(  # donates: 1
+            self._front, self._delta)
+        stale = self._delta.table
+        self._delta = delta
+        return merged, stale
+'''
+
+
+def test_use_after_donate_clean_rebinds():
+    p = Project.from_sources({"repro.snap": DONATE_CLEAN})
+    assert donation.check(p) == []
+
+
+def test_use_after_donate_flags_jit_assignment_consumer():
+    p = Project.from_sources({"repro.snap": DONATE_BAD_ASSIGN})
+    got = msgs(donation.check(p))
+    assert len(got) == 1
+    assert "reads `s` after it was donated into `_step`" in got[0]
+
+
+def test_use_after_donate_flags_marked_call_site():
+    """The ``# donates: N`` marker alone makes a call consuming — no jit
+    assignment in sight (kernels hidden behind a kit attribute)."""
+    p = Project.from_sources({"repro.snap": DONATE_BAD_MARKER})
+    got = msgs(donation.check(p))
+    assert len(got) == 1
+    assert "`self._delta`" in got[0]
+    # the rebind two lines later clears it: only ONE finding, at the read
+    f = donation.check(p)[0]
+    assert "stale" in Project.from_sources(
+        {"repro.snap": DONATE_BAD_MARKER}).files["repro.snap"].line(f.line)
+
+
+def test_use_after_donate_store_clears_consumption():
+    src = '''
+import jax
+
+def _raw(s, b):
+    return s + b
+
+_step = jax.jit(_raw, donate_argnums=(0, 1))
+
+def run(s, b, fresh):
+    s = _step(s, b)
+    b = fresh
+    return s + b
+'''
+    p = Project.from_sources({"repro.snap": src})
+    assert donation.check(p) == []
+
+
+def test_use_after_donate_registered_in_gate():
+    assert "use-after-donate" in {name for name, _ in
+                                  __import__("repro.analysis.engine",
+                                             fromlist=["all_rules"])
+                                  .all_rules()}

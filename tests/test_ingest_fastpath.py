@@ -1,0 +1,244 @@
+"""Device-resident ingest fast path (ISSUE 10): buffer donation,
+exact duplicate-edge pre-aggregation, and pipelined dispatch.
+
+The contract under test is *bit-exactness*: every fast-path arm
+(donation on/off x dedup on/off) must publish counters, pending ledgers,
+and estimates identical to the plain path — donation because the kernels
+are alias-safe rewrites, dedup because sketch counters are linear in the
+update stream (int32 wrap-add is associative and commutative).
+"""
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import countmin, kmatrix
+from repro.core.types import EdgeBatch
+from repro.runtime import QueueItem, Runtime
+from repro.runtime.worker import IngestWorker, _item_nbytes, preaggregate_edges
+from repro.serving import SketchRegistry
+from repro.serving.gates import layout_counters_equal
+from repro.serving.snapshot import SnapshotBuffer, donation_enabled
+
+
+def _registry(**kw):
+    kw.setdefault("depth", 3)
+    kw.setdefault("batch_size", 1024)
+    kw.setdefault("scale", 0.02)
+    return SketchRegistry(**kw)
+
+
+def _random_edges(rng, n, n_nodes=200, wrap=False):
+    src = rng.integers(-5, n_nodes, n).astype(np.int32)
+    dst = rng.integers(-5, n_nodes, n).astype(np.int32)
+    if wrap:
+        w = rng.integers(-(2 ** 31), 2 ** 31, n, dtype=np.int64) \
+            .astype(np.int32)
+    else:
+        w = rng.integers(-3, 4, n).astype(np.int32)
+    return src, dst, w
+
+
+def _oracle(src, dst, w):
+    """Wrap-accurate int32 per-(src, dst) sums, zero-weight rows dropped."""
+    acc = {}
+    for s, d, x in zip(src.tolist(), dst.tolist(), w.tolist()):
+        if x == 0:
+            continue
+        k = (s, d)
+        v = (acc.get(k, 0) + x) & 0xFFFFFFFF
+        acc[k] = v
+    out = {k: v - (1 << 32) if v >= (1 << 31) else v
+           for k, v in acc.items()}
+    return {k: v for k, v in out.items() if v != 0}
+
+
+# -------------------------------------------------------- pre-aggregation
+@pytest.mark.parametrize("seed", [0, 1, 2])
+@pytest.mark.parametrize("wrap", [False, True])
+def test_preaggregate_matches_wraparound_oracle(seed, wrap):
+    """Randomized bit-exactness incl. negative weights (turnstile), heavy
+    duplicates, negative node ids, and int32 wrap-add."""
+    rng = np.random.default_rng(seed)
+    src, dst, w = _random_edges(rng, 4096, n_nodes=64, wrap=wrap)
+    us, ud, uw = preaggregate_edges(src, dst, w)
+    got = dict(zip(zip(us.tolist(), ud.tolist()), uw.tolist()))
+    assert got == _oracle(src, dst, w)
+    # unique keys, no zero weights in the output
+    assert len(got) == us.shape[0]
+    assert np.all(uw != 0)
+
+
+def test_preaggregate_drops_cancelled_and_zero_rows():
+    src = np.array([1, 1, 2, 3], np.int32)
+    dst = np.array([9, 9, 8, 7], np.int32)
+    w = np.array([3, -3, 0, 5], np.int32)
+    us, ud, uw = preaggregate_edges(src, dst, w)
+    assert us.tolist() == [3] and ud.tolist() == [7] and uw.tolist() == [5]
+
+
+def test_preaggregated_ingest_is_bit_identical_on_countmin():
+    """Counter linearity, end to end: raw batch vs its pre-aggregate land
+    in identical sketches."""
+    rng = np.random.default_rng(7)
+    src, dst, w = _random_edges(rng, 2048, n_nodes=50)
+    sk_raw = countmin.CountMin.create(bytes_budget=4096, depth=3, seed=1)
+    sk_agg = countmin.CountMin.create(bytes_budget=4096, depth=3, seed=1)
+    sk_raw = countmin.ingest(sk_raw, EdgeBatch.from_numpy(src, dst, w))
+    us, ud, uw = preaggregate_edges(src, dst, w)
+    sk_agg = countmin.ingest(sk_agg, EdgeBatch.from_numpy(us, ud, uw))
+    np.testing.assert_array_equal(np.asarray(sk_raw.table),
+                                  np.asarray(sk_agg.table))
+
+
+# ----------------------------------------------------------- byte ledger
+def test_coalesce_byte_ledger_uses_actual_column_dtypes():
+    """The cap ledger derives bytes from the item's real dtypes — an int64
+    weight column costs 16 B/row, not the int32-era hardcoded 12."""
+    n = 100
+    item32 = QueueItem.from_arrays(
+        0, np.ones(n, np.int32), np.ones(n, np.int32), np.ones(n, np.int32))
+    item64 = QueueItem.from_arrays(
+        1, np.ones(n, np.int32), np.ones(n, np.int32), np.ones(n, np.int64))
+    assert _item_nbytes(item32) == n * 12
+    assert _item_nbytes(item64) == n * 16
+
+
+# ---------------------------------------------------------------- donation
+def _feed(buf, batches):
+    for src, dst, w in batches:
+        buf.ingest(EdgeBatch.from_numpy(src, dst, w))
+
+
+def _batches(seed, k=6, n=512):
+    rng = np.random.default_rng(seed)
+    return [_random_edges(rng, n, n_nodes=100) for _ in range(k)]
+
+
+def test_donation_kill_switch_parity_countmin():
+    """donate=True and donate=False buffers publish bit-identical fronts,
+    pending ledgers, and estimates across multiple publish rounds."""
+    sk = countmin.CountMin.create(bytes_budget=8192, depth=3, seed=2)
+    bufs = {d: SnapshotBuffer(jax.tree_util.tree_map(jnp.array, sk),
+                              countmin, tenant_id="t", donate=d)
+            for d in (False, True)}
+    assert bufs[True].donate or not donation_enabled()
+    batches = _batches(3)
+    for i in range(3):
+        for d, buf in bufs.items():
+            _feed(buf, batches[i * 2:(i + 1) * 2])
+            buf.publish()
+    a, b = bufs[False].snapshot, bufs[True].snapshot
+    assert a.n_edges == b.n_edges and a.epoch == b.epoch
+    assert layout_counters_equal(a.sketch, b.sketch)
+    q = np.arange(64, dtype=np.int32)
+    np.testing.assert_array_equal(
+        np.asarray(countmin.edge_freq(a.sketch, q, q[::-1].copy())),
+        np.asarray(countmin.edge_freq(b.sketch, q, q[::-1].copy())))
+
+
+def test_donation_checkpoint_restore_roundtrip():
+    """state() under donation hands out private copies that survive later
+    donating dispatches, and a buffer restored from it converges to the
+    same front as the uninterrupted one."""
+    sk = countmin.CountMin.create(bytes_budget=8192, depth=3, seed=4)
+    buf = SnapshotBuffer(sk, countmin, tenant_id="t", donate=True)
+    batches = _batches(5, k=4)
+    _feed(buf, batches[:2])
+    state = buf.state()
+    saved_delta = jax.tree_util.tree_map(np.asarray, state["delta"])
+    saved_pending = int(np.asarray(state["pending"]))
+
+    # keep ingesting + publishing on the live buffer: if state() aliased
+    # the live delta, these donations would delete the saved leaves
+    _feed(buf, batches[2:])
+    buf.publish()
+    for a, b in zip(jax.tree_util.tree_leaves(saved_delta),
+                    jax.tree_util.tree_leaves(
+                        jax.tree_util.tree_map(np.asarray, state["delta"]))):
+        np.testing.assert_array_equal(a, b)
+    assert int(np.asarray(state["pending"])) == saved_pending
+
+    sk2 = countmin.CountMin.create(bytes_budget=8192, depth=3, seed=4)
+    buf2 = SnapshotBuffer(sk2, countmin, tenant_id="t", donate=True)
+    buf2.load_state(state)
+    _feed(buf2, batches[2:])
+    buf2.publish()
+    assert buf2.snapshot.n_edges == buf.snapshot.n_edges
+    assert layout_counters_equal(buf2.snapshot.sketch, buf.snapshot.sketch)
+
+
+def test_donated_buffer_capture_publish_delta_stays_readable():
+    """capture_publish_delta forces the never-donating publish kernel, so
+    the stashed delta survives the publish that folded it in."""
+    sk = countmin.CountMin.create(bytes_budget=4096, depth=3, seed=5)
+    buf = SnapshotBuffer(sk, countmin, tenant_id="t", donate=True)
+    buf.capture_publish_delta = True
+    for batches in (_batches(6, k=2), _batches(7, k=2)):
+        _feed(buf, batches)
+        buf.publish()
+        total = sum(int(np.asarray(x).sum())
+                    for x in jax.tree_util.tree_leaves(
+                        buf.last_publish_delta)
+                    if np.issubdtype(np.asarray(x).dtype, np.integer))
+        assert isinstance(total, int)  # readable, not deleted
+
+
+# ------------------------------------------------- runtime fast-path A/B
+def _run_runtime(dataset="email-EuAll", *, dedup, backend="thread",
+                 max_batches=12, **rt_kw):
+    reg = _registry(scale=0.05)
+    t = reg.open(dataset, "kmatrix", 64, seed=7)
+    rt = Runtime(publish_policy="drain:0", reservoir_k=0,
+                 coalesce_batches=4, coalesce_target=4096,
+                 dedup=dedup, backend=backend, **rt_kw)
+    rt.attach(t, max_batches=max_batches)
+    rt.start(pumps=False)
+    assert rt.wait_ready(300)
+    rt.start_pumps()
+    assert rt.join_pumps(300)
+    rep = rt.stop(drain=True)[t.key.tenant_id]
+    assert rep["unaccounted_edges"] == 0
+    return t.snapshot, rep
+
+
+def test_dedup_runtime_bit_identical_and_counts_compression():
+    """Thread-backend A/B: the dedup arm publishes the same counters and
+    pending totals as the plain coalesced path, and reports its
+    compression through the metrics surface."""
+    base, rep0 = _run_runtime(dedup=False)
+    fast, rep1 = _run_runtime(dedup=True)
+    assert fast.n_edges == base.n_edges
+    assert layout_counters_equal(fast.sketch, base.sketch)
+    assert rep0.get("dedup_ratio") is None
+    assert rep1["dedup_ratio"] >= 1.0
+    assert rep1["dedup_unique_rows"] <= rep1["dedup_raw_rows"]
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("backend", ["process", "socket"])
+def test_remote_backend_dedup_donation_conserves_and_matches(backend):
+    """The dedup flag and the donation env both cross the spawn/dial
+    boundary (child-spec field + spec.env): a remote-backend drain with
+    dedup on stays bit-identical to the in-process plain run."""
+    base, _ = _run_runtime(dedup=False)
+    fast, rep = _run_runtime(dedup=True, backend=backend,
+                             queue_capacity=4, poll_s=0.01)
+    assert fast.n_edges == base.n_edges
+    assert layout_counters_equal(fast.sketch, base.sketch)
+
+
+def test_donation_defaults_and_kill_switch_env(monkeypatch):
+    monkeypatch.delenv("REPRO_DONATE", raising=False)
+    assert donation_enabled()
+    for off in ("0", "false", "OFF"):
+        monkeypatch.setenv("REPRO_DONATE", off)
+        assert not donation_enabled()
+    monkeypatch.setenv("REPRO_DONATE", "1")
+    assert donation_enabled()
+    sk = countmin.CountMin.create(bytes_budget=1024, depth=2, seed=0)
+    assert SnapshotBuffer(sk, countmin, tenant_id="t").donate
+    monkeypatch.setenv("REPRO_DONATE", "0")
+    assert not SnapshotBuffer(sk, countmin, tenant_id="t").donate
